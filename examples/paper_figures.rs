@@ -1,0 +1,7 @@
+//! One-shot driver that regenerates every paper table and figure
+//! (equivalent to `cargo bench`, or `oppo figures`): DESIGN.md §4's
+//! experiment index end to end.  Results print here and land as JSON in
+//! target/paper/.
+fn main() -> anyhow::Result<()> {
+    oppo::cli::run(&["figures".to_string()])
+}

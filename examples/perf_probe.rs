@@ -1,0 +1,56 @@
+//! §Perf probe: quantifies the device-resident hot path (EXPERIMENTS.md).
+//! "Before" = what each chunk would cost if params + KV round-tripped
+//! through the host (the unpatched literal-based execute path);
+//! "after" = the actual buffer-resident dispatch.
+use std::sync::Arc;
+use std::time::Instant;
+use oppo::coordinator::engine_ops::Ops;
+use oppo::runtime::{Engine, ParamSet};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::load("artifacts")?);
+    let m = engine.manifest().shape.clone();
+    let (g, s) = (m.lanes, m.s_max);
+
+    // BEFORE-proxy: re-uploading params + KV each chunk call
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        let _p = ParamSet::load(&engine, "actor")?; // params from host
+        for _ in 0..8 {
+            let _kv = engine.zeros_f32(&m.kv_shape(g))?; // KV from host
+        }
+    }
+    let upload_cost = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // AFTER: actual chunk dispatch with everything device-resident
+    let mut ops = Ops::new(engine.clone(), 0)?;
+    let mut tokens = vec![0i32; g * s];
+    for lane in 0..g { tokens[lane*s] = 1; tokens[lane*s+1] = 5; }
+    let mut state = ops.fresh_actor_state(&tokens)?;
+    ops.actor_prefill(&mut state, &tokens, &vec![2; g], &vec![1; g])?;
+    let pos = vec![2i32; g];
+    let live = vec![1i32; g];
+    let c = m.chunk_sizes[1];
+    let _ = ops.generate_chunk(&mut state, c, &pos, &live)?; // warm
+    let t0 = Instant::now();
+    let reps = 10;
+    for _ in 0..reps { let _ = ops.generate_chunk(&mut state, c, &pos, &live)?; }
+    let chunk_cost = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // L1 flavour comparison: gae (fused jnp) vs gae_pallas (interpret kernel)
+    let b = m.ppo_batch;
+    let rb = engine.upload_f32(&vec![0.1; b*s], &[b, s])?;
+    let vb = engine.upload_f32(&vec![0.0; b*s], &[b, s])?;
+    let mb = engine.upload_f32(&vec![1.0; b*s], &[b, s])?;
+    for entry in ["gae", "gae_pallas"] {
+        let _ = engine.execute(entry, &[&rb, &vb, &mb])?;
+        let t0 = Instant::now();
+        let reps = 30;
+        for _ in 0..reps { let _ = engine.execute(entry, &[&rb, &vb, &mb])?; }
+        println!("{entry}: {:.3} ms/call", 1e3 * t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    println!("host-roundtrip params+KV per chunk (before-proxy): {:.1} ms", 1e3*upload_cost);
+    println!("device-resident generate_chunk c={c} (after): {:.1} ms", 1e3*chunk_cost);
+    Ok(())
+}

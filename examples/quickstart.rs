@@ -1,0 +1,15 @@
+//! Quickstart: a short OPPO training run over real AOT-compiled compute.
+use oppo::config::TrainConfig;
+use oppo::coordinator::OppoScheduler;
+
+fn main() -> anyhow::Result<()> {
+    oppo::util::logging::init();
+    let cfg = TrainConfig { steps: 3, log_every: 1, ..Default::default() };
+    let sched = OppoScheduler::new(cfg)?;
+    let log = sched.run()?;
+    println!("ran {} steps, final score {:.3}, total {:.1}s",
+        log.records.len(),
+        log.records.last().unwrap().mean_score,
+        log.total_wall_s());
+    Ok(())
+}

@@ -1,0 +1,34 @@
+use oppo::sim::*;
+use oppo::sim::pipeline::{simulate, steady_state_latency, Pipeline, SimConfig};
+fn main() {
+    let su = presets::stackex_7b_h200();
+    // manual stage probe
+    let cm = costmodel::CostModel { model: su.model, gpu: su.cluster.gpu, tp: 1.0,
+        software_efficiency: su.gen_eff, iter_overhead_s: su.iter_overhead_s };
+    let score_cm = costmodel::CostModel { model: su.model, gpu: su.cluster.gpu, tp: 1.0,
+        software_efficiency: su.score_eff, iter_overhead_s: 0.0 };
+    let train_cm = costmodel::CostModel { model: su.model, gpu: su.cluster.gpu, tp: 1.0,
+        software_efficiency: su.train_eff, iter_overhead_s: 0.0 };
+    let mut rng = oppo::util::rng::Rng::new(1);
+    let lens = su.lengths.sample_batch(&mut rng, 0.3, su.batch);
+    let maxlen = lens.iter().cloned().fold(0.0, f64::max);
+    let meanlen: f64 = lens.iter().sum::<f64>() / lens.len() as f64;
+    let t_iter = cm.decode_iter(su.batch as f64 / 7.0, 220.0 + meanlen);
+    let total_tokens: f64 = lens.iter().map(|l| l + 220.0).sum();
+    println!("median len {:.0} mean {meanlen:.0} max {maxlen:.0}", oppo::util::stats::percentile(&lens, 50.0));
+    println!("t_iter {:.4}s  gen_to_mean {:.1}s gen_to_max {:.1}s", t_iter, meanlen*t_iter, maxlen*t_iter);
+    println!("reward prefill {:.1}s ref+value {:.1}s train {:.1}s const {:.1}s",
+        score_cm.prefill(total_tokens, meanlen),
+        2.0*train_cm.prefill(total_tokens, meanlen)/7.0,
+        train_cm.train_step(total_tokens, 7.0, 0.0), su.step_const_s);
+    for (name, p) in [("trl", Pipeline::TrlSequential), ("oppo", Pipeline::oppo()),
+                      ("no-intra", Pipeline::Oppo{intra:false,inter:true,fixed_delta:None}),
+                      ("no-inter", Pipeline::Oppo{intra:true,inter:false,fixed_delta:None}),
+                      ("verl-dp", Pipeline::VerlDp), ("verl-dp-sp", Pipeline::VerlDpSp),
+                      ("verl-async-sp", Pipeline::VerlAsyncSp), ("areal", Pipeline::AReal)] {
+        let cfg = SimConfig::new(su.clone(), 60, 1);
+        let log = simulate(p, &cfg);
+        println!("{name:14} steady latency {:.1}s util {:.2}", steady_state_latency(&log),
+                 pipeline::steady_state_util(&log));
+    }
+}

@@ -1,0 +1,14 @@
+use oppo::sim::pipeline::{simulate, Pipeline, SimConfig};
+use oppo::sim::presets;
+fn main() {
+    let cfg = SimConfig::new(presets::gsm8k_7b_gh200(), 80, 11);
+    for p in [Pipeline::TrlSequential, Pipeline::oppo()] {
+        let log = simulate(p, &cfg);
+        let tail = &log.records[40..];
+        let u: f64 = tail.iter().map(|r| r.util).sum::<f64>() / tail.len() as f64;
+        let w: f64 = tail.iter().map(|r| r.wall_s).sum::<f64>() / tail.len() as f64;
+        let d: f64 = tail.iter().map(|r| r.delta as f64).sum::<f64>() / tail.len() as f64;
+        let g: f64 = tail.iter().map(|r| r.gen_tokens as f64).sum::<f64>() / tail.len() as f64;
+        println!("{:8} util {u:.3} wall {w:.1} delta {d:.1} gen_tokens {g:.0}", p.name());
+    }
+}

@@ -1,0 +1,292 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* + dump params.
+
+Run once at build time (``make artifacts``); the Rust coordinator then loads
+``artifacts/*.hlo.txt`` through PJRT and Python never runs again.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``--out-dir``, default ``../artifacts``):
+
+* ``<entry>.hlo.txt``          — one per entry point × static-shape variant
+* ``params_actor.bin``         — initial actor params (raw little-endian f32)
+* ``params_reward.bin``        — independently-initialized reward model
+* ``params_ref.bin``           — frozen copy of the initial actor (reference)
+* ``manifest.json``            — model config, param table (name/shape/offset),
+                                 entry-point I/O signatures, tokenizer
+* ``aot_fingerprint.txt``      — hash of the compile inputs (Make no-op check)
+
+Chunk-size variants: HLO shapes are static, so OPPO's dynamic chunk-size
+controller (§3.1) selects among pre-compiled executables
+``actor_generate_chunk_c{C}`` / ``reward_prefill_chunk_c{C}``,
+C ∈ ``cfg.chunk_sizes`` — "one compiled executable per model variant".
+
+Kernel flavours: the default artifact set lowers with ``kernel_impl="jnp"``
+(XLA-fused oracles — the throughput flavour; see EXPERIMENTS.md §Perf).  The
+Pallas L1 kernels additionally ship as ``*_pallas`` artifacts for the middle
+chunk size + ``gae_pallas``; Rust integration tests execute both flavours
+and assert they agree, so the TPU-schedule kernels are genuinely on the
+load-and-execute path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# --------------------------------------------------------------------------
+# Tokenizer (mirrored by rust/src/data/tokenizer.rs through the manifest)
+# --------------------------------------------------------------------------
+
+SPECIALS = ["<pad>", "<bos>", "<eos>"]
+CHARS = " 0123456789abcdefghijklmnopqrstuvwxyz+-*/=?.,:;#|()[]<>"
+
+
+def tokenizer_table(vocab: int) -> list[str]:
+    table = SPECIALS + list(CHARS)
+    assert len(table) <= vocab, f"vocab {vocab} too small for {len(table)} tokens"
+    table += [f"<unused{i}>" for i in range(vocab - len(table))]
+    return table
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg: M.ModelConfig) -> list[jax.ShapeDtypeStruct]:
+    shapes = M.param_shapes(cfg)
+    return [_sds(shapes[n]) for n in M.param_names(cfg)]
+
+
+def kv_specs(cfg: M.ModelConfig, batch: int) -> list[jax.ShapeDtypeStruct]:
+    kv_shape = (batch, cfg.n_heads, cfg.s_max, cfg.head_dim)
+    return [_sds(kv_shape) for _ in range(2 * cfg.n_layers)]
+
+
+def entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
+    """name -> (builder fn, [input ShapeDtypeStructs])."""
+    g, b, s = cfg.lanes, cfg.ppo_batch, cfg.s_max
+    p = param_specs(cfg)
+    i32, f32, u32 = jnp.int32, jnp.float32, jnp.uint32
+    sigs: dict[str, tuple] = {}
+
+    sigs["actor_prefill"] = (
+        M.make_actor_prefill(cfg),
+        [*p, _sds((g, s), i32), _sds((g,), i32), _sds((g,), i32), *kv_specs(cfg, g)],
+    )
+    for c in cfg.chunk_sizes:
+        sigs[f"actor_generate_chunk_c{c}"] = (
+            M.make_actor_generate_chunk(cfg, c),
+            [*p, _sds((g, s), i32), _sds((g,), i32), _sds((g,), i32),
+             *kv_specs(cfg, g), _sds((2,), u32)],
+        )
+        sigs[f"reward_prefill_chunk_c{c}"] = (
+            M.make_reward_prefill_chunk(cfg, c),
+            [*p, _sds((g, c), i32), _sds((g,), i32), _sds((g,), i32), *kv_specs(cfg, g)],
+        )
+    sigs["reward_score_full"] = (
+        M.make_reward_score_full(cfg),
+        [*p, _sds((g, s), i32), _sds((g,), i32)],
+    )
+    sigs["ref_logprobs"] = (
+        M.make_ref_logprobs(cfg),
+        [*p, _sds((b, s), i32)],
+    )
+    sigs["actor_forward_full"] = (
+        M.make_actor_forward_full(cfg),
+        [*p, _sds((b, s), i32)],
+    )
+    sigs["gae"] = (
+        M.make_gae(cfg),
+        [_sds((b, s), f32), _sds((b, s), f32), _sds((b, s), f32)],
+    )
+    sigs["ppo_update"] = (
+        M.make_ppo_update(cfg),
+        [*p, *p, *p, _sds((b, s), i32), _sds((b, s), f32), _sds((b, s), f32),
+         _sds((b, s), f32), _sds((b, s), f32), _sds((), i32)],
+    )
+    sigs["dpo_update"] = (
+        M.make_dpo_update(cfg),
+        [*p, *p, *p, _sds((b, s), i32), _sds((b, s), i32), _sds((b, s), f32),
+         _sds((b, s), f32), _sds((b,), f32), _sds((b,), f32), _sds((), i32)],
+    )
+    return sigs
+
+
+def pallas_entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
+    """The Pallas-flavoured subset shipped alongside the default artifacts."""
+    pcfg = dataclasses.replace(cfg, kernel_impl="pallas")
+    mid_c = pcfg.chunk_sizes[len(pcfg.chunk_sizes) // 2]
+    g, b, s = pcfg.lanes, pcfg.ppo_batch, pcfg.s_max
+    p = param_specs(pcfg)
+    i32, f32 = jnp.int32, jnp.float32
+    return {
+        f"reward_prefill_chunk_pallas_c{mid_c}": (
+            M.make_reward_prefill_chunk(pcfg, mid_c),
+            [*p, _sds((g, mid_c), i32), _sds((g,), i32), _sds((g,), i32),
+             *kv_specs(pcfg, g)],
+        ),
+        "gae_pallas": (
+            M.make_gae(pcfg),
+            [_sds((b, s), f32), _sds((b, s), f32), _sds((b, s), f32)],
+        ),
+    }
+
+
+# --------------------------------------------------------------------------
+# Param serialization
+# --------------------------------------------------------------------------
+
+
+def dump_params(cfg: M.ModelConfig, params: dict, path: str) -> list[dict]:
+    """Write raw little-endian f32 in canonical order; return the param table."""
+    table, offset = [], 0
+    with open(path, "wb") as f:
+        for name in M.param_names(cfg):
+            arr = np.asarray(params[name], dtype="<f4")
+            f.write(arr.tobytes())
+            table.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "bytes": arr.nbytes,
+            })
+            offset += arr.nbytes
+    return table
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+PRESETS = {
+    # default: the config used by examples/tests — small enough for CPU PJRT,
+    # large enough to have real stage structure (4 layers, 160-token window).
+    "default": M.ModelConfig(),
+    # smoke: minimal shapes for fast CI-style checks of the full AOT path.
+    "smoke": M.ModelConfig(
+        d_model=64, n_heads=2, n_layers=2, d_ff=128, s_max=64, prompt_max=16,
+        lanes=6, ppo_batch=4, chunk_sizes=(4, 8),
+    ),
+}
+
+
+def fingerprint(paths: list[str]) -> str:
+    h = hashlib.sha256()
+    for p in sorted(paths):
+        with open(p, "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="default", choices=sorted(PRESETS))
+    ap.add_argument("--kernels", default="jnp", choices=["jnp", "pallas"],
+                    help="kernel flavour for the default artifact set")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-pallas-extras", action="store_true",
+                    help="skip the *_pallas validation artifacts")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(PRESETS[args.preset], kernel_impl=args.kernels)
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    # ---- params ----
+    key = jax.random.PRNGKey(args.seed)
+    k_actor, k_reward = jax.random.split(key)
+    actor = M.init_params(cfg, k_actor)
+    reward = M.init_params(cfg, k_reward)
+    actor_table = dump_params(cfg, actor, os.path.join(out, "params_actor.bin"))
+    reward_table = dump_params(cfg, reward, os.path.join(out, "params_reward.bin"))
+    ref_table = dump_params(cfg, actor, os.path.join(out, "params_ref.bin"))
+    assert actor_table == ref_table
+
+    # ---- entry points ----
+    sigs = entry_signatures(cfg)
+    if not args.skip_pallas_extras:
+        sigs.update(pallas_entry_signatures(cfg))
+
+    entries = {}
+    for name, (fn, in_specs) in sigs.items():
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *in_specs)
+        entries[name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+            ],
+            "outputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in jax.tree_util.tree_leaves(out_specs)
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars, "
+              f"{len(in_specs)} inputs, {len(entries[name]['outputs'])} outputs")
+
+    # ---- manifest ----
+    manifest = {
+        "format_version": 1,
+        "paper": "OPPO: Accelerating PPO-based RLHF via Pipeline Overlap",
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in dataclasses.asdict(cfg).items()},
+        "n_params": len(M.param_names(cfg)),
+        "param_table": actor_table,
+        "params_files": {
+            "actor": "params_actor.bin",
+            "reward": "params_reward.bin",
+            "ref": "params_ref.bin",
+        },
+        "entries": entries,
+        "tokenizer": {
+            "table": tokenizer_table(cfg.vocab),
+            "pad": M.PAD, "bos": M.BOS, "eos": M.EOS,
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    srcs = [os.path.join(here, f) for f in
+            ["aot.py", "model.py", "kernels/__init__.py", "kernels/ref.py",
+             "kernels/attention.py", "kernels/decode.py", "kernels/gae.py"]]
+    with open(os.path.join(out, "aot_fingerprint.txt"), "w") as f:
+        f.write(fingerprint(srcs) + f"\npreset={args.preset} kernels={args.kernels}\n")
+
+    print(f"wrote {len(entries)} HLO modules + manifest to {out}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""L1 — Pallas kernels for OPPO's compute hot-spots, plus pure-jnp oracles.
+
+``select(impl)`` returns a namespace exposing the three kernel entry points
+(``chunked_prefill_attention``, ``decode_attention``, ``gae``) backed either
+by the Pallas kernels (``"pallas"``, interpret mode — the TPU-schedule
+implementation) or by the jnp oracles (``"jnp"`` — the XLA-fused flavour the
+long-running AOT artifacts default to; see DESIGN.md §7 and EXPERIMENTS.md
+§Perf for the measured tradeoff).
+"""
+
+from types import SimpleNamespace
+
+from . import attention, decode, gae, ref
+
+
+def select(impl: str) -> SimpleNamespace:
+    if impl == "pallas":
+        return SimpleNamespace(
+            chunked_prefill_attention=attention.chunked_prefill_attention,
+            decode_attention=decode.decode_attention,
+            gae=gae.gae,
+        )
+    if impl == "jnp":
+        return SimpleNamespace(
+            chunked_prefill_attention=ref.chunked_prefill_attention,
+            decode_attention=ref.decode_attention,
+            gae=ref.gae,
+        )
+    raise ValueError(f"unknown kernel impl {impl!r} (want 'pallas' or 'jnp')")

@@ -1,0 +1,140 @@
+"""Pallas chunked-prefill attention — the kernel behind intra-step overlap.
+
+OPPO (§3.1) streams actor output in chunks to the reward model so scoring
+prefill proceeds *incrementally* while the actor keeps decoding.  The compute
+hot-spot of that design is "attend a chunk of C new queries against the
+KV cache accumulated so far".  On the authors' GPUs this is chunked prefill
+against paged KV; here it is restated for the TPU memory hierarchy
+(DESIGN.md §7):
+
+* the chunk's Q tile (``C×D``) is small and lives in VMEM for the whole
+  kernel invocation;
+* the KV history streams HBM→VMEM in ``BLOCK_K``-sized blocks expressed via
+  the grid / ``pl.load`` schedule (the analogue of the paper's threadblock
+  tiling);
+* a flash-attention style running softmax (m/l carries) bounds the working
+  set to ``C × BLOCK_K`` regardless of history length, so VMEM stays flat as
+  the sequence grows — precisely the property that keeps incremental prefill
+  cheap for late chunks;
+* the two matmuls per block (``q @ k.T`` and ``p @ v``) are the MXU-shaped
+  work; the causal masking is cheap VPU work.
+* blocks strictly beyond the chunk's last absolute position are *skipped*
+  (dynamic ``fori_loop`` bound), so early chunks do not pay for the full
+  ``S_max`` cache scan.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Interpret mode runs the
+identical schedule with numpy semantics, so correctness transfers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default KV block: multiples of the 128-lane TPU tile on the sequence dim.
+DEFAULT_BLOCK_K = 32
+
+
+def _prefill_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch*head) program: C queries vs the blocked KV history."""
+    c, d = q_ref.shape[1], q_ref.shape[2]
+    start = start_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale  # [C, D] — VMEM-resident Q tile
+
+    m0 = jnp.full((c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((c,), jnp.float32)
+    acc0 = jnp.zeros((c, d), jnp.float32)
+
+    # Only blocks that contain positions <= start + C - 1 participate:
+    # the flash loop's dynamic trip count — skip the untouched cache tail.
+    last_pos = start + c - 1
+    n_blocks = (last_pos // block_k) + 1
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        scores = q @ k.astype(jnp.float32).T  # [C, BLOCK_K] — MXU matmul 1
+        jpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (c, block_k), 1)
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, (c, block_k), 0)
+        scores = jnp.where(jpos <= qpos, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=1))
+        alpha = jnp.exp(m - m_new)  # m starts at NEG_INF => alpha=0 first time
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(jpos <= qpos, p, 0.0)
+        l_new = alpha * l + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)  # MXU matmul 2
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def chunked_prefill_attention(
+    q: jax.Array,  # [B, H, C, D]
+    k_cache: jax.Array,  # [B, H, S, D]
+    v_cache: jax.Array,  # [B, H, S, D]
+    start: jax.Array,  # [B] int32
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Pallas chunked-prefill attention; semantics match ``ref.chunked_prefill_attention``."""
+    b, h, c, d = q.shape
+    s = k_cache.shape[2]
+    if s % block_k != 0:
+        raise ValueError(f"cache length {s} must be a multiple of block_k={block_k}")
+    scale = 1.0 / (d**0.5)
+
+    # Collapse (B, H) into the grid; each program owns one head's chunk.
+    qf = q.reshape(b * h, c, d)
+    kf = k_cache.reshape(b * h, s, d)
+    vf = v_cache.reshape(b * h, s, d)
+    startf = jnp.repeat(start.astype(jnp.int32), h)  # [B*H]
+
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, block_k=block_k, scale=scale),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),  # start (scalar per program)
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),  # q tile
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),  # k history (blocked via pl.load)
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),  # v history
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, c, d), q.dtype),
+        interpret=True,
+    )(startf, qf, kf, vf)
+    return out.reshape(b, h, c, d)
+
+
+def vmem_footprint_bytes(c: int, d: int, s: int, block_k: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one program (DESIGN.md §Perf).
+
+    Q tile + one K block + one V block + softmax carries + accumulator.
+    Independent of ``s`` — that is the point of the flash schedule.
+    """
+    q_tile = c * d * dtype_bytes
+    kv_block = 2 * block_k * d * dtype_bytes
+    carries = (2 * c + c * block_k) * 4
+    acc = c * d * 4
+    del s
+    return q_tile + kv_block + carries + acc
+
+
+def mxu_utilization_estimate(c: int, d: int, block_k: int) -> float:
+    """Fraction of MXU-shaped work per block, vs the 128×128 systolic tile.
+
+    Both matmuls are (C×D)·(D×BLOCK_K) and (C×BLOCK_K)·(BLOCK_K×D); the MXU
+    processes 128×128 tiles, so efficiency is the product of the dimension
+    fill ratios (clamped at 1).  Used for the §Perf block-shape sweep.
+    """
+    fill = lambda n: min(n / 128.0, 1.0)
+    mm1 = fill(c) * fill(d) * fill(block_k)
+    mm2 = fill(c) * fill(block_k) * fill(d)
+    return 0.5 * (mm1 + mm2)

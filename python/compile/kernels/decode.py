@@ -1,0 +1,89 @@
+"""Pallas single-token decode attention — the actor's generation hot loop.
+
+The actor stage of PPO-based RLHF is autoregressive decoding: one query
+token per sequence per step, attending to its whole KV history.  The paper's
+Figure 2a shows exactly why this stage underutilizes compute (memory-bound:
+each step streams the entire cache once for O(1) queries) — the observation
+OPPO exploits by scavenging the leftover compute for reward prefill.
+
+Kernel schedule (TPU framing, DESIGN.md §7): the single query row is VMEM
+resident; K/V stream HBM→VMEM in ``BLOCK_K`` blocks; running-softmax carries
+keep the working set at ``1 × BLOCK_K``; blocks beyond ``pos`` are skipped
+with a dynamic trip count, so a decode step at position ``p`` reads
+``ceil((p+1)/BLOCK_K)`` blocks rather than the whole ``S_max`` cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 32
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    d = q_ref.shape[1]
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale  # [D]
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    n_blocks = (pos // block_k) + 1  # skip blocks strictly beyond pos
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        scores = k.astype(jnp.float32) @ q  # [BLOCK_K]
+        jpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        scores = jnp.where(jpos <= pos, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max())
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(jpos <= pos, jnp.exp(scores - m_new), 0.0)
+        l_new = alpha * l + p.sum()
+        acc_new = acc * alpha + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(
+    q: jax.Array,  # [B, H, D]
+    k_cache: jax.Array,  # [B, H, S, D]
+    v_cache: jax.Array,  # [B, H, S, D]
+    pos: jax.Array,  # [B] int32 — absolute position of the query token
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:  # [B, H, D]
+    """Pallas decode attention; semantics match ``ref.decode_attention``."""
+    b, h, d = q.shape
+    s = k_cache.shape[2]
+    if s % block_k != 0:
+        raise ValueError(f"cache length {s} must be a multiple of block_k={block_k}")
+    scale = 1.0 / (d**0.5)
+
+    qf = q.reshape(b * h, d)
+    kf = k_cache.reshape(b * h, s, d)
+    vf = v_cache.reshape(b * h, s, d)
+    posf = jnp.repeat(pos.astype(jnp.int32), h)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k, scale=scale),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        interpret=True,
+    )(posf, qf, kf, vf)
+    return out.reshape(b, h, d)

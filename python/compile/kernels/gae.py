@@ -1,0 +1,65 @@
+"""Pallas GAE kernel — Eq. (1) of the paper as a reverse scan.
+
+Advantage estimation is a strictly sequential reverse recurrence along the
+time axis, but embarrassingly parallel across the batch.  The kernel maps
+one program per sequence (grid over B); the whole row (T ≤ a few hundred)
+fits in VMEM, and the recurrence runs as an on-chip ``fori_loop`` — no HBM
+traffic beyond one read and one write per element.  ``ref.gae`` is the
+oracle; the AOT pipeline exports this kernel as the ``gae`` executable used
+by the Rust coordinator after composing the per-token reward vector
+(score-at-end + per-token KL penalty).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gae_kernel(r_ref, v_ref, m_ref, adv_ref, ret_ref, *, gamma: float, lam: float):
+    t = r_ref.shape[1]
+    r = r_ref[0]
+    v = v_ref[0]
+    m = m_ref[0]
+
+    def body(i, carry):
+        # walk t-1 .. 0; carry = A_{t+1}
+        idx = t - 1 - i
+        nm = jnp.where(idx + 1 < t, m[jnp.minimum(idx + 1, t - 1)], 0.0)
+        nv = jnp.where(idx + 1 < t, v[jnp.minimum(idx + 1, t - 1)], 0.0)
+        delta = r[idx] + gamma * nv * nm - v[idx]
+        adv = delta + gamma * lam * nm * carry
+        pl.store(adv_ref, (0, pl.dslice(idx, 1)), (adv * m[idx])[None])
+        pl.store(ret_ref, (0, pl.dslice(idx, 1)), ((adv + v[idx]) * m[idx])[None])
+        return adv
+
+    jax.lax.fori_loop(0, t, body, jnp.float32(0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lam"))
+def gae(
+    rewards: jax.Array,  # [B, T] f32
+    values: jax.Array,  # [B, T] f32
+    mask: jax.Array,  # [B, T] f32 (0/1)
+    gamma: float = 1.0,
+    lam: float = 0.95,
+) -> tuple[jax.Array, jax.Array]:
+    """Pallas GAE; semantics match ``ref.gae``."""
+    b, t = rewards.shape
+    out_shape = (
+        jax.ShapeDtypeStruct((b, t), jnp.float32),
+        jax.ShapeDtypeStruct((b, t), jnp.float32),
+    )
+    spec = pl.BlockSpec((1, t), lambda i: (i, 0))
+    adv, ret = pl.pallas_call(
+        functools.partial(_gae_kernel, gamma=gamma, lam=lam),
+        grid=(b,),
+        in_specs=[spec, spec, spec],
+        out_specs=(spec, spec),
+        out_shape=out_shape,
+        interpret=True,
+    )(rewards.astype(jnp.float32), values.astype(jnp.float32), mask.astype(jnp.float32))
+    return adv, ret

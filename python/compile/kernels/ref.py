@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact reference implementation
+here, written with plain ``jax.numpy`` ops only.  ``python/tests`` sweeps
+shapes/dtypes with hypothesis and asserts ``allclose`` between kernel and
+oracle; the AOT pipeline can also lower the model against these references
+(``kernel_impl="jnp"``) which is the high-throughput flavour used by the
+long end-to-end runs (interpret-mode Pallas trades speed for fidelity to the
+TPU schedule — see DESIGN.md §7).
+
+Conventions shared with the kernels:
+
+* Attention operates on a *cache-resident* K/V layout ``[B, H, S, D]`` where
+  ``S`` is the maximum sequence length.  Chunk queries ``q`` have shape
+  ``[B, H, C, D]`` and correspond to absolute positions
+  ``start[b] + i, i < C``.  Query ``i`` attends causally to cache positions
+  ``j <= start[b] + i``.  The chunk's own K/V are assumed to have already
+  been scattered into the cache by the caller (the L2 model does this),
+  which is what makes the prefill *incremental* — the enabler of OPPO's
+  intra-step overlap (§3.1 of the paper).
+* GAE follows Eq. (1) of the paper with an episodic bootstrap of zero and a
+  per-position validity mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps masked softmax NaN-free
+
+
+def chunked_prefill_attention(
+    q: jax.Array,  # [B, H, C, D] queries for absolute positions start+i
+    k_cache: jax.Array,  # [B, H, S, D]
+    v_cache: jax.Array,  # [B, H, S, D]
+    start: jax.Array,  # [B] int32 absolute position of the chunk's first query
+) -> jax.Array:  # [B, H, C, D]
+    """Causal attention of a chunk of queries against the full KV cache."""
+    b, h, c, d = q.shape
+    s = k_cache.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("bhcd,bhsd->bhcs", q, k_cache) * scale
+    qpos = start[:, None, None, None] + jnp.arange(c)[None, None, :, None]
+    jpos = jnp.arange(s)[None, None, None, :]
+    mask = jpos <= qpos
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhcs,bhsd->bhcd", probs, v_cache)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, D] single-position queries
+    k_cache: jax.Array,  # [B, H, S, D]
+    v_cache: jax.Array,  # [B, H, S, D]
+    pos: jax.Array,  # [B] int32 absolute position of the query token
+) -> jax.Array:  # [B, H, D]
+    """Single-token decode attention: query at ``pos`` attends ``j <= pos``."""
+    out = chunked_prefill_attention(q[:, :, None, :], k_cache, v_cache, pos)
+    return out[:, :, 0, :]
+
+
+def gae(
+    rewards: jax.Array,  # [B, T]
+    values: jax.Array,  # [B, T]
+    mask: jax.Array,  # [B, T] 1.0 for valid transition positions
+    gamma: float = 1.0,
+    lam: float = 0.95,
+) -> tuple[jax.Array, jax.Array]:
+    """Generalized advantage estimation, Eq. (1) of the paper.
+
+    ``delta_t = r_t + gamma * V(s_{t+1}) * m_{t+1} - V(s_t)`` with
+    ``V(s_T) = 0`` (episodic), and the reverse accumulation
+    ``A_t = delta_t + gamma * lam * m_{t+1} * A_{t+1}``.
+    Returns ``(advantages, returns)`` where ``returns = A + V`` (the value
+    target), both zeroed outside the mask.
+    """
+    b, t = rewards.shape
+    next_values = jnp.concatenate([values[:, 1:], jnp.zeros((b, 1), values.dtype)], axis=1)
+    next_mask = jnp.concatenate([mask[:, 1:], jnp.zeros((b, 1), mask.dtype)], axis=1)
+    deltas = rewards + gamma * next_values * next_mask - values
+
+    def step(carry, xs):
+        delta, nm = xs
+        adv = delta + gamma * lam * nm * carry
+        return adv, adv
+
+    _, advs_rev = jax.lax.scan(
+        step,
+        jnp.zeros((b,), rewards.dtype),
+        (deltas.T[::-1], next_mask.T[::-1]),
+    )
+    advs = advs_rev[::-1].T * mask
+    returns = (advs + values) * mask
+    return advs, returns

@@ -1,0 +1,592 @@
+"""L2 — the JAX model: transformer actor (policy + value head), reward model,
+reference model, and the PPO/DPO training math (Eqs. 1–2 of the paper).
+
+Everything here is *build-time only*.  ``aot.py`` lowers the entry points
+defined at the bottom of this file to HLO text; the Rust coordinator
+executes them through PJRT and Python never appears on the training path.
+
+Model: a GPT-style causal LM over a small byte-ish vocabulary with learned
+positional embeddings and a scalar head.  The actor uses the scalar head as
+the PPO value function (TRL-style "model with value head"); the reward model
+is an independently-initialized copy whose scalar head emits the score.  The
+reference model is a frozen copy of the initial actor.
+
+Parameters travel as a flat, deterministically-ordered list of arrays (see
+``param_names``) so the Rust side can treat them as an opaque ``Vec<Buffer>``
+and thread them through ``ppo_update`` without understanding the pytree.
+
+All attention goes through ``kernels.select(impl)`` so the Pallas kernels
+(L1) lower into the same HLO as the surrounding model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model/shape configuration baked into the AOT artifacts."""
+
+    vocab: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    s_max: int = 160  # maximum total sequence length (prompt + response)
+    prompt_max: int = 24  # maximum prompt length
+    lanes: int = 12  # generation lanes G = B + delta_max
+    ppo_batch: int = 8  # PPO update batch B
+    chunk_sizes: tuple[int, ...] = (8, 16, 32)  # streaming chunk variants
+    # PPO hyper-parameters (baked at lowering; step index stays dynamic).
+    gamma: float = 1.0
+    lam: float = 0.95
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    lr: float = 3e-4
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    temperature: float = 1.0
+    dpo_beta: float = 0.1
+    kernel_impl: str = "jnp"  # "jnp" (fused oracle) or "pallas" (L1 kernels)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def kernels(self):
+        return kernels.select(self.kernel_impl)
+
+
+# Special token ids — mirrored in rust/src/data/tokenizer.rs via the manifest.
+PAD, BOS, EOS = 0, 1, 2
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """The canonical flat parameter ordering (manifest + Rust rely on it)."""
+    names = ["embed", "pos_embed"]
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}_"
+        names += [
+            p + "ln1_s", p + "ln1_b",
+            p + "wq", p + "wk", p + "wv", p + "wo",
+            p + "ln2_s", p + "ln2_b",
+            p + "w1", p + "b1", p + "w2", p + "b2",
+        ]
+    names += ["lnf_s", "lnf_b", "head_w", "head_b"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    shapes: dict[str, tuple[int, ...]] = {
+        "embed": (cfg.vocab, d),
+        "pos_embed": (cfg.s_max, d),
+        "lnf_s": (d,),
+        "lnf_b": (d,),
+        "head_w": (d,),  # scalar head: value (actor) / score (reward model)
+        "head_b": (),
+    }
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}_"
+        shapes.update({
+            p + "ln1_s": (d,), p + "ln1_b": (d,),
+            p + "wq": (d, d), p + "wk": (d, d), p + "wv": (d, d), p + "wo": (d, d),
+            p + "ln2_s": (d,), p + "ln2_b": (d,),
+            p + "w1": (d, f), p + "b1": (f,), p + "w2": (f, d), p + "b2": (d,),
+        })
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Small-scale GPT init: scaled-normal matrices, unit LN scales."""
+    shapes = param_shapes(cfg)
+    params: dict[str, jax.Array] = {}
+    for name in param_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith(("_s",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "b1", "b2")) or name == "head_b":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        elif name == "pos_embed":
+            params[name] = 0.01 * jax.random.normal(sub, shape, jnp.float32)
+        elif name == "head_w":
+            params[name] = 0.01 * jax.random.normal(sub, shape, jnp.float32)
+        else:  # weight matrices
+            fan_in = shape[0]
+            std = (2.0 / (fan_in + shape[-1])) ** 0.5
+            # residual-branch scaling keeps deep-net activations tame
+            if name.endswith(("wo", "w2")):
+                std /= (2.0 * cfg.n_layers) ** 0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict[str, jax.Array]) -> list[jax.Array]:
+    return [params[n] for n in param_names(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat: list[jax.Array]) -> dict[str, jax.Array]:
+    names = param_names(cfg)
+    assert len(flat) == len(names), (len(flat), len(names))
+    return dict(zip(names, flat))
+
+
+# --------------------------------------------------------------------------
+# Transformer building blocks
+# --------------------------------------------------------------------------
+
+
+def _ln(x, s, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * s + b
+
+
+def _mlp(p, prefix, x):
+    h = jax.nn.gelu(x @ p[prefix + "w1"] + p[prefix + "b1"])
+    return h @ p[prefix + "w2"] + p[prefix + "b2"]
+
+
+def _split_heads(cfg: ModelConfig, x):  # [..., T, D] -> [..., H, T, hd]
+    *lead, t, _ = x.shape
+    return x.reshape(*lead, t, cfg.n_heads, cfg.head_dim).swapaxes(-2, -3)
+
+
+def _merge_heads(cfg: ModelConfig, x):  # [..., H, T, hd] -> [..., T, D]
+    *lead, _, t, _ = x.shape
+    return x.swapaxes(-2, -3).reshape(*lead, t, cfg.d_model)
+
+
+def forward_full(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    """Teacher-forced forward over the whole buffer.
+
+    Returns ``(logits [B,S,V], scalar [B,S])`` where ``scalar`` is the value
+    estimate (actor) or reward score (reward model) at every position.
+    Dense causal attention — used by training/scoring entry points where all
+    positions are needed anyway, so chunked streaming does not apply.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][None, :s, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}_"
+        h = _ln(x, params[p + "ln1_s"], params[p + "ln1_b"])
+        q = _split_heads(cfg, h @ params[p + "wq"])
+        k = _split_heads(cfg, h @ params[p + "wk"])
+        v = _split_heads(cfg, h @ params[p + "wv"])
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (cfg.head_dim**0.5)
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        x = x + _merge_heads(cfg, jnp.einsum("bhqk,bhkd->bhqd", att, v)) @ params[p + "wo"]
+        h2 = _ln(x, params[p + "ln2_s"], params[p + "ln2_b"])
+        x = x + _mlp(params, p, h2)
+    x = _ln(x, params["lnf_s"], params["lnf_b"])
+    logits = x @ params["embed"].T  # tied LM head
+    scalar = x @ params["head_w"] + params["head_b"]
+    return logits, scalar
+
+
+def token_logprobs(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    """``logp[b, t] = log P(tokens[t] | tokens[:t])`` with ``logp[:,0] = 0``."""
+    logits, scalar = forward_full(cfg, params, tokens)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    b, s = tokens.shape
+    shifted = jnp.take_along_axis(logp_all[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
+    logp = jnp.concatenate([jnp.zeros((b, 1), jnp.float32), shifted], axis=1)
+    return logp, scalar
+
+
+# ---- KV-cache incremental paths (generation / streamed scoring) ----------
+
+
+def _scatter_rows(cache: jax.Array, rows: jax.Array, start: jax.Array):
+    """Write ``rows [B,H,C,hd]`` into ``cache [B,H,S,hd]`` at per-batch ``start``."""
+
+    def one(c, r, s):
+        return jax.lax.dynamic_update_slice(c, r, (0, s, 0))
+
+    return jax.vmap(one)(cache, rows, start)
+
+
+def decode_step(cfg: ModelConfig, params: dict, tok: jax.Array, pos: jax.Array, kv: list):
+    """One autoregressive step: feed token at ``pos``, predict ``pos+1``.
+
+    ``kv`` is a flat list ``[k0, v0, k1, v1, ...]`` of ``[B,H,S,hd]`` caches.
+    Writes the step's K/V at row ``pos`` and attends ``j <= pos``.
+    Returns ``(logits [B,V], scalar [B], new_kv)``.
+    """
+    kn = cfg.kernels()
+    b = tok.shape[0]
+    x = params["embed"][tok] + params["pos_embed"][pos]  # [B, D]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}_"
+        h = _ln(x, params[p + "ln1_s"], params[p + "ln1_b"])
+        q = (h @ params[p + "wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"]).reshape(b, cfg.n_heads, 1, cfg.head_dim)
+        v = (h @ params[p + "wv"]).reshape(b, cfg.n_heads, 1, cfg.head_dim)
+        k_cache = _scatter_rows(kv[2 * i], k, pos)
+        v_cache = _scatter_rows(kv[2 * i + 1], v, pos)
+        att = kn.decode_attention(q, k_cache, v_cache, pos)  # [B,H,hd]
+        x = x + att.reshape(b, cfg.d_model) @ params[p + "wo"]
+        h2 = _ln(x, params[p + "ln2_s"], params[p + "ln2_b"])
+        x = x + _mlp(params, p, h2)
+        new_kv += [k_cache, v_cache]
+    x = _ln(x, params["lnf_s"], params["lnf_b"])
+    logits = x @ params["embed"].T
+    scalar = x @ params["head_w"] + params["head_b"]
+    return logits, scalar, new_kv
+
+
+def prefill_chunk(cfg: ModelConfig, params: dict, chunk: jax.Array, start: jax.Array, kv: list):
+    """Incremental prefill of ``C`` tokens starting at per-batch ``start``.
+
+    This is the intra-step-overlap workhorse (§3.1): the reward worker calls
+    it once per streamed chunk while the actor is still decoding the next
+    chunk.  Scatters the chunk's K/V into the cache, then runs the L1
+    chunked-prefill attention kernel against the full history.
+    Returns ``(scalar [B,C], logits [B,C,V], new_kv)``.
+    """
+    kn = cfg.kernels()
+    b, c = chunk.shape
+    pos_idx = start[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    pos_idx = jnp.minimum(pos_idx, cfg.s_max - 1)
+    x = params["embed"][chunk] + params["pos_embed"][pos_idx]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        p = f"l{i:02d}_"
+        h = _ln(x, params[p + "ln1_s"], params[p + "ln1_b"])
+        q = _split_heads(cfg, h @ params[p + "wq"])  # [B,H,C,hd]
+        k = _split_heads(cfg, h @ params[p + "wk"])
+        v = _split_heads(cfg, h @ params[p + "wv"])
+        k_cache = _scatter_rows(kv[2 * i], k, start)
+        v_cache = _scatter_rows(kv[2 * i + 1], v, start)
+        att = kn.chunked_prefill_attention(q, k_cache, v_cache, start)
+        x = x + _merge_heads(cfg, att) @ params[p + "wo"]
+        h2 = _ln(x, params[p + "ln2_s"], params[p + "ln2_b"])
+        x = x + _mlp(params, p, h2)
+        new_kv += [k_cache, v_cache]
+    x = _ln(x, params["lnf_s"], params["lnf_b"])
+    logits = x @ params["embed"].T
+    scalar = x @ params["head_w"] + params["head_b"]
+    return scalar, logits, new_kv
+
+
+# --------------------------------------------------------------------------
+# Entry points (lowered to HLO by aot.py)
+# --------------------------------------------------------------------------
+#
+# Shape legend: G = cfg.lanes (generation side), B = cfg.ppo_batch (training
+# side), S = cfg.s_max, C = chunk size, L = cfg.n_layers, P = len(params).
+# KV caches are always the flat list [k0, v0, ..., k_{L-1}, v_{L-1}].
+
+
+def make_actor_prefill(cfg: ModelConfig) -> Callable:
+    """(params, tokens [G,S], prompt_len [G], reset [G], kv) -> kv'.
+
+    Recomputes prompt prefill for all lanes over positions [0, prompt_max)
+    and swaps the result into the cache only where ``reset != 0``.  Lanes
+    keep their KV rows otherwise — deferred sequences' partial work is
+    preserved verbatim (§3.2's "partial work is preserved").
+    """
+
+    def fn(*args):
+        flat, rest = args[: len(param_names(cfg))], args[len(param_names(cfg)) :]
+        params = unflatten_params(cfg, list(flat))
+        tokens, prompt_len, reset = rest[0], rest[1], rest[2]
+        kv = list(rest[3:])
+        del prompt_len  # garbage rows beyond the prompt are overwritten by decode
+        g = tokens.shape[0]
+        chunk = tokens[:, : cfg.prompt_max]
+        start = jnp.zeros((g,), jnp.int32)
+        _, _, new_kv = prefill_chunk(cfg, params, chunk, start, kv)
+        sel = (reset != 0)[:, None, None, None]
+        out_kv = [jnp.where(sel, nk, ok) for nk, ok in zip(new_kv, kv)]
+        return tuple(out_kv)
+
+    return fn
+
+
+def make_actor_generate_chunk(cfg: ModelConfig, c: int) -> Callable:
+    """(params, tokens [G,S], pos [G], live [G], kv, key [2]u32)
+    -> (tokens', pos', kv', out_tok [G,C], logp [G,C], value [G,C]).
+
+    Runs ``C`` decode+sample steps.  Dead lanes (live == 0) are fully
+    frozen: their KV rows, token buffer, and position are bit-identical
+    afterwards, which the equivalence tests rely on.
+    """
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        tokens, pos, live = args[np_], args[np_ + 1], args[np_ + 2]
+        kv = list(args[np_ + 3 : np_ + 3 + 2 * cfg.n_layers])
+        key = args[np_ + 3 + 2 * cfg.n_layers]
+        g = tokens.shape[0]
+        lanes = jnp.arange(g)
+
+        def step(carry, i):
+            tokens, pos, kv, key = carry
+            alive = live != 0
+            qpos = jnp.maximum(pos - 1, 0)
+            last_tok = tokens[lanes, qpos]
+            logits, value, new_kv = decode_step(cfg, params, last_tok, qpos, kv)
+            # freeze dead lanes' caches
+            kv = [jnp.where(alive[:, None, None, None], nk, ok) for nk, ok in zip(new_kv, kv)]
+            key, sub = jax.random.split(key)
+            next_tok = jax.random.categorical(sub, logits / cfg.temperature, axis=-1)
+            next_tok = next_tok.astype(jnp.int32)
+            logp_all = jax.nn.log_softmax(logits, axis=-1)
+            logp = logp_all[lanes, next_tok]
+            write_pos = jnp.minimum(pos, cfg.s_max - 1)
+            old_at_pos = tokens[lanes, write_pos]
+            tok_write = jnp.where(alive, next_tok, old_at_pos)
+            tokens = tokens.at[lanes, write_pos].set(tok_write)
+            pos = pos + alive.astype(jnp.int32)
+            out = (
+                jnp.where(alive, next_tok, PAD),
+                jnp.where(alive, logp, 0.0),
+                jnp.where(alive, value, 0.0),
+            )
+            return (tokens, pos, kv, key), out
+
+        (tokens, pos, kv, _), (toks, logps, values) = jax.lax.scan(
+            step, (tokens, pos, kv, key), jnp.arange(c)
+        )
+        # scan stacks along axis 0 -> [C, G]; transpose to [G, C]
+        return (tokens, pos, *kv, toks.T, logps.T, values.T)
+
+    return fn
+
+
+def make_reward_prefill_chunk(cfg: ModelConfig, c: int) -> Callable:
+    """(rparams, chunk [G,C], start [G], n_valid [G], kv) -> (kv', score [G,C]).
+
+    Incremental scoring prefill: one streamed chunk of actor output enters
+    the reward model's KV cache; per-position scores come back so the
+    coordinator can pick the score at each sequence's final token without a
+    second pass.  Positions ``i >= n_valid`` are garbage-in-garbage-out by
+    construction (the next chunk overwrites those cache rows; see module
+    docs in kernels/ref.py).
+    """
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        chunk, start, n_valid = args[np_], args[np_ + 1], args[np_ + 2]
+        kv = list(args[np_ + 3 :])
+        del n_valid
+        score, _, new_kv = prefill_chunk(cfg, params, chunk, start, kv)
+        return (*new_kv, score)
+
+    return fn
+
+
+def make_reward_score_full(cfg: ModelConfig) -> Callable:
+    """(rparams, tokens [G,S], last_idx [G]) -> score [G].
+
+    Monolithic scoring — the baseline path (no streaming) and the oracle the
+    equivalence tests compare streamed scores against.
+    """
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        tokens, last_idx = args[np_], args[np_ + 1]
+        _, scalar = forward_full(cfg, params, tokens)
+        g = tokens.shape[0]
+        return (scalar[jnp.arange(g), last_idx],)
+
+    return fn
+
+
+def make_ref_logprobs(cfg: ModelConfig) -> Callable:
+    """(refparams, tokens [B,S]) -> logp [B,S]  (KL term inputs, §2.1)."""
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        tokens = args[np_]
+        logp, _ = token_logprobs(cfg, params, tokens)
+        return (logp,)
+
+    return fn
+
+
+def make_actor_forward_full(cfg: ModelConfig) -> Callable:
+    """(params, tokens [B,S]) -> (logp [B,S], values [B,S]) — test/debug aid."""
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        tokens = args[np_]
+        logp, scalar = token_logprobs(cfg, params, tokens)
+        return (logp, scalar)
+
+    return fn
+
+
+def make_gae(cfg: ModelConfig) -> Callable:
+    """(rewards [B,S], values [B,S], mask [B,S]) -> (adv, ret) via the L1 kernel."""
+
+    kn = cfg.kernels()
+
+    def fn(rewards, values, mask):
+        adv, ret = kn.gae(rewards, values, mask, gamma=cfg.gamma, lam=cfg.lam)
+        return (adv, ret)
+
+    return fn
+
+
+# ---- PPO / DPO updates ----------------------------------------------------
+
+
+def _adam_update(cfg: ModelConfig, params, m, v, grads, step):
+    """Adam with bias correction; ``step`` is the 1-based update index."""
+    t = step.astype(jnp.float32)
+    b1, b2 = cfg.adam_b1, cfg.adam_b2
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1**t)
+        vhat = vi / (1 - b2**t)
+        new_p.append(p - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.adam_eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def ppo_loss(cfg: ModelConfig, params: dict, batch: dict):
+    """Clipped-surrogate PPO objective (Eq. 2) + value loss + entropy bonus.
+
+    ``batch`` holds ``tokens [B,S]``, ``mask [B,S]`` (1 on response tokens),
+    ``old_logp``, ``adv``, ``ret`` — all aligned so index ``t`` refers to the
+    token at position ``t`` predicted from its prefix.
+    Returns ``(loss, stats[6])`` with stats =
+    (loss, pg_loss, v_loss, entropy, approx_kl, clip_frac).
+    """
+    tokens, mask = batch["tokens"], batch["mask"]
+    old_logp, adv, ret = batch["old_logp"], batch["adv"], batch["ret"]
+    logits, values = forward_full(cfg, params, tokens)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    b, s = tokens.shape
+    shifted = jnp.take_along_axis(logp_all[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
+    logp = jnp.concatenate([jnp.zeros((b, 1), jnp.float32), shifted], axis=1)
+
+    n = jnp.maximum(mask.sum(), 1.0)
+    # advantage normalization over the masked set (standard PPO practice)
+    adv_mean = (adv * mask).sum() / n
+    adv_var = (((adv - adv_mean) * mask) ** 2).sum() / n
+    adv_n = (adv - adv_mean) * jax.lax.rsqrt(adv_var + 1e-8)
+
+    ratio = jnp.exp(logp - old_logp)
+    unclipped = ratio * adv_n
+    clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv_n
+    pg = -(jnp.minimum(unclipped, clipped) * mask).sum() / n
+
+    # value loss against the GAE returns; values at position t-1 predict the
+    # return of the state from which token t was sampled — we keep the
+    # simpler aligned form used by TRL (value at t vs return at t).
+    v_loss = (((values - ret) ** 2) * mask).sum() / n
+
+    probs = jnp.exp(logp_all)
+    ent_all = -(probs * logp_all).sum(-1)  # [B,S] entropy of next-token dist
+    entropy = (ent_all * mask).sum() / n
+
+    approx_kl = ((old_logp - logp) * mask).sum() / n
+    clip_frac = ((jnp.abs(ratio - 1.0) > cfg.clip_eps) * mask).sum() / n
+
+    loss = pg + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
+    stats = jnp.stack([loss, pg, v_loss, entropy, approx_kl, clip_frac])
+    return loss, stats
+
+
+def make_ppo_update(cfg: ModelConfig) -> Callable:
+    """(params, m, v, tokens, mask, old_logp, adv, ret, step)
+    -> (params', m', v', stats [6])."""
+
+    np_ = len(param_names(cfg))
+
+    def fn(*args):
+        flat = list(args[:np_])
+        m = list(args[np_ : 2 * np_])
+        v = list(args[2 * np_ : 3 * np_])
+        tokens, mask, old_logp, adv, ret, step = args[3 * np_ :]
+        batch = {
+            "tokens": tokens, "mask": mask,
+            "old_logp": old_logp, "adv": adv, "ret": ret,
+        }
+
+        def loss_fn(flat_params):
+            return ppo_loss(cfg, unflatten_params(cfg, flat_params), batch)
+
+        grads, stats = jax.grad(loss_fn, has_aux=True)(flat)
+        new_p, new_m, new_v = _adam_update(cfg, flat, m, v, grads, step)
+        return (*new_p, *new_m, *new_v, stats)
+
+    return fn
+
+
+def dpo_loss(cfg: ModelConfig, params: dict, batch: dict):
+    """Direct Preference Optimization loss (§4.3 generalization)."""
+    logp_c, _ = token_logprobs(cfg, params, batch["chosen"])
+    logp_r, _ = token_logprobs(cfg, params, batch["rejected"])
+    sum_c = (logp_c * batch["mask_c"]).sum(-1)
+    sum_r = (logp_r * batch["mask_r"]).sum(-1)
+    logits = cfg.dpo_beta * ((sum_c - batch["ref_c"]) - (sum_r - batch["ref_r"]))
+    loss = -jax.nn.log_sigmoid(logits).mean()
+    acc = (logits > 0).mean()
+    margin = logits.mean()
+    stats = jnp.stack([loss, acc, margin, jnp.float32(0.0)])
+    return loss, stats
+
+
+def make_dpo_update(cfg: ModelConfig) -> Callable:
+    """(params, m, v, chosen, rejected, mask_c, mask_r, ref_c, ref_r, step)
+    -> (params', m', v', stats [4])."""
+
+    np_ = len(param_names(cfg))
+
+    def fn(*args):
+        flat = list(args[:np_])
+        m = list(args[np_ : 2 * np_])
+        v = list(args[2 * np_ : 3 * np_])
+        chosen, rejected, mask_c, mask_r, ref_c, ref_r, step = args[3 * np_ :]
+        batch = {
+            "chosen": chosen, "rejected": rejected,
+            "mask_c": mask_c, "mask_r": mask_r,
+            "ref_c": ref_c, "ref_r": ref_r,
+        }
+
+        def loss_fn(flat_params):
+            return dpo_loss(cfg, unflatten_params(cfg, flat_params), batch)
+
+        grads, stats = jax.grad(loss_fn, has_aux=True)(flat)
+        new_p, new_m, new_v = _adam_update(cfg, flat, m, v, grads, step)
+        return (*new_p, *new_m, *new_v, stats)
+
+    return fn

@@ -1,0 +1,135 @@
+"""AOT artifact integrity: manifest schema, param table, HLO files.
+
+Validates the build products the Rust runtime consumes (shape contracts in
+DESIGN.md §2).  Runs against ``artifacts/`` if present (the default build);
+otherwise lowers the smoke preset into a temp dir.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PYDIR = os.path.dirname(HERE)
+REPO = os.path.dirname(PYDIR)
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+@pytest.fixture(scope="module")
+def art_dir(tmp_path_factory):
+    if os.path.exists(os.path.join(ARTIFACTS, "manifest.json")):
+        return ARTIFACTS
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", out, "--preset", "smoke"],
+        cwd=PYDIR, check=True,
+    )
+    return out
+
+
+@pytest.fixture(scope="module")
+def manifest(art_dir):
+    with open(os.path.join(art_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_core_fields(manifest):
+    assert manifest["format_version"] == 1
+    cfg = manifest["config"]
+    for k in ("vocab", "d_model", "n_heads", "n_layers", "s_max",
+              "prompt_max", "lanes", "ppo_batch", "chunk_sizes"):
+        assert k in cfg, k
+    assert cfg["lanes"] > cfg["ppo_batch"]  # G = B + delta_max
+
+
+def test_all_entry_files_exist(manifest, art_dir):
+    for name, e in manifest["entries"].items():
+        path = os.path.join(art_dir, e["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} does not look like HLO text"
+
+
+def test_expected_entries_present(manifest):
+    cfg = manifest["config"]
+    names = set(manifest["entries"])
+    want = {"actor_prefill", "reward_score_full", "ref_logprobs",
+            "actor_forward_full", "gae", "ppo_update", "dpo_update"}
+    for c in cfg["chunk_sizes"]:
+        want.add(f"actor_generate_chunk_c{c}")
+        want.add(f"reward_prefill_chunk_c{c}")
+    missing = want - names
+    assert not missing, missing
+    # the Pallas validation flavour must ship too
+    assert "gae_pallas" in names
+    assert any(n.startswith("reward_prefill_chunk_pallas_c") for n in names)
+
+
+def test_param_table_contiguous_and_sized(manifest, art_dir):
+    table = manifest["param_table"]
+    offset = 0
+    for row in table:
+        assert row["offset"] == offset
+        n_elems = int(np.prod(row["shape"])) if row["shape"] else 1
+        assert row["bytes"] == 4 * n_elems
+        offset += row["bytes"]
+    for f in manifest["params_files"].values():
+        assert os.path.getsize(os.path.join(art_dir, f)) == offset
+
+
+def test_ref_params_equal_actor_init(manifest, art_dir):
+    a = open(os.path.join(art_dir, manifest["params_files"]["actor"]), "rb").read()
+    r = open(os.path.join(art_dir, manifest["params_files"]["ref"]), "rb").read()
+    w = open(os.path.join(art_dir, manifest["params_files"]["reward"]), "rb").read()
+    assert a == r, "reference model must be the frozen initial actor"
+    assert a != w, "reward model must be independently initialized"
+
+
+def test_entry_io_arity(manifest):
+    cfg = manifest["config"]
+    np_ = manifest["n_params"]
+    l2 = 2 * cfg["n_layers"]
+    e = manifest["entries"]
+    c0 = cfg["chunk_sizes"][0]
+    assert len(e["actor_prefill"]["inputs"]) == np_ + 3 + l2
+    assert len(e["actor_prefill"]["outputs"]) == l2
+    gen = e[f"actor_generate_chunk_c{c0}"]
+    assert len(gen["inputs"]) == np_ + 3 + l2 + 1
+    assert len(gen["outputs"]) == 2 + l2 + 3
+    upd = e["ppo_update"]
+    assert len(upd["inputs"]) == 3 * np_ + 6
+    assert len(upd["outputs"]) == 3 * np_ + 1
+
+
+def test_generate_chunk_output_shapes(manifest):
+    cfg = manifest["config"]
+    g, s = cfg["lanes"], cfg["s_max"]
+    for c in cfg["chunk_sizes"]:
+        outs = manifest["entries"][f"actor_generate_chunk_c{c}"]["outputs"]
+        assert outs[0]["shape"] == [g, s]          # tokens
+        assert outs[1]["shape"] == [g]             # pos
+        assert outs[-3]["shape"] == [g, c]         # out_tok
+        assert outs[-2]["shape"] == [g, c]         # logp
+        assert outs[-1]["shape"] == [g, c]         # value
+
+
+def test_tokenizer_table(manifest):
+    tok = manifest["tokenizer"]
+    table = tok["table"]
+    assert len(table) == manifest["config"]["vocab"]
+    assert table[tok["pad"]] == "<pad>"
+    assert table[tok["bos"]] == "<bos>"
+    assert table[tok["eos"]] == "<eos>"
+    assert len(set(table)) == len(table)
+    # the synthetic task alphabet must be present
+    for ch in "0123456789+-*= ":
+        assert ch in table, repr(ch)
+
+
+def test_fingerprint_written(art_dir):
+    fp = open(os.path.join(art_dir, "aot_fingerprint.txt")).read().strip()
+    assert len(fp.splitlines()[0]) == 64

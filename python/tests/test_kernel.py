@@ -1,0 +1,212 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes/parameters; every property asserts
+``allclose`` between the interpret-mode Pallas kernel and ``ref.py``.
+This is the CORE numerical signal for the kernels that the AOT artifacts
+embed (DESIGN.md §2, L1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, decode, gae, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked prefill attention
+# --------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    c=st.sampled_from([1, 4, 8, 16]),
+    d=st.sampled_from([8, 16, 32]),
+    s_blocks=st.integers(2, 5),
+    block_k=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_prefill_matches_ref(b, h, c, d, s_blocks, block_k, seed):
+    s = s_blocks * block_k
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, ks = jax.random.split(key, 4)
+    q = rand(kq, (b, h, c, d))
+    k = rand(kk, (b, h, s, d))
+    v = rand(kv, (b, h, s, d))
+    # starts such that start + c <= s
+    start = jax.random.randint(ks, (b,), 0, s - c + 1).astype(jnp.int32)
+    out = attention.chunked_prefill_attention(q, k, v, start, block_k=block_k)
+    want = ref.chunked_prefill_attention(q, k, v, start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_prefill_is_causal():
+    """Future cache rows must not influence the output at all."""
+    key = jax.random.PRNGKey(7)
+    b, h, c, d, s = 2, 2, 4, 16, 32
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, c, d))
+    k = rand(kk, (b, h, s, d))
+    v = rand(kv, (b, h, s, d))
+    start = jnp.array([3, 10], jnp.int32)
+    base = attention.chunked_prefill_attention(q, k, v, start, block_k=8)
+    # poison strictly-future rows (> start + c - 1) per batch and re-run
+    poise = np.asarray(k).copy()
+    poisv = np.asarray(v).copy()
+    for i, st_ in enumerate([3, 10]):
+        poise[i, :, st_ + c :, :] = 1e6
+        poisv[i, :, st_ + c :, :] = -1e6
+    out = attention.chunked_prefill_attention(
+        q, jnp.asarray(poise), jnp.asarray(poisv), start, block_k=8
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_first_position_attends_only_itself():
+    """start=0, c=1: softmax over one key -> output == v[0]."""
+    key = jax.random.PRNGKey(3)
+    b, h, d, s = 1, 2, 8, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, 1, d))
+    k = rand(kk, (b, h, s, d))
+    v = rand(kv, (b, h, s, d))
+    out = attention.chunked_prefill_attention(q, k, v, jnp.zeros((b,), jnp.int32), block_k=8)
+    np.testing.assert_allclose(np.asarray(out[0, :, 0]), np.asarray(v[0, :, 0]), rtol=1e-5)
+
+
+def test_vmem_footprint_flat_in_s():
+    a = attention.vmem_footprint_bytes(c=16, d=32, s=128, block_k=32)
+    b = attention.vmem_footprint_bytes(c=16, d=32, s=4096, block_k=32)
+    assert a == b  # flash schedule: VMEM independent of history length
+
+
+# --------------------------------------------------------------------------
+# decode attention
+# --------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    s_blocks=st.integers(1, 5),
+    block_k=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_matches_ref(b, h, d, s_blocks, block_k, seed):
+    s = s_blocks * block_k
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = rand(kq, (b, h, d))
+    k = rand(kk, (b, h, s, d))
+    v = rand(kv, (b, h, s, d))
+    pos = jax.random.randint(kp, (b,), 0, s).astype(jnp.int32)
+    out = decode.decode_attention(q, k, v, pos, block_k=block_k)
+    want = ref.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_equals_chunked_prefill_c1():
+    key = jax.random.PRNGKey(11)
+    b, h, d, s = 3, 2, 16, 64
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, d))
+    k = rand(kk, (b, h, s, d))
+    v = rand(kv, (b, h, s, d))
+    pos = jnp.array([0, 31, 63], jnp.int32)
+    a = decode.decode_attention(q, k, v, pos, block_k=16)
+    b_ = attention.chunked_prefill_attention(q[:, :, None], k, v, pos, block_k=16)[:, :, 0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# GAE
+# --------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 5),
+    t=st.integers(1, 48),
+    gamma=st.sampled_from([1.0, 0.99, 0.9]),
+    lam=st.sampled_from([0.95, 0.9, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gae_matches_ref(b, t, gamma, lam, seed):
+    key = jax.random.PRNGKey(seed)
+    kr, kv, kl = jax.random.split(key, 3)
+    r = rand(kr, (b, t))
+    v = rand(kv, (b, t))
+    lens = jax.random.randint(kl, (b,), 1, t + 1)
+    mask = (jnp.arange(t)[None, :] < lens[:, None]).astype(jnp.float32)
+    a1, ret1 = gae.gae(r, v, mask, gamma=gamma, lam=lam)
+    a2, ret2 = ref.gae(r, v, mask, gamma=gamma, lam=lam)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ret1), np.asarray(ret2), rtol=1e-5, atol=1e-5)
+
+
+def test_gae_manual_tiny():
+    """Hand-computed 3-step episode pins the recurrence down exactly."""
+    gamma, lam = 0.5, 0.5
+    r = jnp.array([[1.0, 2.0, 3.0]])
+    v = jnp.array([[0.5, 1.0, 1.5]])
+    m = jnp.ones((1, 3))
+    # deltas: d0 = 1 + .5*1 - .5 = 1.0 ; d1 = 2 + .5*1.5 - 1 = 1.75 ; d2 = 3 - 1.5 = 1.5
+    # A2 = 1.5 ; A1 = 1.75 + .25*1.5 = 2.125 ; A0 = 1.0 + .25*2.125 = 1.53125
+    want = np.array([[1.53125, 2.125, 1.5]])
+    a, ret = gae.gae(r, v, m, gamma=gamma, lam=lam)
+    np.testing.assert_allclose(np.asarray(a), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ret), want + np.asarray(v), rtol=1e-6)
+
+
+def test_gae_masked_tail_is_zero():
+    r = jnp.ones((2, 8))
+    v = jnp.ones((2, 8))
+    mask = (jnp.arange(8)[None, :] < jnp.array([[3], [8]])).astype(jnp.float32)
+    a, ret = gae.gae(r, v, mask)
+    assert np.all(np.asarray(a)[0, 3:] == 0.0)
+    assert np.all(np.asarray(ret)[0, 3:] == 0.0)
+
+
+def test_gae_mask_independence():
+    """Values/rewards beyond the mask must not affect the masked prefix."""
+    r = jnp.array([[1.0, 2.0, 100.0, -100.0]])
+    v = jnp.array([[0.1, 0.2, 50.0, -50.0]])
+    m = jnp.array([[1.0, 1.0, 0.0, 0.0]])
+    r2 = jnp.array([[1.0, 2.0, 0.0, 0.0]])
+    v2 = jnp.array([[0.1, 0.2, 0.0, 0.0]])
+    a1, _ = gae.gae(r, v, m)
+    a2, _ = gae.gae(r2, v2, m)
+    np.testing.assert_allclose(np.asarray(a1)[:, :2], np.asarray(a2)[:, :2], rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# MXU / VMEM estimators (structure-level perf model, DESIGN.md §Perf)
+# --------------------------------------------------------------------------
+
+
+def test_mxu_estimate_monotone_in_block():
+    vals = [attention.mxu_utilization_estimate(16, 32, bk) for bk in (8, 16, 32, 64, 128)]
+    assert all(x <= y + 1e-12 for x, y in zip(vals, vals[1:]))
+    assert vals[-1] <= 1.0
+
+
+@pytest.mark.parametrize("bad_s", [17, 33, 100])
+def test_block_k_must_divide_cache(bad_s):
+    q = jnp.zeros((1, 1, 4, 8))
+    k = jnp.zeros((1, 1, bad_s, 8))
+    with pytest.raises(ValueError):
+        attention.chunked_prefill_attention(q, k, k, jnp.zeros((1,), jnp.int32), block_k=16)

@@ -1,0 +1,246 @@
+"""L2 semantics: generation, incremental prefill, streaming equivalence.
+
+These tests pin down the invariants the paper's §3.1 correctness argument
+(Eq. 3) relies on and that the Rust coordinator assumes:
+
+* chunked KV-cache decoding reproduces teacher-forced log-probs exactly;
+* streamed (chunked) reward prefill produces the same final score as
+  monolithic scoring — the "intra-step overlap does not change the PPO
+  update" invariant;
+* dead lanes are bit-frozen across generate calls (inter-step deferral
+  preserves partial work).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(
+    d_model=64, n_heads=2, n_layers=2, d_ff=128, s_max=64, prompt_max=8,
+    lanes=4, ppo_batch=4, chunk_sizes=(4, 8), temperature=1.0,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(42))
+
+
+def fresh_kv(batch):
+    shape = (batch, CFG.n_heads, CFG.s_max, CFG.head_dim)
+    return [jnp.zeros(shape, jnp.float32) for _ in range(2 * CFG.n_layers)]
+
+
+def make_prompts(key, g=None):
+    g = g or CFG.lanes
+    toks = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    toks = toks.at[:, 0].set(M.BOS)
+    prompt_len = jnp.full((g,), CFG.prompt_max, jnp.int32)
+    return toks, prompt_len
+
+
+def run_generate(params, tokens, pos, live, kv, key, c, n_chunks):
+    """Drive make_actor_generate_chunk the way the Rust coordinator does."""
+    fn = M.make_actor_generate_chunk(CFG, c)
+    flat = M.flatten_params(CFG, params)
+    outs = []
+    for i in range(n_chunks):
+        key, sub = jax.random.split(key)
+        raw = jax.random.key_data(sub).astype(jnp.uint32)
+        res = fn(*flat, tokens, pos, live, *kv, raw)
+        tokens, pos = res[0], res[1]
+        kv = list(res[2 : 2 + 2 * CFG.n_layers])
+        outs.append(res[2 + 2 * CFG.n_layers :])  # (out_tok, logp, value)
+    return tokens, pos, kv, outs
+
+
+def test_generate_chunk_is_deterministic(params):
+    key = jax.random.PRNGKey(0)
+    tokens, prompt_len = make_prompts(key)
+    reset = jnp.ones((CFG.lanes,), jnp.int32)
+    kv = fresh_kv(CFG.lanes)
+    pre = M.make_actor_prefill(CFG)
+    flat = M.flatten_params(CFG, params)
+    kv = list(pre(*flat, tokens, prompt_len, reset, *kv))
+    pos = prompt_len
+    live = jnp.ones((CFG.lanes,), jnp.int32)
+
+    t1, p1, _, o1 = run_generate(params, tokens, pos, live, kv, jax.random.PRNGKey(9), 4, 3)
+    t2, p2, _, o2 = run_generate(params, tokens, pos, live, kv, jax.random.PRNGKey(9), 4, 3)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    for a, b in zip(o1, o2):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_generated_logp_matches_teacher_forced_recompute(params):
+    """The logp recorded during KV-cache generation must equal the dense
+    teacher-forced recompute — this is what makes old_logp valid in Eq. 2."""
+    key = jax.random.PRNGKey(1)
+    tokens, prompt_len = make_prompts(key)
+    reset = jnp.ones((CFG.lanes,), jnp.int32)
+    kv = fresh_kv(CFG.lanes)
+    flat = M.flatten_params(CFG, params)
+    kv = list(M.make_actor_prefill(CFG)(*flat, tokens, prompt_len, reset, *kv))
+    live = jnp.ones((CFG.lanes,), jnp.int32)
+    n_chunks, c = 4, 4
+    t_out, pos, _, outs = run_generate(
+        params, tokens, prompt_len, live, kv, jax.random.PRNGKey(5), c, n_chunks
+    )
+    gen_logp = jnp.concatenate([o[1] for o in outs], axis=1)  # [G, n*c]
+
+    dense_logp, _ = M.token_logprobs(CFG, params, t_out)
+    p0 = int(CFG.prompt_max)
+    want = dense_logp[:, p0 : p0 + n_chunks * c]
+    np.testing.assert_allclose(np.asarray(gen_logp), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+def test_generated_value_matches_dense_scalar(params):
+    key = jax.random.PRNGKey(2)
+    tokens, prompt_len = make_prompts(key)
+    reset = jnp.ones((CFG.lanes,), jnp.int32)
+    kv = fresh_kv(CFG.lanes)
+    flat = M.flatten_params(CFG, params)
+    kv = list(M.make_actor_prefill(CFG)(*flat, tokens, prompt_len, reset, *kv))
+    live = jnp.ones((CFG.lanes,), jnp.int32)
+    t_out, _, _, outs = run_generate(
+        params, tokens, prompt_len, live, kv, jax.random.PRNGKey(6), 8, 2
+    )
+    gen_vals = jnp.concatenate([o[2] for o in outs], axis=1)  # [G, 16]
+    _, dense_scalar = M.forward_full(CFG, params, t_out)
+    p0 = int(CFG.prompt_max)
+    # value emitted when sampling token at position p comes from hidden at p-1
+    want = dense_scalar[:, p0 - 1 : p0 - 1 + 16]
+    np.testing.assert_allclose(np.asarray(gen_vals), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+def test_streamed_reward_prefill_equals_full_score(params):
+    """Eq. 3's system-level counterpart: chunk-streamed scoring == monolithic."""
+    key = jax.random.PRNGKey(3)
+    g = CFG.lanes
+    lens = jnp.array([13, 24, 32, 9], jnp.int32)  # ragged sequence lengths
+    tokens = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    flat = M.flatten_params(CFG, params)
+
+    # monolithic
+    full = M.make_reward_score_full(CFG)(*flat, tokens, lens - 1)[0]
+
+    # streamed: chunks of c, per-lane contiguous schedule like the coordinator's
+    c = 4
+    fn = M.make_reward_prefill_chunk(CFG, c)
+    kv = fresh_kv(g)
+    score_at_last = jnp.zeros((g,), jnp.float32)
+    max_len = int(lens.max())
+    for start in range(0, max_len, c):
+        chunk = jax.lax.dynamic_slice(tokens, (0, start), (g, c))
+        starts = jnp.full((g,), start, jnp.int32)
+        n_valid = jnp.clip(lens - start, 0, c)
+        res = fn(*flat, chunk, starts, n_valid, *kv)
+        kv = list(res[: 2 * CFG.n_layers])
+        scores = res[2 * CFG.n_layers]  # [G, C]
+        # pick the score at each lane's final token if it lies in this chunk
+        idx_in_chunk = lens - 1 - start
+        in_chunk = (idx_in_chunk >= 0) & (idx_in_chunk < c)
+        picked = scores[jnp.arange(g), jnp.clip(idx_in_chunk, 0, c - 1)]
+        score_at_last = jnp.where(in_chunk, picked, score_at_last)
+
+    np.testing.assert_allclose(np.asarray(score_at_last), np.asarray(full), rtol=5e-4, atol=5e-4)
+
+
+def test_streamed_reward_chunk_size_invariance(params):
+    """Different chunk sizes must give identical final scores (§3.1)."""
+    key = jax.random.PRNGKey(4)
+    g = CFG.lanes
+    lens = jnp.array([16, 8, 24, 12], jnp.int32)
+    tokens = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    flat = M.flatten_params(CFG, params)
+
+    def stream(c):
+        fn = M.make_reward_prefill_chunk(CFG, c)
+        kv = fresh_kv(g)
+        out = jnp.zeros((g,), jnp.float32)
+        for start in range(0, int(lens.max()), c):
+            chunk = jax.lax.dynamic_slice(tokens, (0, start), (g, c))
+            starts = jnp.full((g,), start, jnp.int32)
+            n_valid = jnp.clip(lens - start, 0, c)
+            res = fn(*flat, chunk, starts, n_valid, *kv)
+            kv = list(res[: 2 * CFG.n_layers])
+            scores = res[2 * CFG.n_layers]
+            idx = lens - 1 - start
+            hit = (idx >= 0) & (idx < c)
+            out = jnp.where(hit, scores[jnp.arange(g), jnp.clip(idx, 0, c - 1)], out)
+        return out
+
+    s4, s8 = stream(4), stream(8)
+    np.testing.assert_allclose(np.asarray(s4), np.asarray(s8), rtol=5e-4, atol=5e-4)
+
+
+def test_dead_lanes_are_frozen(params):
+    """live=0 lanes must keep tokens, pos, and KV bit-identical (§3.2)."""
+    key = jax.random.PRNGKey(8)
+    tokens, prompt_len = make_prompts(key)
+    reset = jnp.ones((CFG.lanes,), jnp.int32)
+    kv = fresh_kv(CFG.lanes)
+    flat = M.flatten_params(CFG, params)
+    kv = list(M.make_actor_prefill(CFG)(*flat, tokens, prompt_len, reset, *kv))
+    live = jnp.array([1, 0, 1, 0], jnp.int32)
+    fn = M.make_actor_generate_chunk(CFG, 4)
+    raw = jax.random.key_data(jax.random.PRNGKey(123)).astype(jnp.uint32)
+    res = fn(*flat, tokens, prompt_len, live, *kv, raw)
+    t2, p2 = res[0], res[1]
+    kv2 = res[2 : 2 + 2 * CFG.n_layers]
+    out_tok = res[2 + 2 * CFG.n_layers]
+    for lane in (1, 3):
+        np.testing.assert_array_equal(np.asarray(t2[lane]), np.asarray(tokens[lane]))
+        assert int(p2[lane]) == int(prompt_len[lane])
+        for a, b in zip(kv2, kv):
+            np.testing.assert_array_equal(np.asarray(a[lane]), np.asarray(b[lane]))
+        assert np.all(np.asarray(out_tok[lane]) == M.PAD)
+    for lane in (0, 2):
+        assert int(p2[lane]) == int(prompt_len[lane]) + 4
+
+
+def test_actor_prefill_reset_selectivity(params):
+    """reset=0 lanes keep their old KV exactly; reset=1 lanes get fresh prefill."""
+    key = jax.random.PRNGKey(10)
+    tokens, prompt_len = make_prompts(key)
+    flat = M.flatten_params(CFG, params)
+    old_kv = [jnp.full((CFG.lanes, CFG.n_heads, CFG.s_max, CFG.head_dim), 7.0)
+              for _ in range(2 * CFG.n_layers)]
+    reset = jnp.array([1, 0, 1, 0], jnp.int32)
+    new_kv = M.make_actor_prefill(CFG)(*flat, tokens, prompt_len, reset, *old_kv)
+    for a in new_kv:
+        assert np.all(np.asarray(a[1]) == 7.0)
+        assert np.all(np.asarray(a[3]) == 7.0)
+        assert not np.all(np.asarray(a[0]) == 7.0)
+
+
+def test_token_logprobs_are_normalized(params):
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, CFG.s_max), 3, CFG.vocab)
+    logits, _ = M.forward_full(CFG, params, toks.astype(jnp.int32))
+    probs = jax.nn.softmax(logits, -1).sum(-1)
+    np.testing.assert_allclose(np.asarray(probs), 1.0, rtol=1e-5)
+
+
+def test_kernel_impl_flavours_agree(params):
+    """pallas vs jnp lowering of the same model function must agree numerically."""
+    pcfg = dataclasses.replace(CFG, kernel_impl="pallas")
+    key = jax.random.PRNGKey(14)
+    g = CFG.lanes
+    tokens = jax.random.randint(key, (g, 8), 3, CFG.vocab).astype(jnp.int32)
+    start = jnp.zeros((g,), jnp.int32)
+    nv = jnp.full((g,), 8, jnp.int32)
+    flat = M.flatten_params(CFG, params)
+    kv = fresh_kv(g)
+    r_jnp = M.make_reward_prefill_chunk(CFG, 8)(*flat, tokens, start, nv, *kv)
+    r_pal = M.make_reward_prefill_chunk(pcfg, 8)(*flat, tokens, start, nv, *kv)
+    for a, b in zip(r_jnp, r_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)

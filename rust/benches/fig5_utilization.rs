@@ -1,0 +1,13 @@
+//! Fig. 5 — GPU-utilization improvement (1.4×–2.1× in the paper).
+use oppo::eval::{figures, print_table, save_rows};
+
+fn main() {
+    let rows = figures::fig5();
+    print_table("Fig 5 — GPU utilization (TRL vs OPPO)", &rows);
+    save_rows("fig5", &rows).expect("save");
+    for r in &rows {
+        let ratio = r.cells[2].1;
+        assert!((1.05..2.6).contains(&ratio), "{}: util ratio {ratio} out of band", r.label);
+    }
+    println!("shape check passed: OPPO lifts utilization on every setup");
+}

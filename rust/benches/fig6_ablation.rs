@@ -1,0 +1,17 @@
+//! Fig. 6 — design-component breakdown: intra-only ≈1.2–1.3×, inter-only
+//! ≈1.6–2.06×, full OPPO largest; final rewards unchanged.
+use oppo::eval::{figures, print_table, save_rows};
+
+fn main() {
+    let rows = figures::fig6();
+    print_table("Fig 6 — ablation breakdown (time-to-reward + final reward)", &rows);
+    save_rows("fig6", &rows).expect("save");
+    // per-setup ordering: trl < intra-only < inter-only < full (speedup)
+    for chunk in rows.chunks(4) {
+        let s: Vec<f64> = chunk.iter().map(|r| r.cells[1].1).collect();
+        assert!(s[1] > 1.05, "intra-only speedup {}", s[1]);
+        assert!(s[2] > s[1], "inter {} !> intra {}", s[2], s[1]);
+        assert!(s[3] >= s[2] * 0.95, "full {} vs inter {}", s[3], s[2]);
+    }
+    println!("shape check passed: ablation ordering matches the paper");
+}

@@ -1,0 +1,24 @@
+//! Fig. 7 — (a) fixed vs dynamic Δ; (b) chunk-size sweep (U-shaped step
+//! latency with the optimum at moderate chunks).
+use oppo::eval::{figures, print_table, save_rows};
+
+fn main() {
+    let a = figures::fig7a();
+    print_table("Fig 7a — fixed Δ ∈ {4, 8} vs dynamic Δ", &a);
+    save_rows("fig7a", &a).expect("save");
+    let dynamic = a.iter().find(|r| r.label == "dynamic Δ").unwrap().cells[0].1;
+    let best_fixed = a[..2].iter().map(|r| r.cells[0].1).fold(f64::INFINITY, f64::min);
+    assert!(dynamic <= best_fixed * 1.10, "dynamic {dynamic} vs best fixed {best_fixed}");
+
+    let b = figures::fig7b();
+    print_table("Fig 7b — chunk size vs step latency", &b);
+    save_rows("fig7b", &b).expect("save");
+    for setup_rows in b.chunks(4) {
+        let lat: Vec<f64> = setup_rows.iter().map(|r| r.cells[0].1).collect();
+        // U-shape: the optimum is at a moderate chunk (500), not the edges
+        let best = lat.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((lat[1] - best).abs() < 1e-9 || (lat[2] - best).abs() < 1e-9,
+            "optimum not at a moderate chunk: {lat:?}");
+    }
+    println!("shape check passed: dynamic Δ wins; chunk sweep is U-shaped");
+}

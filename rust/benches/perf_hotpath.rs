@@ -1,0 +1,123 @@
+//! §Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf records the
+//! before/after of the optimization pass).
+//!
+//! L3 coordinator structures (buffer, controllers, GAE, simulator) and, when
+//! artifacts are present, the PJRT dispatch path (per-chunk decode latency,
+//! per-token cost, dispatch overhead vs execute time).
+use std::sync::Arc;
+use std::time::Instant;
+
+use oppo::coordinator::buffer::SeqBuffer;
+use oppo::coordinator::engine_ops::Ops;
+use oppo::data::tasks::{Prompt, TaskKind};
+use oppo::eval::{print_table, save_rows, Row};
+use oppo::ppo::gae::gae;
+use oppo::runtime::Engine;
+use oppo::sim::pipeline::{simulate, Pipeline, SimConfig};
+use oppo::sim::presets;
+
+fn time_it(mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // L3: buffer churn (admit + finish + take) — must be negligible
+    let n = 200_000;
+    let secs = time_it(|| {
+        let mut buf = SeqBuffer::new(12, 12);
+        for i in 0..n {
+            let p = Prompt {
+                kind: TaskKind::Arith, text: "1+1=".into(),
+                tokens: vec![1, 5, 40, 5, 44], answer: "2".into(), id: i,
+            };
+            let lane = buf.add(p, i).unwrap();
+            {
+                let s = buf.by_lane_mut(lane).unwrap();
+                s.phase = oppo::model::sequence::SeqPhase::Generating;
+                s.push_token(2, 0.0, 0.0, 2, 8, 100);
+            }
+            buf.mark_finished(lane);
+            let taken = buf.take_finished(1, i);
+            assert_eq!(taken.len(), 1);
+        }
+    });
+    rows.push(Row::new("buffer admit+take").cell("ops_per_sec", n as f64 / secs));
+
+    // L3: Rust GAE mirror over a [8, 160] batch
+    let (b, s) = (8, 160);
+    let r = vec![0.1f32; b * s];
+    let v = vec![0.05f32; b * s];
+    let m = vec![1.0f32; b * s];
+    let iters = 20_000;
+    let secs = time_it(|| {
+        for _ in 0..iters {
+            let _ = gae(&r, &v, &m, b, s, 1.0, 0.95);
+        }
+    });
+    rows.push(Row::new("rust gae [8x160]").cell("ops_per_sec", iters as f64 / secs));
+
+    // simulator throughput: steps/sec of the heaviest pipeline
+    let steps = 400;
+    let secs = time_it(|| {
+        let cfg = SimConfig::new(presets::stackex_7b_h200(), steps, 3);
+        let _ = simulate(Pipeline::oppo(), &cfg);
+    });
+    rows.push(Row::new("sim oppo steps").cell("ops_per_sec", steps as f64 / secs));
+
+    // PJRT dispatch path (needs artifacts)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = Arc::new(Engine::load("artifacts").unwrap());
+        let shape = engine.manifest().shape.clone();
+        let (g, smax) = (shape.lanes, shape.s_max);
+        let mut ops = Ops::new(engine.clone(), 0).unwrap();
+        let tokens = {
+            let mut t = vec![0i32; g * smax];
+            for lane in 0..g {
+                t[lane * smax] = 1;
+                t[lane * smax + 1] = 5;
+            }
+            t
+        };
+        let mut state = ops.fresh_actor_state(&tokens).unwrap();
+        ops.actor_prefill(&mut state, &tokens, &vec![2; g], &vec![1; g]).unwrap();
+        for &c in &shape.chunk_sizes {
+            // warm up compile
+            let pos = vec![2i32; g];
+            let live = vec![1i32; g];
+            let _ = ops.generate_chunk(&mut state, c, &pos, &live).unwrap();
+            let reps = 8;
+            let secs = time_it(|| {
+                for _ in 0..reps {
+                    let _ = ops.generate_chunk(&mut state, c, &pos, &live).unwrap();
+                }
+            });
+            let per_call = secs / reps as f64;
+            rows.push(
+                Row::new(format!("generate_chunk c={c}"))
+                    .cell("ms_per_call", 1e3 * per_call)
+                    .cell("us_per_token", 1e6 * per_call / (c * g) as f64),
+            );
+        }
+        // dispatch overhead: the gae entry is tiny, so its latency ≈ overhead
+        let rb = engine.upload_f32(&vec![0.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();
+        let vb = engine.upload_f32(&vec![0.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();
+        let mb = engine.upload_f32(&vec![1.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();
+        let _ = engine.execute("gae", &[&rb, &vb, &mb]).unwrap();
+        let reps = 100;
+        let secs = time_it(|| {
+            for _ in 0..reps {
+                let _ = engine.execute("gae", &[&rb, &vb, &mb]).unwrap();
+            }
+        });
+        rows.push(Row::new("pjrt dispatch (gae)").cell("ms_per_call", 1e3 * secs / reps as f64));
+    } else {
+        println!("(artifacts missing — PJRT microbenches skipped)");
+    }
+
+    print_table("§Perf — hot-path microbenchmarks", &rows);
+    save_rows("perf_hotpath", &rows).expect("save");
+}

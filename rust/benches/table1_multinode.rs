@@ -1,0 +1,12 @@
+//! Table 1 — multi-node step latency: OPPO ≈4.5× faster than TRL on
+//! 2 × 4×A100-40GB (cross-node stragglers + comm amplify the gap).
+use oppo::eval::{print_table, save_rows, tables};
+
+fn main() {
+    let rows = tables::table1();
+    print_table("Table 1 — multi-node end-to-end step latency", &rows);
+    save_rows("table1", &rows).expect("save");
+    let speedup = rows[1].cells[1].1;
+    assert!((2.5..8.0).contains(&speedup), "multi-node speedup {speedup} out of band");
+    println!("shape check passed: multi-node gap ≈{speedup:.1}× (paper: 4.49×)");
+}

@@ -1,0 +1,14 @@
+//! Table 4 — per-step latency under identical settings: VeRL DP > DP+SP >
+//! AReaL > OPPO (paper: 125.4 / 120.5 / 109.9 / 99.8 s).
+use oppo::eval::{print_table, save_rows, tables};
+
+fn main() {
+    let rows = tables::table4();
+    print_table("Table 4 — framework comparison (mean step latency)", &rows);
+    save_rows("table4", &rows).expect("save");
+    let get = |name: &str| rows.iter().find(|r| r.label == name).unwrap().cells[0].1;
+    assert!(get("VeRL w/ DP") > get("VeRL w/ DP+SP"));
+    assert!(get("VeRL w/ DP+SP") > get("AReaL"));
+    assert!(get("AReaL") > get("OPPO"));
+    println!("shape check passed: OPPO achieves the lowest per-step latency");
+}

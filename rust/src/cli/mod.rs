@@ -1,0 +1,287 @@
+//! Command-line interface (hand-rolled; clap is not in the offline crate
+//! set).  Subcommands:
+//!
+//! ```text
+//! oppo train    [--config FILE] [--set k=v ...]    real-compute RLHF run
+//! oppo dpo      [--config FILE] [--set k=v ...]    DPO generalization run
+//! oppo simulate [--pipeline P] [--setup S] [--steps N] [--seed K]
+//! oppo figures  [--only NAME]                      regenerate paper artifacts
+//! oppo info     [--artifacts DIR]                  inspect the AOT manifest
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::dpo::DpoTrainer;
+use crate::coordinator::OppoScheduler;
+use crate::eval::{figures, print_table, save_rows, tables};
+use crate::sim::pipeline::{simulate, steady_state_latency, Pipeline, SimConfig};
+use crate::sim::presets;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: Vec<(String, String)>,
+    pub sets: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: a subcommand followed by `--flag value` pairs;
+    /// `--set k=v` may repeat.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(flag) = it.next() {
+            let name = flag
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {flag:?}"))?;
+            let value = it
+                .next()
+                .with_context(|| format!("--{name} needs a value"))?
+                .clone();
+            if name == "set" {
+                args.sets.push(value);
+            } else {
+                args.flags.push((name.to_string(), value));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?} is not an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?} is not an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    crate::util::logging::init();
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "dpo" => cmd_dpo(&args),
+        "simulate" => cmd_simulate(&args),
+        "figures" => cmd_figures(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+OPPO: Accelerating PPO-based RLHF via Pipeline Overlap (reproduction)
+
+USAGE:
+  oppo train    [--config FILE] [--set section.key=value ...]
+  oppo dpo      [--config FILE] [--set section.key=value ...]
+  oppo simulate [--pipeline trl|oppo|oppo-no-intra|oppo-no-inter|areal|verl-dp|verl-dp-sp]
+                [--setup stackex-7b|stackex-3b|gsm8k-7b|opencoder-3b|multinode|table4]
+                [--steps N] [--seed K]
+  oppo figures  [--only fig2a|fig2b|fig2c|fig3|fig4|fig5|fig6|fig7a|fig7b|table1|table2|table3|table4]
+  oppo info     [--artifacts DIR]
+";
+
+fn load_cfg(args: &Args) -> Result<TrainConfig> {
+    match args.flag("config") {
+        Some(path) => TrainConfig::load(path, &args.sets),
+        None => TrainConfig::from_overrides(&args.sets),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    log::info!("training: mode={} task={} steps={}", cfg.mode.name(), cfg.task, cfg.steps);
+    let log = OppoScheduler::new(cfg)?.run()?;
+    println!(
+        "done: {} steps, final score {:.3}, wall {:.1}s",
+        log.records.len(),
+        log.records.last().map(|r| r.mean_score).unwrap_or(0.0),
+        log.total_wall_s()
+    );
+    Ok(())
+}
+
+fn cmd_dpo(args: &Args) -> Result<()> {
+    let mut cfg = load_cfg(args)?;
+    cfg.mode = crate::config::Mode::Dpo;
+    let log = DpoTrainer::new(cfg)?.run()?;
+    println!(
+        "done: {} DPO steps, final margin {:.3}",
+        log.records.len(),
+        log.records.last().map(|r| r.mean_score).unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+fn pipeline_by_name(name: &str) -> Result<Pipeline> {
+    Ok(match name {
+        "trl" | "sequential" => Pipeline::TrlSequential,
+        "oppo" => Pipeline::oppo(),
+        "oppo-no-intra" => Pipeline::Oppo { intra: false, inter: true, fixed_delta: None },
+        "oppo-no-inter" => Pipeline::Oppo { intra: true, inter: false, fixed_delta: None },
+        "areal" => Pipeline::AReal,
+        "verl-dp" => Pipeline::VerlDp,
+        "verl-dp-sp" => Pipeline::VerlDpSp,
+        "verl-async-sp" => Pipeline::VerlAsyncSp,
+        other => bail!("unknown pipeline {other:?}"),
+    })
+}
+
+fn setup_by_name(name: &str) -> Result<presets::Setup> {
+    Ok(match name {
+        "stackex-7b" => presets::stackex_7b_h200(),
+        "stackex-3b" => presets::stackex_3b_a100(),
+        "gsm8k-7b" => presets::gsm8k_7b_gh200(),
+        "opencoder-3b" => presets::opencoder_3b_a100(),
+        "multinode" => presets::multinode_7b_a100_40(),
+        "table4" => presets::table4_setup(),
+        other => bail!("unknown setup {other:?}"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let pipeline = pipeline_by_name(args.flag("pipeline").unwrap_or("oppo"))?;
+    let setup = setup_by_name(args.flag("setup").unwrap_or("stackex-7b"))?;
+    let steps = args.flag_usize("steps", 120)?;
+    let seed = args.flag_u64("seed", 11)?;
+    let log = simulate(pipeline, &SimConfig::new(setup.clone(), steps, seed));
+    println!(
+        "{} on {}: {} steps, steady-state latency {:.2}s, final reward {:.3}, \
+         time-to-{:.2} {}",
+        pipeline.name(),
+        setup.name,
+        steps,
+        steady_state_latency(&log),
+        log.records.last().map(|r| r.mean_score).unwrap_or(0.0),
+        setup.target_reward,
+        log.time_to_reward(setup.target_reward, 8)
+            .map(crate::util::fmt_secs)
+            .unwrap_or_else(|| "not reached".into()),
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let only = args.flag("only");
+    let run = |name: &str| only.is_none() || only == Some(name);
+    let mut emit = |name: &str, title: &str, rows: Vec<crate::eval::Row>| -> Result<()> {
+        print_table(title, &rows);
+        save_rows(name, &rows)
+    };
+    if run("fig2a") {
+        emit("fig2a", "Fig 2a — GPU utilization per stage", figures::fig2a())?;
+    }
+    if run("fig2b") {
+        emit("fig2b", "Fig 2b — rollout length distribution", figures::fig2b())?;
+    }
+    if run("fig2c") {
+        emit("fig2c", "Fig 2c — staleness hurts convergence", figures::fig2c())?;
+    }
+    if run("fig3") {
+        emit("fig3", "Fig 3 — time-to-reward speedup", figures::fig3())?;
+    }
+    if run("fig4") {
+        emit("fig4", "Fig 4 — step-to-reward parity", figures::fig4())?;
+    }
+    if run("fig5") {
+        emit("fig5", "Fig 5 — GPU utilization improvement", figures::fig5())?;
+    }
+    if run("fig6") {
+        emit("fig6", "Fig 6 — ablation breakdown", figures::fig6())?;
+    }
+    if run("fig7a") {
+        emit("fig7a", "Fig 7a — fixed vs dynamic Δ", figures::fig7a())?;
+    }
+    if run("fig7b") {
+        emit("fig7b", "Fig 7b — chunk size vs step speed", figures::fig7b())?;
+    }
+    if run("table1") {
+        emit("table1", "Table 1 — multi-node step latency", tables::table1())?;
+    }
+    if run("table2") {
+        emit("table2", "Table 2 — deferral distribution", tables::table2())?;
+    }
+    if run("table3") {
+        emit("table3", "Table 3 (sim) — final reward parity", tables::table3_sim())?;
+    }
+    if run("table4") {
+        emit("table4", "Table 4 — framework comparison", tables::table4())?;
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let manifest = crate::runtime::Manifest::load(dir)?;
+    let m = &manifest.shape;
+    println!("artifacts: {}", manifest.dir.display());
+    println!(
+        "model: d={} layers={} heads={} vocab={} s_max={} lanes={} ppo_batch={} (~{} params)",
+        m.d_model, m.n_layers, m.n_heads, m.vocab, m.s_max, m.lanes, m.ppo_batch,
+        m.approx_params()
+    );
+    println!("chunk variants: {:?}", m.chunk_sizes);
+    println!("entries ({}):", manifest.entries.len());
+    for (name, e) in &manifest.entries {
+        println!("  {name:40} {} in / {} out", e.inputs.len(), e.outputs.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_basic() {
+        let a = Args::parse(&sv(&["simulate", "--steps", "50", "--seed", "3"])).unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.flag_usize("steps", 0).unwrap(), 50);
+        assert_eq!(a.flag_u64("seed", 0).unwrap(), 3);
+        assert_eq!(a.flag_usize("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn parse_sets_accumulate() {
+        let a = Args::parse(&sv(&["train", "--set", "run.steps=5", "--set", "run.seed=2"]))
+            .unwrap();
+        assert_eq!(a.sets.len(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Args::parse(&sv(&["train", "steps"])).is_err());
+        assert!(Args::parse(&sv(&["train", "--steps"])).is_err());
+    }
+
+    #[test]
+    fn name_lookups() {
+        assert!(pipeline_by_name("oppo").is_ok());
+        assert!(pipeline_by_name("warp").is_err());
+        assert!(setup_by_name("gsm8k-7b").is_ok());
+        assert!(setup_by_name("bogus").is_err());
+    }
+}

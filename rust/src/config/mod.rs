@@ -1,0 +1,363 @@
+//! Run configuration: typed schema over the TOML-subset parser, with
+//! defaults, presets, CLI overrides, and validation against the AOT
+//! manifest (shape contracts are static — a config that disagrees with the
+//! artifacts must fail fast, not at dispatch time).
+
+pub mod parse;
+
+use anyhow::{bail, Context, Result};
+
+use parse::{Doc, Val};
+
+/// Which training pipeline drives the run (§4 baselines + ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Full OPPO: intra-step streaming + inter-step overcommit (Algorithm 1).
+    Oppo,
+    /// TRL-style sequential PPO: generate-all → score-all → train.
+    Sequential,
+    /// Ablation "OPPO w/o Intra": overcommit only, monolithic scoring.
+    OppoNoIntra,
+    /// Ablation "OPPO w/o Inter": streaming only, Δ = 0.
+    OppoNoInter,
+    /// Async staleness-k baseline (Fig. 2c): scoring uses k-step-old actor outputs.
+    AsyncStale,
+    /// DPO generalization (§4.3): generate B+Δ, update on first B pairs.
+    Dpo,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "oppo" => Mode::Oppo,
+            "sequential" | "trl" => Mode::Sequential,
+            "oppo-no-intra" | "no-intra" => Mode::OppoNoIntra,
+            "oppo-no-inter" | "no-inter" => Mode::OppoNoInter,
+            "async" | "async-stale" => Mode::AsyncStale,
+            "dpo" => Mode::Dpo,
+            _ => bail!(
+                "unknown mode {s:?} (want oppo|sequential|oppo-no-intra|oppo-no-inter|async|dpo)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Oppo => "oppo",
+            Mode::Sequential => "sequential",
+            Mode::OppoNoIntra => "oppo-no-intra",
+            Mode::OppoNoInter => "oppo-no-inter",
+            Mode::AsyncStale => "async-stale",
+            Mode::Dpo => "dpo",
+        }
+    }
+
+    /// Does this mode stream chunks to the reward model mid-generation?
+    pub fn intra_enabled(&self) -> bool {
+        matches!(self, Mode::Oppo | Mode::OppoNoInter | Mode::Dpo)
+    }
+
+    /// Does this mode overcommit Δ extra prompts and defer stragglers?
+    pub fn inter_enabled(&self) -> bool {
+        matches!(self, Mode::Oppo | Mode::OppoNoIntra | Mode::Dpo)
+    }
+}
+
+/// Configuration for the real-compute training loop (runtime + coordinator).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub mode: Mode,
+    /// PPO steps to run.
+    pub steps: usize,
+    /// PPO batch size B (must equal the manifest's `ppo_batch`).
+    pub batch: usize,
+    /// Initial / min / max overcommitment Δ (Alg. 1; `batch + delta_max`
+    /// must not exceed the manifest's `lanes`).
+    pub delta_init: usize,
+    pub delta_min: usize,
+    pub delta_max: usize,
+    /// Reward sliding-window W for the dynamic Δ controller.
+    pub window: usize,
+    /// Initial streaming chunk size C (must be one of the manifest's
+    /// `chunk_sizes` — executables are pre-compiled per variant).
+    pub chunk_size: usize,
+    /// Enable the dynamic controllers (§3.1 / §3.2).
+    pub adaptive_chunk: bool,
+    pub adaptive_delta: bool,
+    /// Chunk controller exploration period in steps (paper: "every 50").
+    pub explore_every: usize,
+    /// Per-token KL penalty coefficient β (InstructGPT-style reward shaping).
+    pub kl_beta: f64,
+    /// Synthetic task: "arith" | "copy" | "sort" | "mixed".
+    pub task: String,
+    pub seed: u64,
+    /// Hard cap on generated tokens per response.
+    pub max_new_tokens: usize,
+    /// PPO epochs per batch.
+    pub ppo_epochs: usize,
+    /// Staleness k for `Mode::AsyncStale`.
+    pub staleness: usize,
+    /// Blend weight of the learned reward model vs the rule reward in
+    /// [0, 1]; rule-only tasks (GSM8K-style) use 0.0.
+    pub reward_model_weight: f64,
+    pub artifacts_dir: String,
+    pub log_every: usize,
+    /// Where to drop JSON metrics (None = don't write).
+    pub out_dir: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            mode: Mode::Oppo,
+            steps: 50,
+            batch: 8,
+            delta_init: 2,
+            delta_min: 0,
+            delta_max: 4,
+            window: 8,
+            chunk_size: 16,
+            adaptive_chunk: true,
+            adaptive_delta: true,
+            explore_every: 20,
+            kl_beta: 0.02,
+            task: "arith".into(),
+            seed: 0,
+            max_new_tokens: 96,
+            ppo_epochs: 1,
+            staleness: 0,
+            reward_model_weight: 0.25,
+            artifacts_dir: "artifacts".into(),
+            log_every: 10,
+            out_dir: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from a parsed document's `[run]` section (missing keys keep
+    /// defaults), then validate.
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let mut cfg = TrainConfig::default();
+        let empty = Default::default();
+        let sec = doc.get("run").unwrap_or(&empty);
+        let get = |k: &str| -> Option<&Val> { sec.get(k).or_else(|| doc.get("")?.get(k)) };
+
+        macro_rules! set {
+            ($field:ident, $conv:ident) => {
+                if let Some(v) = get(stringify!($field)) {
+                    cfg.$field = v.$conv().context(stringify!($field))?;
+                }
+            };
+        }
+        if let Some(v) = get("mode") {
+            cfg.mode = Mode::parse(v.as_str()?)?;
+        }
+        set!(steps, as_usize);
+        set!(batch, as_usize);
+        set!(delta_init, as_usize);
+        set!(delta_min, as_usize);
+        set!(delta_max, as_usize);
+        set!(window, as_usize);
+        set!(chunk_size, as_usize);
+        set!(adaptive_chunk, as_bool);
+        set!(adaptive_delta, as_bool);
+        set!(explore_every, as_usize);
+        set!(kl_beta, as_f64);
+        set!(seed, as_u64);
+        set!(max_new_tokens, as_usize);
+        set!(ppo_epochs, as_usize);
+        set!(staleness, as_usize);
+        set!(reward_model_weight, as_f64);
+        set!(log_every, as_usize);
+        if let Some(v) = get("task") {
+            cfg.task = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("out_dir") {
+            cfg.out_dir = Some(v.as_str()?.to_string());
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str, overrides: &[String]) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut doc = parse::parse(&text)?;
+        parse::apply_overrides(&mut doc, overrides)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_overrides(overrides: &[String]) -> Result<Self> {
+        let mut doc: Doc = Default::default();
+        parse::apply_overrides(&mut doc, overrides)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.batch == 0 {
+            bail!("batch must be > 0");
+        }
+        if self.delta_min > self.delta_max {
+            bail!("delta_min {} > delta_max {}", self.delta_min, self.delta_max);
+        }
+        if !(self.delta_min..=self.delta_max).contains(&self.delta_init) {
+            bail!(
+                "delta_init {} outside [{}, {}]",
+                self.delta_init, self.delta_min, self.delta_max
+            );
+        }
+        if self.window == 0 {
+            bail!("window must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.reward_model_weight) {
+            bail!("reward_model_weight must be in [0,1]");
+        }
+        if self.mode == Mode::AsyncStale && self.staleness == 0 {
+            bail!("async-stale mode needs staleness >= 1");
+        }
+        match self.task.as_str() {
+            "arith" | "copy" | "sort" | "mixed" => {}
+            t => bail!("unknown task {t:?} (want arith|copy|sort|mixed)"),
+        }
+        Ok(())
+    }
+
+    /// Cross-check against the AOT manifest's static shapes.
+    pub fn validate_against_manifest(
+        &self,
+        ppo_batch: usize,
+        lanes: usize,
+        chunk_sizes: &[usize],
+        s_max: usize,
+        prompt_max: usize,
+    ) -> Result<()> {
+        if self.batch != ppo_batch {
+            bail!("config batch {} != manifest ppo_batch {ppo_batch}", self.batch);
+        }
+        if self.batch + self.delta_max > lanes {
+            bail!(
+                "batch {} + delta_max {} exceeds manifest lanes {lanes}",
+                self.batch, self.delta_max
+            );
+        }
+        if !chunk_sizes.contains(&self.chunk_size) {
+            bail!(
+                "chunk_size {} has no compiled executable (manifest has {chunk_sizes:?})",
+                self.chunk_size
+            );
+        }
+        if prompt_max + self.max_new_tokens > s_max {
+            bail!(
+                "prompt_max {prompt_max} + max_new_tokens {} exceeds s_max {s_max}",
+                self.max_new_tokens
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_with_overrides() {
+        let mut doc = parse::parse("[run]\nmode = \"trl\"\nsteps = 7").unwrap();
+        parse::apply_overrides(&mut doc, &["run.batch=8".into(), "run.seed=99".into()]).unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.mode, Mode::Sequential);
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn rejects_bad_delta_bounds() {
+        let cfg = TrainConfig { delta_init: 9, delta_max: 4, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = TrainConfig { delta_min: 5, delta_max: 4, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_mode_and_task() {
+        assert!(Mode::parse("warp-speed").is_err());
+        let cfg = TrainConfig { task: "cooking".into(), ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn manifest_cross_check() {
+        let cfg = TrainConfig::default();
+        cfg.validate_against_manifest(8, 12, &[8, 16, 32], 160, 24).unwrap();
+        assert!(cfg.validate_against_manifest(16, 12, &[8, 16, 32], 160, 24).is_err());
+        assert!(cfg.validate_against_manifest(8, 10, &[8, 16, 32], 160, 24).is_err());
+        assert!(cfg.validate_against_manifest(8, 12, &[64], 160, 24).is_err());
+        assert!(cfg.validate_against_manifest(8, 12, &[8, 16, 32], 100, 24).is_err());
+    }
+
+    #[test]
+    fn mode_capability_flags() {
+        assert!(Mode::Oppo.intra_enabled() && Mode::Oppo.inter_enabled());
+        assert!(!Mode::Sequential.intra_enabled() && !Mode::Sequential.inter_enabled());
+        assert!(Mode::OppoNoIntra.inter_enabled() && !Mode::OppoNoIntra.intra_enabled());
+        assert!(Mode::OppoNoInter.intra_enabled() && !Mode::OppoNoInter.inter_enabled());
+    }
+
+    #[test]
+    fn async_mode_needs_staleness() {
+        let cfg = TrainConfig { mode: Mode::AsyncStale, staleness: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+}
+
+#[cfg(test)]
+mod config_file_tests {
+    use super::*;
+
+    fn repo_config(name: &str) -> String {
+        format!("{}/configs/{name}", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn shipped_configs_all_parse_and_validate() {
+        for name in
+            ["oppo_default.toml", "trl_baseline.toml", "gsm8k_rule.toml", "async_stale.toml"]
+        {
+            let cfg = TrainConfig::load(&repo_config(name), &[]).unwrap_or_else(|e| {
+                panic!("configs/{name}: {e:#}");
+            });
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn cli_overrides_beat_file_values() {
+        let cfg = TrainConfig::load(
+            &repo_config("oppo_default.toml"),
+            &["run.steps=7".into(), "run.mode=\"no-intra\"".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.mode, Mode::OppoNoIntra);
+        assert_eq!(cfg.task, "mixed"); // untouched value survives
+    }
+
+    #[test]
+    fn gsm8k_config_is_rule_based() {
+        let cfg = TrainConfig::load(&repo_config("gsm8k_rule.toml"), &[]).unwrap();
+        assert_eq!(cfg.reward_model_weight, 0.0);
+        assert_eq!(cfg.task, "arith");
+    }
+}

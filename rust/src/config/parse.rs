@@ -1,0 +1,254 @@
+//! TOML-subset parser for run configs (serde/toml unavailable offline).
+//!
+//! Supported syntax — deliberately the subset our configs need:
+//!
+//! ```toml
+//! # comment
+//! top_key = 1
+//! [section]
+//! string = "hello"
+//! float = 2.5
+//! boolean = true
+//! list = [1, 2, 3]
+//! strings = ["a", "b"]
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A scalar or list value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    NumList(Vec<f64>),
+    StrList(Vec<String>),
+}
+
+impl Val {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Val::Num(x) => Ok(*x),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("expected non-negative integer, got {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_usize()? as u64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Val::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Val::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize_list(&self) -> Result<Vec<usize>> {
+        match self {
+            Val::NumList(xs) => xs
+                .iter()
+                .map(|&x| {
+                    if x < 0.0 || x.fract() != 0.0 {
+                        Err(anyhow!("expected integer list, got {x}"))
+                    } else {
+                        Ok(x as usize)
+                    }
+                })
+                .collect(),
+            _ => bail!("expected number list, got {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: `sections[""]` holds top-level keys.
+pub type Doc = BTreeMap<String, BTreeMap<String, Val>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut section = String::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let val = parse_val(value.trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // only strip # outside of quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_val(s: &str) -> Result<Val> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s == "true" {
+        return Ok(Val::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Val::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Val::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated list"))?;
+        let items: Vec<&str> =
+            inner.split(',').map(str::trim).filter(|x| !x.is_empty()).collect();
+        if items.is_empty() {
+            return Ok(Val::NumList(vec![]));
+        }
+        if items[0].starts_with('"') {
+            let mut out = Vec::new();
+            for item in items {
+                match parse_val(item)? {
+                    Val::Str(x) => out.push(x),
+                    v => bail!("mixed list: expected string, got {v:?}"),
+                }
+            }
+            return Ok(Val::StrList(out));
+        }
+        let mut out = Vec::new();
+        for item in items {
+            out.push(
+                item.parse::<f64>().map_err(|e| anyhow!("bad number {item:?} in list: {e}"))?,
+            );
+        }
+        return Ok(Val::NumList(out));
+    }
+    s.parse::<f64>().map(Val::Num).map_err(|e| anyhow!("bad value {s:?}: {e}"))
+}
+
+/// Apply `key=value` CLI overrides (`section.key=value` or bare `key=value`).
+pub fn apply_overrides(doc: &mut Doc, overrides: &[String]) -> Result<()> {
+    for ov in overrides {
+        let (path, value) = ov
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override {ov:?}: expected key=value"))?;
+        let val = parse_val(value.trim())?;
+        let (section, key) = match path.trim().split_once('.') {
+            Some((s, k)) => (s.to_string(), k.to_string()),
+            None => (String::new(), path.trim().to_string()),
+        };
+        doc.entry(section).or_default().insert(key, val);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            top = 5
+            [run]           # trailing comment
+            mode = "oppo"
+            steps = 100
+            lr = 2.5e-4
+            stream = true
+            chunks = [8, 16, 32]
+            names = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"].as_usize().unwrap(), 5);
+        assert_eq!(doc["run"]["mode"].as_str().unwrap(), "oppo");
+        assert_eq!(doc["run"]["steps"].as_usize().unwrap(), 100);
+        assert!((doc["run"]["lr"].as_f64().unwrap() - 2.5e-4).abs() < 1e-12);
+        assert!(doc["run"]["stream"].as_bool().unwrap());
+        assert_eq!(doc["run"]["chunks"].as_usize_list().unwrap(), vec![8, 16, 32]);
+        assert_eq!(*doc["run"].get("names").unwrap(), Val::StrList(vec!["a".into(), "b".into()]));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["k"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = [1, \"x\"]").is_err());
+        assert!(parse("k = zz").is_err());
+    }
+
+    #[test]
+    fn overrides_create_and_replace() {
+        let mut doc = parse("[run]\nsteps = 1").unwrap();
+        apply_overrides(
+            &mut doc,
+            &["run.steps=9".to_string(), "run.mode=\"trl\"".to_string(), "seed=3".to_string()],
+        )
+        .unwrap();
+        assert_eq!(doc["run"]["steps"].as_usize().unwrap(), 9);
+        assert_eq!(doc["run"]["mode"].as_str().unwrap(), "trl");
+        assert_eq!(doc[""]["seed"].as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let doc = parse("k = 1.5").unwrap();
+        assert!(doc[""]["k"].as_usize().is_err());
+        assert!(doc[""]["k"].as_str().is_err());
+        assert!(doc[""]["k"].as_bool().is_err());
+    }
+}

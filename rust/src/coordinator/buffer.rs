@@ -1,0 +1,298 @@
+//! Algorithm 1's sequence buffer: a FIFO holding up to `B + Δ` in-flight
+//! sequences, each owning one generation lane for its whole life.
+//!
+//! Invariants (enforced here, property-tested in `tests/test_props.rs`):
+//!
+//! * `len() <= capacity()` at all times; capacity is `B + Δ` and tracks Δ
+//!   as the controller moves it (shrinking capacity never evicts — it only
+//!   stops refills, exactly like `Buffer.set_capacity` in Alg. 1).
+//! * every buffered sequence owns a distinct lane `< lanes`;
+//! * PPO batches take the **first B finished** sequences in completion
+//!   order (completion order, not enqueue order — that is the whole point
+//!   of inter-step overlap: fast completions are not blocked on stragglers);
+//! * unfinished sequences keep their lane and state across steps
+//!   ("partial work is preserved", §3.2).
+
+use anyhow::{bail, Result};
+
+use crate::data::tasks::Prompt;
+use crate::model::sequence::{SeqPhase, Sequence};
+
+/// The `B + Δ` sequence buffer.
+pub struct SeqBuffer {
+    seqs: Vec<Sequence>,
+    capacity: usize,
+    lanes: usize,
+    lane_free: Vec<bool>,
+    /// monotonically increasing completion stamp
+    next_completion: u64,
+    /// completion stamp per buffered sequence (u64::MAX = unfinished)
+    completed_at: Vec<u64>,
+}
+
+impl SeqBuffer {
+    pub fn new(capacity: usize, lanes: usize) -> Self {
+        assert!(capacity <= lanes, "capacity {capacity} > lanes {lanes}");
+        Self {
+            seqs: Vec::new(),
+            capacity,
+            lanes,
+            lane_free: vec![true; lanes],
+            next_completion: 0,
+            completed_at: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Alg. 1 line 25: `Buffer.set_capacity(B + Δ)`.  Never evicts.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        assert!(capacity <= self.lanes);
+        self.capacity = capacity;
+    }
+
+    /// Has room for another sequence right now?
+    pub fn has_room(&self) -> bool {
+        self.seqs.len() < self.capacity
+    }
+
+    /// Alg. 1 lines 3-5: admit a prompt, assigning it a free lane.
+    /// Returns the lane index.
+    pub fn add(&mut self, prompt: Prompt, step: u64) -> Result<usize> {
+        if !self.has_room() {
+            bail!("buffer full ({}/{})", self.seqs.len(), self.capacity);
+        }
+        let lane = self
+            .lane_free
+            .iter()
+            .position(|&f| f)
+            .ok_or_else(|| anyhow::anyhow!("no free lane (capacity bug)"))?;
+        self.lane_free[lane] = false;
+        self.seqs.push(Sequence::new(prompt, lane, step));
+        self.completed_at.push(u64::MAX);
+        Ok(lane)
+    }
+
+    /// All sequences still generating (Alg. 1's `get_unfinished`).
+    pub fn unfinished(&self) -> impl Iterator<Item = &Sequence> {
+        self.seqs.iter().filter(|s| !s.is_finished())
+    }
+
+    pub fn unfinished_count(&self) -> usize {
+        self.seqs.iter().filter(|s| !s.is_finished()).count()
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.seqs.iter().filter(|s| s.is_finished()).count()
+    }
+
+    /// Newly queued sequences that still need prompt prefill.
+    pub fn queued_lanes(&self) -> Vec<usize> {
+        self.seqs
+            .iter()
+            .filter(|s| s.phase == SeqPhase::Queued)
+            .map(|s| s.lane)
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Sequence> {
+        self.seqs.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Sequence> {
+        self.seqs.iter_mut()
+    }
+
+    pub fn by_lane_mut(&mut self, lane: usize) -> Option<&mut Sequence> {
+        self.seqs.iter_mut().find(|s| s.lane == lane)
+    }
+
+    pub fn by_lane(&self, lane: usize) -> Option<&Sequence> {
+        self.seqs.iter().find(|s| s.lane == lane)
+    }
+
+    /// Mark a sequence finished (stamps completion order).
+    pub fn mark_finished(&mut self, lane: usize) {
+        let stamp = self.next_completion;
+        if let Some(idx) = self.seqs.iter().position(|s| s.lane == lane) {
+            debug_assert!(self.seqs[idx].is_finished());
+            if self.completed_at[idx] == u64::MAX {
+                self.completed_at[idx] = stamp;
+                self.next_completion += 1;
+            }
+        }
+    }
+
+    /// Alg. 1 line 17: `ppo_batch ← finished[:B]` — take (remove) the first
+    /// `b` finished sequences in completion order, freeing their lanes.
+    /// `current_step` stamps each sequence's deferral (Table 2).
+    /// Returns fewer than `b` only if fewer are finished.
+    pub fn take_finished(&mut self, b: usize, current_step: u64) -> Vec<Sequence> {
+        let mut finished: Vec<(u64, usize)> = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_finished())
+            .map(|(i, s)| {
+                debug_assert_ne!(self.completed_at[i], u64::MAX, "finished w/o stamp: lane {}", s.lane);
+                (self.completed_at[i], i)
+            })
+            .collect();
+        finished.sort();
+        let mut selected: Vec<(u64, usize)> = finished.into_iter().take(b).collect();
+        // remove highest indices first (swap_remove-safe), then restore
+        // completion-stamp order
+        selected.sort_unstable_by(|a, b| b.1.cmp(&a.1));
+        let mut out: Vec<(u64, Sequence)> = Vec::with_capacity(selected.len());
+        for (stamp, idx) in selected {
+            let mut seq = self.seqs.swap_remove(idx);
+            self.completed_at.swap_remove(idx);
+            self.lane_free[seq.lane] = true;
+            seq.deferred_steps = current_step.saturating_sub(seq.enqueued_step);
+            out.push((stamp, seq));
+        }
+        out.sort_by_key(|(stamp, _)| *stamp);
+        out.into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// Consistency check used by the property tests.  Note: `len` may
+    /// transiently exceed `capacity` right after the Δ controller shrinks it
+    /// (Alg. 1 never evicts); the capacity bound is an *admission* invariant,
+    /// checked in `add`.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = vec![false; self.lanes];
+        for s in &self.seqs {
+            if s.lane >= self.lanes {
+                bail!("lane {} out of range", s.lane);
+            }
+            if seen[s.lane] {
+                bail!("duplicate lane {}", s.lane);
+            }
+            seen[s.lane] = true;
+            if self.lane_free[s.lane] {
+                bail!("occupied lane {} marked free", s.lane);
+            }
+        }
+        let occupied = seen.iter().filter(|&&x| x).count();
+        let not_free = self.lane_free.iter().filter(|&&f| !f).count();
+        if occupied != not_free {
+            bail!("lane accounting mismatch: {occupied} occupied vs {not_free} not-free");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::TaskKind;
+
+    fn prompt(id: u64) -> Prompt {
+        Prompt {
+            kind: TaskKind::Arith,
+            text: "1+1=".into(),
+            tokens: vec![1, 5, 40, 5, 44],
+            answer: "2".into(),
+            id,
+        }
+    }
+
+    fn finish(buf: &mut SeqBuffer, lane: usize) {
+        let s = buf.by_lane_mut(lane).unwrap();
+        s.phase = SeqPhase::Generating;
+        s.push_token(2, 0.0, 0.0, 2, 8, 100);
+        buf.mark_finished(lane);
+    }
+
+    #[test]
+    fn fill_to_capacity_then_reject() {
+        let mut buf = SeqBuffer::new(3, 4);
+        for i in 0..3 {
+            buf.add(prompt(i), 0).unwrap();
+        }
+        assert!(!buf.has_room());
+        assert!(buf.add(prompt(9), 0).is_err());
+        buf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn take_finished_respects_completion_order_not_enqueue_order() {
+        let mut buf = SeqBuffer::new(4, 4);
+        for i in 0..4 {
+            buf.add(prompt(i), 0).unwrap();
+        }
+        // finish in order 2, 0, 3 (lane == enqueue index here)
+        finish(&mut buf, 2);
+        finish(&mut buf, 0);
+        finish(&mut buf, 3);
+        let batch = buf.take_finished(2, 1);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].prompt.id, 2); // completed first
+        assert_eq!(batch[1].prompt.id, 0);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.finished_count(), 1); // id 3 still buffered
+        buf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lanes_are_recycled() {
+        let mut buf = SeqBuffer::new(2, 2);
+        buf.add(prompt(0), 0).unwrap();
+        buf.add(prompt(1), 0).unwrap();
+        finish(&mut buf, 0);
+        let taken = buf.take_finished(1, 0);
+        assert_eq!(taken.len(), 1);
+        let lane = buf.add(prompt(2), 1).unwrap();
+        assert_eq!(lane, 0); // freed lane reused
+        buf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deferral_stamping() {
+        let mut buf = SeqBuffer::new(2, 2);
+        buf.add(prompt(0), 5).unwrap();
+        finish(&mut buf, 0);
+        let batch = buf.take_finished(1, 7);
+        assert_eq!(batch[0].deferred_steps, 2);
+    }
+
+    #[test]
+    fn shrinking_capacity_does_not_evict() {
+        let mut buf = SeqBuffer::new(4, 4);
+        for i in 0..4 {
+            buf.add(prompt(i), 0).unwrap();
+        }
+        buf.set_capacity(2);
+        assert_eq!(buf.len(), 4); // over capacity is allowed transiently
+        assert!(!buf.has_room());
+        // invariant check tolerates the transient only via take; here we
+        // simply verify nothing was dropped and no new adds are admitted
+        assert!(buf.add(prompt(9), 0).is_err());
+    }
+
+    #[test]
+    fn take_more_than_finished_returns_what_exists() {
+        let mut buf = SeqBuffer::new(3, 3);
+        for i in 0..3 {
+            buf.add(prompt(i), 0).unwrap();
+        }
+        finish(&mut buf, 1);
+        let batch = buf.take_finished(3, 0);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].prompt.id, 1);
+    }
+}

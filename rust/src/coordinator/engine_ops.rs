@@ -1,0 +1,503 @@
+//! Typed wrappers over the AOT entry points + the device-resident state
+//! they thread.  One `Ops` instance owns the actor/reference parameters and
+//! Adam state; the reward worker owns its own [`RewardOps`] (separate
+//! thread, separate params, shared engine — PJRT executes concurrently,
+//! which is what realizes intra-step overlap on this backend).
+//!
+//! Data movement policy (EXPERIMENTS.md §Perf): params, Adam moments, token
+//! buffers, and KV caches live on device for the whole run; per chunk only
+//! `pos`/`live` (G ints), the RNG key, and the sampled tokens / log-probs /
+//! values / scores ([G,C] each) cross the host boundary.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+use xla::PjRtBuffer;
+
+use crate::model::rollout::PpoBatch;
+use crate::runtime::{Engine, ParamSet};
+
+/// Device-resident actor generation state for the G lanes.
+pub struct ActorState {
+    /// token buffer [G, S] i32
+    pub tokens: PjRtBuffer,
+    /// per-layer KV caches, [k0, v0, k1, v1, ...] each [G, H, S, hd] f32
+    pub kv: Vec<PjRtBuffer>,
+}
+
+/// Device-resident reward-model streaming state.
+pub struct RewardState {
+    pub kv: Vec<PjRtBuffer>,
+}
+
+/// Output of one `actor_generate_chunk` call (host side).
+pub struct ChunkOut {
+    /// sampled tokens, row-major [G, C]
+    pub tokens: Vec<i32>,
+    /// log-probs of the sampled tokens [G, C]
+    pub logps: Vec<f32>,
+    /// value estimates [G, C]
+    pub values: Vec<f32>,
+}
+
+/// Actor-side ops: generation, reference scoring, PPO/DPO updates.
+pub struct Ops {
+    engine: Arc<Engine>,
+    actor: ParamSet,
+    refm: ParamSet,
+    adam_m: ParamSet,
+    adam_v: ParamSet,
+    rng_counter: u64,
+    seed: u64,
+}
+
+impl Ops {
+    pub fn new(engine: Arc<Engine>, seed: u64) -> Result<Self> {
+        let actor = ParamSet::load(&engine, "actor")?;
+        let refm = ParamSet::load(&engine, "ref")?;
+        let adam_m = ParamSet::zeros_like(&engine)?;
+        let adam_v = ParamSet::zeros_like(&engine)?;
+        Ok(Self { engine, actor, refm, adam_m, adam_v, rng_counter: 0, seed })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    fn g(&self) -> usize {
+        self.engine.manifest().shape.lanes
+    }
+
+    fn s(&self) -> usize {
+        self.engine.manifest().shape.s_max
+    }
+
+    fn n_kv(&self) -> usize {
+        2 * self.engine.manifest().shape.n_layers
+    }
+
+    /// Fresh actor state: zero KV caches + an uploaded token buffer.
+    pub fn fresh_actor_state(&self, tokens_host: &[i32]) -> Result<ActorState> {
+        let (g, s) = (self.g(), self.s());
+        ensure!(tokens_host.len() == g * s);
+        let shape = self.engine.manifest().shape.kv_shape(g);
+        let kv = (0..self.n_kv())
+            .map(|_| self.engine.zeros_f32(&shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ActorState { tokens: self.engine.upload_i32(tokens_host, &[g, s])?, kv })
+    }
+
+    /// `actor_prefill`: re-prefill the lanes with `reset != 0` from the
+    /// (host-authoritative) token buffer; other lanes keep their KV rows
+    /// bit-identical.  Replaces the state's token buffer wholesale — the
+    /// host mirror is the source of truth at reset boundaries.
+    pub fn actor_prefill(
+        &self,
+        state: &mut ActorState,
+        tokens_host: &[i32],
+        prompt_len: &[i32],
+        reset: &[i32],
+    ) -> Result<()> {
+        let (g, s) = (self.g(), self.s());
+        ensure!(tokens_host.len() == g * s && prompt_len.len() == g && reset.len() == g);
+        let tokens = self.engine.upload_i32(tokens_host, &[g, s])?;
+        let plen = self.engine.upload_i32(prompt_len, &[g])?;
+        let rst = self.engine.upload_i32(reset, &[g])?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.actor.len() + 3 + self.n_kv());
+        args.extend(self.actor.bufs());
+        args.push(&tokens);
+        args.push(&plen);
+        args.push(&rst);
+        args.extend(state.kv.iter());
+        let outs = self.engine.execute("actor_prefill", &args)?;
+        state.kv = outs;
+        state.tokens = tokens;
+        Ok(())
+    }
+
+    /// `actor_generate_chunk_c{c}`: decode + sample `c` tokens on every
+    /// live lane.  `pos`/`live` are host-managed (tiny uploads); the token
+    /// buffer and KV caches stay on device and are swapped in place.
+    pub fn generate_chunk(
+        &mut self,
+        state: &mut ActorState,
+        c: usize,
+        pos: &[i32],
+        live: &[i32],
+    ) -> Result<ChunkOut> {
+        let g = self.g();
+        ensure!(pos.len() == g && live.len() == g);
+        let entry = format!("actor_generate_chunk_c{c}");
+        let pos_b = self.engine.upload_i32(pos, &[g])?;
+        let live_b = self.engine.upload_i32(live, &[g])?;
+        // fresh threefry key per call: (seed, counter) is unique
+        self.rng_counter += 1;
+        let key: [u32; 2] = [self.seed as u32, self.rng_counter as u32];
+        let key_b = self.engine.upload_u32(&key, &[2])?;
+
+        let n_kv = self.n_kv();
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.actor.len() + 4 + n_kv);
+        args.extend(self.actor.bufs());
+        args.push(&state.tokens);
+        args.push(&pos_b);
+        args.push(&live_b);
+        args.extend(state.kv.iter());
+        args.push(&key_b);
+        let mut outs = self.engine.execute(&entry, &args)?;
+
+        // outputs: tokens', pos', kv' ×n_kv, out_tok, logp, value
+        let values_b = outs.pop().unwrap();
+        let logps_b = outs.pop().unwrap();
+        let toks_b = outs.pop().unwrap();
+        let kv: Vec<PjRtBuffer> = outs.drain(2..).collect();
+        debug_assert_eq!(kv.len(), n_kv);
+        let _pos_out = outs.pop().unwrap(); // pos is host-managed
+        state.tokens = outs.pop().unwrap();
+        state.kv = kv;
+
+        Ok(ChunkOut {
+            tokens: self.engine.download_i32(&toks_b)?,
+            logps: self.engine.download_f32(&logps_b)?,
+            values: self.engine.download_f32(&values_b)?,
+        })
+    }
+
+    /// `ref_logprobs` over a PPO batch's dense tokens — returns `[B, S]`.
+    pub fn ref_logprobs(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let b = self.engine.manifest().shape.ppo_batch;
+        let s = self.s();
+        ensure!(tokens.len() == b * s);
+        let toks = self.engine.upload_i32(tokens, &[b, s])?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.refm.len() + 1);
+        args.extend(self.refm.bufs());
+        args.push(&toks);
+        let outs = self.engine.execute("ref_logprobs", &args)?;
+        self.engine.download_f32(&outs[0])
+    }
+
+    /// `gae` (the L1 Pallas kernel's artifact): rewards/values/mask →
+    /// advantage + return buffers, left on device for `ppo_update`.
+    pub fn gae(
+        &self,
+        rewards: &[f32],
+        values: &[f32],
+        mask: &[f32],
+    ) -> Result<(PjRtBuffer, PjRtBuffer)> {
+        let b = self.engine.manifest().shape.ppo_batch;
+        let s = self.s();
+        ensure!(rewards.len() == b * s && values.len() == b * s && mask.len() == b * s);
+        let r = self.engine.upload_f32(rewards, &[b, s])?;
+        let v = self.engine.upload_f32(values, &[b, s])?;
+        let m = self.engine.upload_f32(mask, &[b, s])?;
+        let mut outs = self.engine.execute("gae", &[&r, &v, &m])?;
+        let ret = outs.pop().unwrap();
+        let adv = outs.pop().unwrap();
+        Ok((adv, ret))
+    }
+
+    /// `ppo_update`: one optimizer step on the batch (Eq. 2 + Adam).
+    /// Swaps the new params/moments in place; returns the 6 training stats.
+    pub fn ppo_update(
+        &mut self,
+        batch: &PpoBatch,
+        adv: &PjRtBuffer,
+        ret: &PjRtBuffer,
+        step: i32,
+    ) -> Result<[f32; 6]> {
+        let (b, s) = (batch.b, batch.s);
+        ensure!(b == self.engine.manifest().shape.ppo_batch && s == self.s());
+        let toks = self.engine.upload_i32(&batch.tokens, &[b, s])?;
+        let mask = self.engine.upload_f32(&batch.mask, &[b, s])?;
+        let old_logp = self.engine.upload_f32(&batch.old_logp, &[b, s])?;
+        let step_b = self.engine.scalar_i32(step)?;
+
+        let np = self.actor.len();
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(3 * np + 6);
+        args.extend(self.actor.bufs());
+        args.extend(self.adam_m.bufs());
+        args.extend(self.adam_v.bufs());
+        args.push(&toks);
+        args.push(&mask);
+        args.push(&old_logp);
+        args.push(adv);
+        args.push(ret);
+        args.push(&step_b);
+        let mut outs = self.engine.execute("ppo_update", &args)?;
+
+        let stats_b = outs.pop().unwrap();
+        let v: Vec<PjRtBuffer> = outs.drain(2 * np..).collect();
+        let m: Vec<PjRtBuffer> = outs.drain(np..).collect();
+        let p: Vec<PjRtBuffer> = outs;
+        self.actor = ParamSet::from_bufs(&self.engine, p)?;
+        self.adam_m = ParamSet::from_bufs(&self.engine, m)?;
+        self.adam_v = ParamSet::from_bufs(&self.engine, v)?;
+
+        let stats = self.engine.download_f32(&stats_b)?;
+        ensure!(stats.len() == 6);
+        Ok([stats[0], stats[1], stats[2], stats[3], stats[4], stats[5]])
+    }
+
+    /// `dpo_update`: one DPO step on B (chosen, rejected) pairs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dpo_update(
+        &mut self,
+        chosen: &[i32],
+        rejected: &[i32],
+        mask_c: &[f32],
+        mask_r: &[f32],
+        ref_c: &[f32],
+        ref_r: &[f32],
+        step: i32,
+    ) -> Result<[f32; 4]> {
+        let b = self.engine.manifest().shape.ppo_batch;
+        let s = self.s();
+        ensure!(chosen.len() == b * s && rejected.len() == b * s);
+        ensure!(ref_c.len() == b && ref_r.len() == b);
+        let ch = self.engine.upload_i32(chosen, &[b, s])?;
+        let rj = self.engine.upload_i32(rejected, &[b, s])?;
+        let mc = self.engine.upload_f32(mask_c, &[b, s])?;
+        let mr = self.engine.upload_f32(mask_r, &[b, s])?;
+        let rc = self.engine.upload_f32(ref_c, &[b])?;
+        let rr = self.engine.upload_f32(ref_r, &[b])?;
+        let step_b = self.engine.scalar_i32(step)?;
+
+        let np = self.actor.len();
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(3 * np + 7);
+        args.extend(self.actor.bufs());
+        args.extend(self.adam_m.bufs());
+        args.extend(self.adam_v.bufs());
+        for b in [&ch, &rj, &mc, &mr, &rc, &rr, &step_b] {
+            args.push(b);
+        }
+        let mut outs = self.engine.execute("dpo_update", &args)?;
+        let stats_b = outs.pop().unwrap();
+        let v: Vec<PjRtBuffer> = outs.drain(2 * np..).collect();
+        let m: Vec<PjRtBuffer> = outs.drain(np..).collect();
+        self.actor = ParamSet::from_bufs(&self.engine, outs)?;
+        self.adam_m = ParamSet::from_bufs(&self.engine, m)?;
+        self.adam_v = ParamSet::from_bufs(&self.engine, v)?;
+        let stats = self.engine.download_f32(&stats_b)?;
+        ensure!(stats.len() == 4);
+        Ok([stats[0], stats[1], stats[2], stats[3]])
+    }
+
+    /// Download a named actor parameter (tests / eval).
+    pub fn actor_param(&self, name: &str) -> Result<Vec<f32>> {
+        self.actor.download(&self.engine, name)
+    }
+}
+
+/// Reward-model ops (owned by the reward worker thread).
+pub struct RewardOps {
+    engine: Arc<Engine>,
+    reward: ParamSet,
+}
+
+impl RewardOps {
+    pub fn new(engine: Arc<Engine>) -> Result<Self> {
+        let reward = ParamSet::load(&engine, "reward")?;
+        Ok(Self { engine, reward })
+    }
+
+    fn g(&self) -> usize {
+        self.engine.manifest().shape.lanes
+    }
+
+    pub fn fresh_state(&self) -> Result<RewardState> {
+        let g = self.g();
+        let shape = self.engine.manifest().shape.kv_shape(g);
+        let n = 2 * self.engine.manifest().shape.n_layers;
+        let kv = (0..n).map(|_| self.engine.zeros_f32(&shape)).collect::<Result<Vec<_>>>()?;
+        Ok(RewardState { kv })
+    }
+
+    /// `reward_prefill_chunk_c{c}` (or its `_pallas_` flavour): incremental
+    /// prefill of one streamed chunk; returns the per-position scores [G, C].
+    pub fn prefill_chunk(
+        &self,
+        state: &mut RewardState,
+        entry: &str,
+        chunk: &[i32],
+        start: &[i32],
+        n_valid: &[i32],
+    ) -> Result<Vec<f32>> {
+        let g = self.g();
+        let c = chunk.len() / g;
+        ensure!(chunk.len() == g * c && start.len() == g && n_valid.len() == g);
+        let s_max = self.engine.manifest().shape.s_max;
+        for (lane, (&st, &nv)) in start.iter().zip(n_valid).enumerate() {
+            ensure!(
+                nv == 0 || (st as usize + c) <= s_max,
+                "lane {lane}: chunk [{st}, {st}+{c}) would clamp against s_max {s_max}"
+            );
+        }
+        let ch = self.engine.upload_i32(chunk, &[g, c])?;
+        let st = self.engine.upload_i32(start, &[g])?;
+        let nv = self.engine.upload_i32(n_valid, &[g])?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.reward.len() + 3 + state.kv.len());
+        args.extend(self.reward.bufs());
+        args.push(&ch);
+        args.push(&st);
+        args.push(&nv);
+        args.extend(state.kv.iter());
+        let mut outs = self.engine.execute(entry, &args)?;
+        let scores_b = outs.pop().unwrap();
+        state.kv = outs;
+        self.engine.download_f32(&scores_b)
+    }
+
+    /// `reward_score_full`: monolithic scoring (baselines + equivalence
+    /// oracle).  `last_idx[i]` is the index of sequence i's final token.
+    pub fn score_full(&self, tokens: &[i32], last_idx: &[i32]) -> Result<Vec<f32>> {
+        let g = self.g();
+        let s = self.engine.manifest().shape.s_max;
+        ensure!(tokens.len() == g * s && last_idx.len() == g);
+        let toks = self.engine.upload_i32(tokens, &[g, s])?;
+        let idx = self.engine.upload_i32(last_idx, &[g])?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.reward.len() + 2);
+        args.extend(self.reward.bufs());
+        args.push(&toks);
+        args.push(&idx);
+        let outs = self.engine.execute("reward_score_full", &args)?;
+        self.engine.download_f32(&outs[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("manifest.json")
+            .exists()
+            .then(|| Arc::new(Engine::load(dir).unwrap()))
+    }
+
+    #[test]
+    fn generate_chunk_roundtrip_and_determinism() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest().shape.clone();
+        let (g, s) = (m.lanes, m.s_max);
+        let c = m.chunk_sizes[0];
+
+        // a trivial prompt in every lane: BOS + "1+1="
+        let tok = crate::data::Tokenizer::builtin(m.vocab);
+        let mut prompt = vec![1i32];
+        prompt.extend(tok.encode("1+1=").unwrap());
+        let plen = prompt.len();
+        let mut tokens = vec![0i32; g * s];
+        for lane in 0..g {
+            tokens[lane * s..lane * s + plen].copy_from_slice(&prompt);
+        }
+        let run = |seed: u64| -> (Vec<i32>, Vec<f32>) {
+            let mut ops = Ops::new(e.clone(), seed).unwrap();
+            let mut state = ops.fresh_actor_state(&tokens).unwrap();
+            ops.actor_prefill(&mut state, &tokens, &vec![plen as i32; g], &vec![1; g]).unwrap();
+            let pos = vec![plen as i32; g];
+            let live = vec![1i32; g];
+            let out = ops.generate_chunk(&mut state, c, &pos, &live).unwrap();
+            (out.tokens, out.logps)
+        };
+        let (t1, l1) = run(7);
+        let (t2, l2) = run(7);
+        let (t3, _) = run(8);
+        assert_eq!(t1.len(), g * c);
+        assert_eq!(t1, t2, "same seed must generate identical tokens");
+        assert_eq!(l1, l2);
+        assert_ne!(t1, t3, "different seeds should diverge");
+        // log-probs must be valid probabilities
+        assert!(l1.iter().all(|&x| x <= 0.0 && x > -30.0));
+    }
+
+    #[test]
+    fn reward_streaming_matches_full_scoring() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest().shape.clone();
+        let (g, s) = (m.lanes, m.s_max);
+        let c = m.chunk_sizes[1];
+        let rops = RewardOps::new(e.clone()).unwrap();
+
+        // ragged synthetic sequences
+        let mut tokens = vec![0i32; g * s];
+        let mut lens = vec![0i32; g];
+        for lane in 0..g {
+            let len = 5 + 7 * lane % (2 * c) + 3;
+            lens[lane] = len as i32;
+            for t in 0..len {
+                tokens[lane * s + t] = 3 + ((lane * 7 + t * 13) % (m.vocab - 3)) as i32;
+            }
+        }
+        let last_idx: Vec<i32> = lens.iter().map(|&l| l - 1).collect();
+        let full = rops.score_full(&tokens, &last_idx).unwrap();
+
+        // streamed in chunks of c
+        let entry = format!("reward_prefill_chunk_c{c}");
+        let mut state = rops.fresh_state().unwrap();
+        let mut got = vec![f32::NAN; g];
+        let max_len = *lens.iter().max().unwrap() as usize;
+        let mut startpos = 0usize;
+        while startpos < max_len {
+            let mut chunk = vec![0i32; g * c];
+            let mut starts = vec![0i32; g];
+            let mut nvalid = vec![0i32; g];
+            for lane in 0..g {
+                starts[lane] = startpos as i32;
+                let remain = (lens[lane] as usize).saturating_sub(startpos);
+                let nv = remain.min(c);
+                nvalid[lane] = nv as i32;
+                for j in 0..nv {
+                    chunk[lane * c + j] = tokens[lane * s + startpos + j];
+                }
+            }
+            let scores = rops.prefill_chunk(&mut state, &entry, &chunk, &starts, &nvalid).unwrap();
+            for lane in 0..g {
+                let fin = lens[lane] as usize;
+                if fin > startpos && fin <= startpos + c {
+                    got[lane] = scores[lane * c + (fin - 1 - startpos)];
+                }
+            }
+            startpos += c;
+        }
+        for lane in 0..g {
+            assert!(
+                (got[lane] - full[lane]).abs() < 2e-3,
+                "lane {lane}: streamed {} vs full {}",
+                got[lane],
+                full[lane]
+            );
+        }
+    }
+
+    #[test]
+    fn pallas_flavour_matches_jnp_flavour() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest().shape.clone();
+        let Some((pallas_entry, c)) = e
+            .manifest()
+            .pallas_reward_entry()
+            .map(|(n, c)| (n.to_string(), c))
+        else {
+            return;
+        };
+        let (g, s) = (m.lanes, m.s_max);
+        let rops = RewardOps::new(e.clone()).unwrap();
+        let jnp_entry = format!("reward_prefill_chunk_c{c}");
+
+        let mut chunk = vec![0i32; g * c];
+        for (i, t) in chunk.iter_mut().enumerate() {
+            *t = 3 + ((i * 11) % (m.vocab - 3)) as i32;
+        }
+        let starts = vec![0i32; g];
+        let nvalid = vec![c as i32; g];
+        let mut s1 = rops.fresh_state().unwrap();
+        let mut s2 = rops.fresh_state().unwrap();
+        let a = rops.prefill_chunk(&mut s1, &jnp_entry, &chunk, &starts, &nvalid).unwrap();
+        let b = rops.prefill_chunk(&mut s2, &pallas_entry, &chunk, &starts, &nvalid).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-3, "jnp {x} vs pallas {y}");
+        }
+        let _ = s; // silence unused when artifacts absent
+    }
+}

@@ -1,0 +1,24 @@
+//! The OPPO coordinator — the paper's Layer-3 contribution.
+//!
+//! * [`buffer`] — Algorithm 1's `B + Δ` FIFO sequence buffer;
+//! * [`delta`] — the dynamic Δ controller (Eq. 4 / Alg. 1 l.21-27);
+//! * [`chunkctl`] — the dynamic chunk-size controller (§3.1);
+//! * [`engine_ops`] — typed wrappers over the AOT entry points with
+//!   device-resident state;
+//! * [`worker`] — the reward-scoring thread (intra-step overlap);
+//! * [`scheduler`] — the training loop: OPPO, both ablations, the TRL-style
+//!   sequential baseline, and async staleness-k;
+//! * [`dpo`] — the DPO generalization (§4.3).
+
+pub mod buffer;
+pub mod chunkctl;
+pub mod delta;
+pub mod dpo;
+pub mod engine_ops;
+pub mod scheduler;
+pub mod worker;
+
+pub use buffer::SeqBuffer;
+pub use chunkctl::ChunkController;
+pub use delta::{DeltaController, Policy};
+pub use scheduler::OppoScheduler;

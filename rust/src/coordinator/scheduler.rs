@@ -1,0 +1,589 @@
+//! The OPPO training scheduler — Algorithm 1, plus every baseline the
+//! paper compares against, driven over real AOT-compiled compute.
+//!
+//! One [`OppoScheduler`] owns: the `B + Δ` sequence buffer, the actor-side
+//! device state, the reward worker thread (intra-step overlap), the dynamic
+//! Δ and chunk-size controllers, and the PPO update path
+//! (`ref_logprobs → gae → ppo_update`).  [`config::Mode`] selects between
+//! full OPPO, the two ablation arms, the TRL-style sequential baseline, and
+//! the async staleness-k baseline.
+//!
+//! Step anatomy (mode = `Oppo`):
+//!
+//! ```text
+//! fill buffer to B+Δ ──► prefill new lanes                 (Alg.1 l.3-5)
+//! while |finished| < B:                                    (Alg.1 l.7)
+//!     submit chunk k-1 to reward worker   ┐ parallel       (Alg.1 l.12-15)
+//!     actor decodes chunk k               ┘
+//!     fold sampled tokens into sequences; mark EOS
+//! flush remaining reward streams
+//! ppo_batch = first B finished; Δ’s unfinished stay        (Alg.1 l.17-20)
+//! ref logprobs → rewards (+KL) → GAE → ppo_update
+//! Δ controller observes the reward window                  (Alg.1 l.21-27)
+//! chunk controller observes the step latency               (§3.1)
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{Mode, TrainConfig};
+use crate::coordinator::buffer::SeqBuffer;
+use crate::coordinator::chunkctl::ChunkController;
+use crate::coordinator::delta::{DeltaController, Policy};
+use crate::coordinator::engine_ops::{ActorState, ChunkOut, Ops};
+use crate::coordinator::worker::{Pick, RewardReq, RewardResp, RewardWorker};
+use crate::data::tasks::{rule_reward, Task};
+use crate::data::tokenizer::{Tokenizer, EOS};
+use crate::data::PromptSampler;
+use crate::metrics::{RunLog, StepRecord};
+use crate::model::rollout::{PpoBatch, RolloutAssembler};
+use crate::model::sequence::{SeqPhase, Sequence};
+use crate::ppo::gae::masked_mean;
+use crate::runtime::Engine;
+
+/// A fully-scored rollout waiting for its (possibly delayed) update —
+/// used by the async staleness-k baseline.
+struct PendingUpdate {
+    batch: PpoBatch,
+}
+
+/// The OPPO coordinator over real compute.
+pub struct OppoScheduler {
+    cfg: TrainConfig,
+    engine: Arc<Engine>,
+    ops: Ops,
+    worker: RewardWorker,
+    sampler: PromptSampler,
+    tokenizer: Tokenizer,
+    buffer: SeqBuffer,
+    delta_ctl: DeltaController,
+    chunk_ctl: ChunkController,
+    assembler: RolloutAssembler,
+    actor_state: ActorState,
+    log: RunLog,
+    /// Adam step counter (1-based across the whole run)
+    update_count: i32,
+    /// staleness queue for `Mode::AsyncStale`
+    stale_queue: VecDeque<PendingUpdate>,
+    started: Instant,
+}
+
+impl OppoScheduler {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let engine = Arc::new(Engine::load(&cfg.artifacts_dir)?);
+        Self::with_engine(cfg, engine)
+    }
+
+    /// Share one engine across schedulers (mode-comparison tests/benches
+    /// avoid recompiling the artifacts per run).
+    pub fn with_engine(cfg: TrainConfig, engine: Arc<Engine>) -> Result<Self> {
+        cfg.validate()?;
+        let m = engine.manifest().shape.clone();
+        cfg.validate_against_manifest(
+            m.ppo_batch, m.lanes, &m.chunk_sizes, m.s_max, m.prompt_max,
+        )?;
+        let tokenizer = Tokenizer::from_manifest(&engine.manifest().tokenizer)?;
+        let task = Task::by_name(&cfg.task).context("unknown task")?;
+        let sampler = PromptSampler::new(task, tokenizer.clone(), m.prompt_max, cfg.seed);
+
+        let (delta_init, delta_min, delta_max) = if cfg.mode.inter_enabled() {
+            (cfg.delta_init, cfg.delta_min, cfg.delta_max)
+        } else {
+            (0, 0, 0) // sequential / no-inter: no overcommitment
+        };
+        let delta_policy = if cfg.adaptive_delta && cfg.mode.inter_enabled() {
+            Policy::Eq4
+        } else {
+            Policy::Fixed
+        };
+        let delta_ctl =
+            DeltaController::new(delta_init, delta_min, delta_max, cfg.window, delta_policy);
+
+        let probes = 1;
+        let adaptive_chunk = cfg.adaptive_chunk
+            && cfg.mode.intra_enabled()
+            && cfg.explore_every >= m.chunk_sizes.len() * probes;
+        let chunk_ctl = ChunkController::new(
+            m.chunk_sizes.clone(),
+            cfg.chunk_size,
+            cfg.explore_every.max(m.chunk_sizes.len() * probes),
+            probes,
+            adaptive_chunk,
+        );
+
+        let ops = Ops::new(engine.clone(), cfg.seed)?;
+        let worker = RewardWorker::spawn(engine.clone())?;
+        let actor_state = ops.fresh_actor_state(&vec![0i32; m.lanes * m.s_max])?;
+        let assembler = RolloutAssembler::new(m.s_max, cfg.kl_beta as f32);
+        let buffer = SeqBuffer::new(m.ppo_batch + delta_ctl.delta(), m.lanes);
+        let log = RunLog::new(cfg.mode.name(), &cfg.task, cfg.seed);
+
+        Ok(Self {
+            cfg,
+            engine,
+            ops,
+            worker,
+            sampler,
+            tokenizer,
+            buffer,
+            delta_ctl,
+            chunk_ctl,
+            assembler,
+            actor_state,
+            log,
+            update_count: 0,
+            stale_queue: VecDeque::new(),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn log(&self) -> &RunLog {
+        &self.log
+    }
+
+    pub fn delta(&self) -> usize {
+        self.delta_ctl.delta()
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk_ctl.chunk()
+    }
+
+    /// Run the configured number of PPO steps; returns the run log.
+    pub fn run(mut self) -> Result<RunLog> {
+        self.started = Instant::now();
+        for step in 0..self.cfg.steps as u64 {
+            let rec = self.run_step(step)?;
+            if self.cfg.log_every > 0 && step % self.cfg.log_every as u64 == 0 {
+                log::info!(
+                    "step {step}: score={:.3} Δ={} C={} wall={:.2}s finished={} deferred={}",
+                    rec.mean_score, rec.delta, rec.chunk, rec.wall_s, rec.finished, rec.deferred
+                );
+            }
+        }
+        if let Some(dir) = &self.cfg.out_dir {
+            let path = format!("{dir}/{}_{}.json", self.cfg.mode.name(), self.cfg.seed);
+            self.log.write_json(&path)?;
+        }
+        Ok(self.log)
+    }
+
+    /// One PPO step (Alg. 1's loop body) in the configured mode.
+    pub fn run_step(&mut self, step: u64) -> Result<StepRecord> {
+        let t0 = Instant::now();
+        let b = self.engine.manifest().shape.ppo_batch;
+        let chunk = self.chunk_ctl.chunk();
+
+        // ---- Stage 1: fill the buffer to B + Δ (Alg. 1 l.3-5) ----
+        self.buffer.set_capacity(b + self.delta_ctl.delta());
+        while self.buffer.has_room() {
+            let prompt = self.sampler.next();
+            self.buffer.add(prompt, step)?;
+        }
+        self.prefill_queued()?;
+
+        // ---- Stage 2: generation (+ intra-step streaming) ----
+        let gen_tokens = self.generation_loop(chunk, b)?;
+
+        // ---- Stage 3: PPO update with inter-step overlap (l.17-20) ----
+        if self.cfg.mode.intra_enabled() {
+            self.flush_streams(chunk)?;
+        }
+        let selected = self.buffer.take_finished(b, step);
+        ensure!(selected.len() == b, "only {} finished sequences (need {b})", selected.len());
+        let deferred_left = self.buffer.len();
+        for seq in &selected {
+            self.log.record_deferral(seq.deferred_steps);
+        }
+
+        let scores = self.score_batch(&selected)?;
+        let mean_score = scores.iter().sum::<f32>() / scores.len() as f32;
+
+        let train_stats = match self.cfg.mode {
+            Mode::AsyncStale => self.async_update(&selected, &scores)?,
+            _ => self.ppo_step(&selected, &scores)?,
+        };
+
+        // ---- dynamic control (Alg. 1 l.21-27 + §3.1) ----
+        let new_delta = self.delta_ctl.observe(step, mean_score as f64);
+        self.buffer.set_capacity(b + new_delta);
+        let wall = t0.elapsed().as_secs_f64();
+        self.chunk_ctl.observe_step(wall);
+
+        let rec = StepRecord {
+            step,
+            wall_s: wall,
+            elapsed_s: self.started.elapsed().as_secs_f64(),
+            mean_score: mean_score as f64,
+            delta: new_delta,
+            chunk,
+            finished: selected.len(),
+            deferred: deferred_left,
+            gen_tokens,
+            train_stats,
+            util: 0.0,
+        };
+        self.log.push(rec.clone());
+        Ok(rec)
+    }
+
+    // ------------------------------------------------------------------
+    // generation machinery
+    // ------------------------------------------------------------------
+
+    /// Rebuild the host-authoritative `[G, S]` token mirror.
+    fn host_tokens(&self) -> Vec<i32> {
+        let m = &self.engine.manifest().shape;
+        let mut out = vec![0i32; m.lanes * m.s_max];
+        for seq in self.buffer.iter() {
+            let row = seq.lane * m.s_max;
+            let toks = seq.full_tokens();
+            out[row..row + toks.len()].copy_from_slice(&toks);
+        }
+        out
+    }
+
+    /// Prompt-prefill all `Queued` lanes (selective reset, §3.2: existing
+    /// lanes' KV rows are untouched).
+    fn prefill_queued(&mut self) -> Result<()> {
+        let queued = self.buffer.queued_lanes();
+        if queued.is_empty() {
+            return Ok(());
+        }
+        let m = self.engine.manifest().shape.clone();
+        let tokens = self.host_tokens();
+        let mut prompt_len = vec![1i32; m.lanes];
+        let mut reset = vec![0i32; m.lanes];
+        for seq in self.buffer.iter() {
+            prompt_len[seq.lane] = seq.prompt_len as i32;
+        }
+        for &lane in &queued {
+            reset[lane] = 1;
+        }
+        self.ops.actor_prefill(&mut self.actor_state, &tokens, &prompt_len, &reset)?;
+        for seq in self.buffer.iter_mut() {
+            if seq.phase == SeqPhase::Queued {
+                seq.phase = SeqPhase::Generating;
+            }
+        }
+        Ok(())
+    }
+
+    /// Alg. 1 l.7-16: decode chunks until `target` sequences finished,
+    /// streaming the previous chunk to the reward worker in parallel.
+    fn generation_loop(&mut self, chunk: usize, target: usize) -> Result<usize> {
+        let m = self.engine.manifest().shape.clone();
+        let mut gen_tokens = 0usize;
+        loop {
+            if self.buffer.finished_count() >= target {
+                break;
+            }
+            let mut pos = vec![0i32; m.lanes];
+            let mut live = vec![0i32; m.lanes];
+            let mut any_live = false;
+            for seq in self.buffer.iter() {
+                pos[seq.lane] = seq.total_len() as i32;
+                if seq.phase == SeqPhase::Generating {
+                    live[seq.lane] = 1;
+                    any_live = true;
+                }
+            }
+            if !any_live {
+                break; // Alg. 1 l.9-11
+            }
+
+            // parallel do (Alg. 1 l.12-15): reward prefill of the previous
+            // chunk's tokens overlaps the actor's next decode chunk.
+            let mut pending = false;
+            if self.cfg.mode.intra_enabled() {
+                if let Some(req) = self.build_stream_request(chunk)? {
+                    self.worker.submit(req)?;
+                    pending = true;
+                }
+            }
+            let out = self.ops.generate_chunk(&mut self.actor_state, chunk, &pos, &live)?;
+            if pending {
+                self.apply_stream_response()?;
+            }
+            gen_tokens += self.process_chunk(&out, chunk)?;
+        }
+        Ok(gen_tokens)
+    }
+
+    /// Fold one decode chunk into the sequences; returns tokens accepted.
+    fn process_chunk(&mut self, out: &ChunkOut, chunk: usize) -> Result<usize> {
+        let m = self.engine.manifest().shape.clone();
+        let (eos, max_new, s_max) = (EOS, self.cfg.max_new_tokens, m.s_max);
+        let mut accepted = 0usize;
+        let mut newly_finished: Vec<usize> = Vec::new();
+        for seq in self.buffer.iter_mut() {
+            if seq.phase != SeqPhase::Generating {
+                continue;
+            }
+            let lane = seq.lane;
+            for j in 0..chunk {
+                let tok = out.tokens[lane * chunk + j];
+                let logp = out.logps[lane * chunk + j];
+                let value = out.values[lane * chunk + j];
+                accepted += 1;
+                if seq.push_token(tok, logp, value, eos, max_new, s_max) {
+                    newly_finished.push(lane);
+                    break; // tokens past EOS in this chunk are junk
+                }
+            }
+        }
+        for lane in newly_finished {
+            self.buffer.mark_finished(lane);
+        }
+        Ok(accepted)
+    }
+
+    /// Build the next incremental-prefill request: up to `chunk` unstreamed
+    /// tokens per lane, PAD-filled where idle.  Marks tokens as streamed.
+    fn build_stream_request(&mut self, chunk: usize) -> Result<Option<RewardReq>> {
+        let m = self.engine.manifest().shape.clone();
+        let mut buf = vec![0i32; m.lanes * chunk];
+        let mut start = vec![0i32; m.lanes];
+        let mut n_valid = vec![0i32; m.lanes];
+        let mut picks = Vec::new();
+        let mut any = false;
+        for seq in self.buffer.iter_mut() {
+            if seq.phase == SeqPhase::Queued {
+                continue;
+            }
+            let lane = seq.lane;
+            let total = seq.total_len();
+            let streamed = seq.reward_streamed;
+            start[lane] = streamed as i32;
+            let nv = total.saturating_sub(streamed).min(chunk);
+            if nv == 0 {
+                continue;
+            }
+            let full = seq.full_tokens();
+            for j in 0..nv {
+                buf[lane * chunk + j] = full[streamed + j];
+            }
+            n_valid[lane] = nv as i32;
+            if seq.is_finished() && streamed + nv == total {
+                picks.push(Pick { lane, idx_in_chunk: nv - 1 });
+            }
+            seq.reward_streamed += nv;
+            any = true;
+        }
+        if !any {
+            return Ok(None);
+        }
+        Ok(Some(RewardReq::Stream {
+            entry: format!("reward_prefill_chunk_c{chunk}"),
+            chunk: buf,
+            start,
+            n_valid,
+            picks,
+        }))
+    }
+
+    fn apply_stream_response(&mut self) -> Result<()> {
+        match self.worker.recv()? {
+            RewardResp::StreamScores(scores) => {
+                for (lane, score) in scores {
+                    if let Some(seq) = self.buffer.by_lane_mut(lane) {
+                        seq.rm_score = Some(score);
+                    }
+                }
+                Ok(())
+            }
+            other => bail!("unexpected reward response {other:?}"),
+        }
+    }
+
+    /// Drain any unstreamed tokens of finished sequences (end of Stage 2:
+    /// the reward model completes prefilling for the final chunk).
+    fn flush_streams(&mut self, chunk: usize) -> Result<()> {
+        loop {
+            let outstanding = self
+                .buffer
+                .iter()
+                .any(|s| s.is_finished() && (s.unstreamed() > 0 || s.rm_score.is_none()));
+            if !outstanding {
+                return Ok(());
+            }
+            match self.build_stream_request(chunk)? {
+                Some(req) => {
+                    self.worker.submit(req)?;
+                    self.apply_stream_response()?;
+                }
+                None => {
+                    // nothing left to stream but a score is missing — the
+                    // final token's chunk was streamed without its pick
+                    // (can't happen with the contiguous schedule)
+                    bail!("finished sequence lost its reward score");
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // scoring + updates
+    // ------------------------------------------------------------------
+
+    /// Blend rule reward with the reward-model score for each sequence.
+    fn score_batch(&mut self, seqs: &[Sequence]) -> Result<Vec<f32>> {
+        let m = self.engine.manifest().shape.clone();
+        let w = self.cfg.reward_model_weight;
+
+        // reward-model scores: streamed (intra modes) or monolithic
+        let rm_scores: Vec<f32> = if self.cfg.mode.intra_enabled() {
+            seqs.iter()
+                .map(|s| s.rm_score.context("missing streamed score").map(|x| x))
+                .collect::<Result<_>>()?
+        } else if w > 0.0 {
+            let mut tokens = vec![0i32; m.lanes * m.s_max];
+            let mut last_idx = vec![0i32; m.lanes];
+            for (i, seq) in seqs.iter().enumerate() {
+                let toks = seq.full_tokens();
+                tokens[i * m.s_max..i * m.s_max + toks.len()].copy_from_slice(&toks);
+                last_idx[i] = (toks.len() - 1) as i32;
+            }
+            self.worker.submit(RewardReq::ScoreFull { tokens, last_idx })?;
+            match self.worker.recv()? {
+                RewardResp::FullScores(all) => all[..seqs.len()].to_vec(),
+                other => bail!("unexpected reward response {other:?}"),
+            }
+        } else {
+            vec![0.0; seqs.len()]
+        };
+
+        Ok(seqs
+            .iter()
+            .zip(&rm_scores)
+            .map(|(seq, &rm)| {
+                let text = self.tokenizer.decode_until_eos(&seq.response, 0);
+                let rule = rule_reward(&seq.prompt.answer, &text) as f32;
+                crate::ppo::reward::blend_score(rm, rule, w)
+            })
+            .collect())
+    }
+
+    /// Standard (synchronous) PPO update on the selected batch.
+    fn ppo_step(&mut self, seqs: &[Sequence], scores: &[f32]) -> Result<[f32; 6]> {
+        let batch = self.assemble(seqs, scores)?;
+        self.apply_update(&batch)
+    }
+
+    fn assemble(&mut self, seqs: &[Sequence], scores: &[f32]) -> Result<PpoBatch> {
+        let refs: Vec<&Sequence> = seqs.iter().collect();
+        // reference log-probs over the dense batch tokens
+        let m = self.engine.manifest().shape.clone();
+        let mut tokens = vec![0i32; m.ppo_batch * m.s_max];
+        for (i, seq) in seqs.iter().enumerate() {
+            let t = seq.full_tokens();
+            tokens[i * m.s_max..i * m.s_max + t.len()].copy_from_slice(&t);
+        }
+        let ref_logp = self.ops.ref_logprobs(&tokens)?;
+        self.assembler.assemble(&refs, scores, &ref_logp)
+    }
+
+    fn apply_update(&mut self, batch: &PpoBatch) -> Result<[f32; 6]> {
+        let (adv, ret) = self.ops.gae(&batch.rewards, &batch.values, &batch.mask)?;
+        let mut stats = [0f32; 6];
+        for _ in 0..self.cfg.ppo_epochs.max(1) {
+            self.update_count += 1;
+            stats = self.ops.ppo_update(batch, &adv, &ret, self.update_count)?;
+        }
+        Ok(stats)
+    }
+
+    /// Async staleness-k baseline: enqueue the freshly-scored rollout, apply
+    /// the update from k steps ago (off-policy: its `old_logp` came from an
+    /// older actor — the convergence risk Figure 2c demonstrates).
+    fn async_update(&mut self, seqs: &[Sequence], scores: &[f32]) -> Result<[f32; 6]> {
+        let batch = self.assemble(seqs, scores)?;
+        self.stale_queue.push_back(PendingUpdate { batch });
+        if self.stale_queue.len() > self.cfg.staleness {
+            let pending = self.stale_queue.pop_front().unwrap();
+            self.apply_update(&pending.batch)
+        } else {
+            Ok([0.0; 6])
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // evaluation (Table 3 substitute)
+    // ------------------------------------------------------------------
+
+    /// Exact-match accuracy of the *current* policy on the held-out eval
+    /// set (fresh lanes; does not disturb the training buffer, but does
+    /// advance the sampling RNG).
+    pub fn eval_accuracy(&mut self, n: usize, eval_seed: u64) -> Result<f64> {
+        let prompts = self.sampler.eval_set(n, eval_seed);
+        let responses = self.generate_responses(&prompts)?;
+        let hits = prompts
+            .iter()
+            .zip(&responses)
+            .filter(|(p, r)| crate::data::tasks::exact_match(&p.answer, r))
+            .count();
+        Ok(hits as f64 / n.max(1) as f64)
+    }
+
+    /// One-shot generation for a list of prompts (eval / DPO), processed in
+    /// lane-sized groups with a fresh device state.
+    pub fn generate_responses(&mut self, prompts: &[crate::data::Prompt]) -> Result<Vec<String>> {
+        let m = self.engine.manifest().shape.clone();
+        let mut out = Vec::with_capacity(prompts.len());
+        for group in prompts.chunks(m.lanes) {
+            let mut tokens = vec![0i32; m.lanes * m.s_max];
+            let mut prompt_len = vec![1i32; m.lanes];
+            for (lane, p) in group.iter().enumerate() {
+                tokens[lane * m.s_max..lane * m.s_max + p.tokens.len()]
+                    .copy_from_slice(&p.tokens);
+                prompt_len[lane] = p.tokens.len() as i32;
+            }
+            let mut state = self.ops.fresh_actor_state(&tokens)?;
+            self.ops.actor_prefill(&mut state, &tokens, &prompt_len, &vec![1; m.lanes])?;
+
+            let chunk = self.chunk_ctl.chunk();
+            let mut responses: Vec<Vec<i32>> = vec![Vec::new(); group.len()];
+            let mut done = vec![false; group.len()];
+            let mut pos: Vec<i32> = prompt_len.clone();
+            while !done.iter().all(|&d| d) {
+                let live: Vec<i32> = (0..m.lanes)
+                    .map(|l| if l < group.len() && !done[l] { 1 } else { 0 })
+                    .collect();
+                let outc = self.ops.generate_chunk(&mut state, chunk, &pos, &live)?;
+                for (lane, resp) in responses.iter_mut().enumerate() {
+                    if done[lane] {
+                        continue;
+                    }
+                    for j in 0..chunk {
+                        let tok = outc.tokens[lane * chunk + j];
+                        resp.push(tok);
+                        pos[lane] += 1;
+                        if tok == EOS
+                            || resp.len() >= self.cfg.max_new_tokens
+                            || (pos[lane] as usize) >= m.s_max
+                        {
+                            done[lane] = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            for resp in responses {
+                out.push(self.tokenizer.decode_until_eos(&resp, 0));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mean masked reward of a batch (test hook).
+    pub fn batch_reward(batch: &PpoBatch) -> f32 {
+        masked_mean(&batch.rewards, &batch.mask)
+    }
+}

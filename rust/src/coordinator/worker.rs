@@ -1,0 +1,160 @@
+//! The reward-scoring worker: its own OS thread, its own reward-model
+//! parameters and KV state, fed streamed chunks over a channel.
+//!
+//! This is the concurrency that realizes §3.1's intra-step overlap: while
+//! the actor thread executes `actor_generate_chunk` for chunk *k*, this
+//! thread executes `reward_prefill_chunk` for chunk *k−1*.  PJRT executes
+//! both concurrently (thread-safe client), so reward prefill latency hides
+//! behind actor decoding exactly as in the paper's Figure 1b.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine_ops::RewardOps;
+use crate::runtime::Engine;
+
+/// Which lane positions hold a sequence's *final* token in this chunk —
+/// the worker returns the score read off at exactly those positions.
+#[derive(Clone, Debug)]
+pub struct Pick {
+    pub lane: usize,
+    pub idx_in_chunk: usize,
+}
+
+/// Requests to the reward worker.
+pub enum RewardReq {
+    /// Incremental prefill of one streamed chunk (intra-step overlap).
+    Stream {
+        /// entry name (`reward_prefill_chunk_c{C}` or the pallas flavour)
+        entry: String,
+        /// row-major [G, C] token chunk (PAD-filled for idle lanes)
+        chunk: Vec<i32>,
+        /// per-lane absolute start position
+        start: Vec<i32>,
+        /// per-lane number of valid tokens in the chunk
+        n_valid: Vec<i32>,
+        /// final-token positions to read scores from
+        picks: Vec<Pick>,
+    },
+    /// Monolithic scoring (baselines / ablation w/o intra).
+    ScoreFull { tokens: Vec<i32>, last_idx: Vec<i32> },
+    /// Reset the reward KV state (new run / tests).
+    Reset,
+    Shutdown,
+}
+
+/// Worker responses (one per request, in order).
+#[derive(Debug)]
+pub enum RewardResp {
+    /// (lane, score) for each pick in the stream request
+    StreamScores(Vec<(usize, f32)>),
+    /// all-lane scores for a ScoreFull request
+    FullScores(Vec<f32>),
+    /// acknowledgement of Reset
+    ResetDone,
+    Err(String),
+}
+
+/// Handle to the reward worker thread.
+pub struct RewardWorker {
+    tx: Sender<RewardReq>,
+    rx: Receiver<RewardResp>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RewardWorker {
+    pub fn spawn(engine: Arc<Engine>) -> Result<Self> {
+        let (tx, req_rx) = channel::<RewardReq>();
+        let (resp_tx, rx) = channel::<RewardResp>();
+        let handle = std::thread::Builder::new()
+            .name("reward-worker".into())
+            .spawn(move || worker_main(engine, req_rx, resp_tx))
+            .context("spawning reward worker")?;
+        Ok(Self { tx, rx, handle: Some(handle) })
+    }
+
+    /// Enqueue a request (non-blocking); pair with [`Self::recv`].
+    pub fn submit(&self, req: RewardReq) -> Result<()> {
+        self.tx.send(req).map_err(|_| anyhow::anyhow!("reward worker hung up"))
+    }
+
+    /// Block for the next response.
+    pub fn recv(&self) -> Result<RewardResp> {
+        let resp = self.rx.recv().map_err(|_| anyhow::anyhow!("reward worker hung up"))?;
+        if let RewardResp::Err(e) = &resp {
+            anyhow::bail!("reward worker error: {e}");
+        }
+        Ok(resp)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(RewardReq::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RewardWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RewardReq::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(engine: Arc<Engine>, rx: Receiver<RewardReq>, tx: Sender<RewardResp>) {
+    let ops = match RewardOps::new(engine) {
+        Ok(o) => o,
+        Err(e) => {
+            let _ = tx.send(RewardResp::Err(format!("init: {e:#}")));
+            return;
+        }
+    };
+    let mut state = match ops.fresh_state() {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = tx.send(RewardResp::Err(format!("state init: {e:#}")));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        let resp = match req {
+            RewardReq::Shutdown => break,
+            RewardReq::Reset => match ops.fresh_state() {
+                Ok(s) => {
+                    state = s;
+                    RewardResp::ResetDone
+                }
+                Err(e) => RewardResp::Err(format!("{e:#}")),
+            },
+            RewardReq::Stream { entry, chunk, start, n_valid, picks } => {
+                let g = start.len();
+                let c = chunk.len() / g;
+                match ops.prefill_chunk(&mut state, &entry, &chunk, &start, &n_valid) {
+                    Ok(scores) => RewardResp::StreamScores(
+                        picks
+                            .iter()
+                            .map(|p| (p.lane, scores[p.lane * c + p.idx_in_chunk]))
+                            .collect(),
+                    ),
+                    Err(e) => RewardResp::Err(format!("{e:#}")),
+                }
+            }
+            RewardReq::ScoreFull { tokens, last_idx } => {
+                match ops.score_full(&tokens, &last_idx) {
+                    Ok(scores) => RewardResp::FullScores(scores),
+                    Err(e) => RewardResp::Err(format!("{e:#}")),
+                }
+            }
+        };
+        if tx.send(resp).is_err() {
+            break;
+        }
+    }
+}

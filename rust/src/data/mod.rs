@@ -1,0 +1,11 @@
+//! Synthetic RLHF data substrate: tokenizer (mirrored from the AOT
+//! manifest), rule-checkable tasks standing in for the paper's datasets
+//! (DESIGN.md §1), and prompt samplers.
+
+pub mod sampler;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use sampler::PromptSampler;
+pub use tasks::{Prompt, Task, TaskKind};
+pub use tokenizer::Tokenizer;

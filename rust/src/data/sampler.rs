@@ -1,0 +1,110 @@
+//! Prompt sampling: an infinite seeded train stream + a disjoint, fixed
+//! eval set (the Table 3 substitute measures exact-match on the eval set).
+
+use crate::data::tasks::{Prompt, Task};
+use crate::data::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// Infinite deterministic stream of prompts for training, plus a held-out
+/// eval set drawn from an independent RNG stream.
+pub struct PromptSampler {
+    task: Task,
+    tokenizer: Tokenizer,
+    prompt_max: usize,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl PromptSampler {
+    pub fn new(task: Task, tokenizer: Tokenizer, prompt_max: usize, seed: u64) -> Self {
+        let mut root = Rng::new(seed);
+        let rng = root.fork(0x7261696e); // "rain" — train stream
+        Self { task, tokenizer, prompt_max, rng, next_id: 0 }
+    }
+
+    /// Draw the next training prompt (Alg. 1's `sample_from_dataset()`).
+    pub fn next(&mut self) -> Prompt {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.task.sample(&mut self.rng, &self.tokenizer, self.prompt_max, id)
+    }
+
+    /// Number of prompts handed out so far.
+    pub fn sampled(&self) -> u64 {
+        self.next_id
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    /// A fixed held-out eval set, independent of the training stream (same
+    /// seed always yields the same set, regardless of training progress).
+    pub fn eval_set(&self, n: usize, seed: u64) -> Vec<Prompt> {
+        let mut rng = Rng::new(seed ^ 0xE7A1_5E7);
+        (0..n as u64)
+            .map(|i| self.task.sample(&mut rng, &self.tokenizer, self.prompt_max, i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::Tokenizer;
+
+    fn sampler(seed: u64) -> PromptSampler {
+        PromptSampler::new(
+            Task::by_name("mixed").unwrap(),
+            Tokenizer::builtin(64),
+            24,
+            seed,
+        )
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let mut s = sampler(0);
+        for want in 0..10 {
+            assert_eq!(s.next().id, want);
+        }
+        assert_eq!(s.sampled(), 10);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<String> = {
+            let mut s = sampler(7);
+            (0..20).map(|_| s.next().text).collect()
+        };
+        let b: Vec<String> = {
+            let mut s = sampler(7);
+            (0..20).map(|_| s.next().text).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn eval_set_is_stable_and_independent_of_training_position() {
+        let mut s = sampler(3);
+        let before = s.eval_set(16, 42);
+        for _ in 0..100 {
+            s.next();
+        }
+        let after = s.eval_set(16, 42);
+        let texts = |ps: &[crate::data::tasks::Prompt]| {
+            ps.iter().map(|p| p.text.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(texts(&before), texts(&after));
+    }
+
+    #[test]
+    fn eval_set_differs_from_train_stream() {
+        let mut s = sampler(3);
+        let eval: std::collections::HashSet<String> =
+            s.eval_set(32, 42).into_iter().map(|p| p.text).collect();
+        let train: Vec<String> = (0..32).map(|_| s.next().text).collect();
+        let overlap = train.iter().filter(|t| eval.contains(*t)).count();
+        assert!(overlap < 8, "suspiciously high overlap: {overlap}");
+    }
+}

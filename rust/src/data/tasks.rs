@@ -1,0 +1,270 @@
+//! Synthetic RLHF tasks — the dataset substitutes (DESIGN.md §1).
+//!
+//! Each task produces prompts whose correct answers are *rule-checkable*, so
+//! the policy has a real learnable reward signal (the GSM8K-with-rule-reward
+//! setting of the paper's §4), and whose answer lengths reproduce the
+//! properties OPPO exploits:
+//!
+//! * `Arith`  — "12+34=" → "46".  Short, near-uniform lengths; stands in for
+//!   GSM8K (math with rule-based evaluator).
+//! * `Copy`   — "rep 7|abc=" → "abcabc…".  The repeat count is heavy-tailed,
+//!   so response lengths are long-tailed *by construction*: the straggler
+//!   workload of Figure 2b that inter-step overlap targets.
+//! * `Sort`   — "srt|dbca=" → "abcd".  Structured output; stands in for the
+//!   code-generation workload (OpenCoder).
+//! * `Mixed`  — a weighted blend, standing in for free-form Stack-Exchange
+//!   (diverse prompt families and length profiles).
+
+use crate::data::tokenizer::{Tokenizer, BOS};
+#[cfg(test)]
+use crate::data::tokenizer::EOS;
+use crate::util::rng::Rng;
+
+/// Which synthetic task family a prompt belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Arith,
+    Copy,
+    Sort,
+}
+
+/// A sampled prompt: token ids (BOS-prefixed), its text, and the reference
+/// answer used by the rule reward.
+#[derive(Clone, Debug)]
+pub struct Prompt {
+    pub kind: TaskKind,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub answer: String,
+    /// monotonically increasing sample id (deferral tracking / Table 2)
+    pub id: u64,
+}
+
+/// A task family: sampling + rule reward.
+#[derive(Clone, Debug)]
+pub enum Task {
+    Arith {
+        /// max operand digits (1..=3 keeps answers in-alphabet)
+        max_digits: u32,
+    },
+    Copy {
+        /// lognormal parameters for the repeat count (heavy tail)
+        mu: f64,
+        sigma: f64,
+        max_reps: usize,
+    },
+    Sort {
+        min_len: usize,
+        max_len: usize,
+    },
+    Mixed(Vec<(f64, Task)>),
+}
+
+impl Task {
+    /// Task by config name (see `TrainConfig::task`).
+    pub fn by_name(name: &str) -> Option<Task> {
+        match name {
+            "arith" => Some(Task::Arith { max_digits: 2 }),
+            "copy" => Some(Task::Copy { mu: 1.1, sigma: 0.8, max_reps: 14 }),
+            "sort" => Some(Task::Sort { min_len: 3, max_len: 8 }),
+            "mixed" => Some(Task::Mixed(vec![
+                (0.4, Task::Arith { max_digits: 2 }),
+                (0.35, Task::Copy { mu: 1.0, sigma: 0.8, max_reps: 12 }),
+                (0.25, Task::Sort { min_len: 3, max_len: 8 }),
+            ])),
+            _ => None,
+        }
+    }
+
+    /// Sample one prompt.  `prompt_max` bounds the encoded prompt length
+    /// (BOS included); the sampler retries internally if a draw exceeds it.
+    pub fn sample(&self, rng: &mut Rng, tok: &Tokenizer, prompt_max: usize, id: u64) -> Prompt {
+        for _ in 0..64 {
+            let (kind, text, answer) = self.draw(rng);
+            if let Ok(body) = tok.encode(&text) {
+                if body.len() + 1 <= prompt_max {
+                    let mut tokens = Vec::with_capacity(body.len() + 1);
+                    tokens.push(BOS);
+                    tokens.extend(body);
+                    return Prompt { kind, text, tokens, answer, id };
+                }
+            }
+        }
+        // fall back to the smallest possible arith prompt
+        let text = "1+1=".to_string();
+        let mut tokens = vec![BOS];
+        tokens.extend(tok.encode(&text).unwrap());
+        Prompt { kind: TaskKind::Arith, text, tokens, answer: "2".into(), id }
+    }
+
+    fn draw(&self, rng: &mut Rng) -> (TaskKind, String, String) {
+        match self {
+            Task::Arith { max_digits } => {
+                let digits = rng.range(1, *max_digits as u64 + 1) as u32;
+                let hi = 10u64.pow(digits);
+                let a = rng.range(0, hi);
+                let b = rng.range(0, hi);
+                // mix + and - (clamped at 0 so answers stay unsigned)
+                if rng.bool(0.7) {
+                    (TaskKind::Arith, format!("{a}+{b}="), format!("{}", a + b))
+                } else {
+                    let (a, b) = if a >= b { (a, b) } else { (b, a) };
+                    (TaskKind::Arith, format!("{a}-{b}="), format!("{}", a - b))
+                }
+            }
+            Task::Copy { mu, sigma, max_reps } => {
+                let reps = (rng.lognormal(*mu, *sigma).round() as usize).clamp(1, *max_reps);
+                let len = rng.range_usize(1, 4);
+                let pat: String =
+                    (0..len).map(|_| (b'a' + rng.range(0, 26) as u8) as char).collect();
+                (TaskKind::Copy, format!("rep {reps}|{pat}="), pat.repeat(reps))
+            }
+            Task::Sort { min_len, max_len } => {
+                let len = rng.range_usize(*min_len, *max_len + 1);
+                let mut chars: Vec<char> =
+                    (0..len).map(|_| (b'a' + rng.range(0, 26) as u8) as char).collect();
+                let text: String = chars.iter().collect();
+                chars.sort();
+                let sorted: String = chars.into_iter().collect();
+                (TaskKind::Sort, format!("srt|{text}="), sorted)
+            }
+            Task::Mixed(parts) => {
+                let weights: Vec<f64> = parts.iter().map(|(w, _)| *w).collect();
+                let idx = rng.weighted(&weights);
+                parts[idx].1.draw(rng)
+            }
+        }
+    }
+}
+
+/// Rule-based reward for a decoded response against the reference answer.
+///
+/// Shaped like the paper's rule evaluators: exact match earns the full
+/// reward, near misses earn per-character partial credit, and rambling past
+/// the answer is penalized — which is what teaches the policy to emit EOS
+/// (and, over training, shortens responses: the evolving length
+/// distribution of Figure 2b).
+pub fn rule_reward(answer: &str, response: &str) -> f64 {
+    if answer.is_empty() {
+        return 0.0;
+    }
+    if response == answer {
+        return 1.0;
+    }
+    let a: Vec<char> = answer.chars().collect();
+    let r: Vec<char> = response.chars().collect();
+    let matching = a.iter().zip(&r).filter(|(x, y)| x == y).count();
+    let partial = matching as f64 / a.len() as f64;
+    let overshoot = r.len().saturating_sub(a.len()) as f64;
+    (0.8 * partial - 0.02 * overshoot - 0.1).clamp(-0.5, 0.8)
+}
+
+/// Held-out accuracy metric (Table 3 substitute): exact-match over a fixed
+/// eval set.
+pub fn exact_match(answer: &str, response: &str) -> bool {
+    answer == response
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::builtin(64)
+    }
+
+    #[test]
+    fn arith_answers_are_correct() {
+        let task = Task::Arith { max_digits: 2 };
+        let mut rng = Rng::new(1);
+        for id in 0..200 {
+            let p = task.sample(&mut rng, &tok(), 24, id);
+            let body = &p.text[..p.text.len() - 1]; // strip '='
+            let (a, b, add) = if let Some((x, y)) = body.split_once('+') {
+                (x, y, true)
+            } else {
+                let (x, y) = body.split_once('-').unwrap();
+                (x, y, false)
+            };
+            let (a, b): (i64, i64) = (a.parse().unwrap(), b.parse().unwrap());
+            let want = if add { a + b } else { a - b };
+            assert_eq!(p.answer, want.to_string(), "{}", p.text);
+        }
+    }
+
+    #[test]
+    fn copy_lengths_are_heavy_tailed() {
+        let task = Task::by_name("copy").unwrap();
+        let mut rng = Rng::new(2);
+        let lens: Vec<f64> =
+            (0..3000).map(|i| task.sample(&mut rng, &tok(), 24, i).answer.len() as f64).collect();
+        let med = crate::util::stats::percentile(&lens, 50.0);
+        let p99 = crate::util::stats::percentile(&lens, 99.0);
+        assert!(p99 / med >= 3.0, "median {med}, p99 {p99}");
+    }
+
+    #[test]
+    fn sort_answers_are_sorted_permutations() {
+        let task = Task::by_name("sort").unwrap();
+        let mut rng = Rng::new(3);
+        for id in 0..100 {
+            let p = task.sample(&mut rng, &tok(), 24, id);
+            let mut input: Vec<char> =
+                p.text.trim_start_matches("srt|").trim_end_matches('=').chars().collect();
+            input.sort();
+            assert_eq!(p.answer, input.into_iter().collect::<String>());
+        }
+    }
+
+    #[test]
+    fn prompts_fit_and_start_with_bos() {
+        for name in ["arith", "copy", "sort", "mixed"] {
+            let task = Task::by_name(name).unwrap();
+            let mut rng = Rng::new(4);
+            for id in 0..200 {
+                let p = task.sample(&mut rng, &tok(), 24, id);
+                assert!(p.tokens.len() <= 24, "{name}: {}", p.text);
+                assert_eq!(p.tokens[0], BOS);
+                assert!(!p.tokens.contains(&EOS));
+            }
+        }
+    }
+
+    #[test]
+    fn rule_reward_ordering() {
+        // exact > partial > wrong; overshoot is penalized
+        let exact = rule_reward("46", "46");
+        let partial = rule_reward("46", "44");
+        let wrong = rule_reward("46", "99");
+        let ramble = rule_reward("46", "46zzzzzzzz");
+        assert_eq!(exact, 1.0);
+        assert!(partial > wrong, "{partial} vs {wrong}");
+        assert!(ramble < exact);
+        assert!(rule_reward("46", "") <= 0.0);
+    }
+
+    #[test]
+    fn mixed_uses_all_families() {
+        let task = Task::by_name("mixed").unwrap();
+        let mut rng = Rng::new(5);
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..300 {
+            seen.insert(task.sample(&mut rng, &tok(), 24, id).kind);
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let task = Task::by_name("mixed").unwrap();
+        let a: Vec<String> = {
+            let mut rng = Rng::new(9);
+            (0..20).map(|i| task.sample(&mut rng, &tok(), 24, i).text).collect()
+        };
+        let b: Vec<String> = {
+            let mut rng = Rng::new(9);
+            (0..20).map(|i| task.sample(&mut rng, &tok(), 24, i).text).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,159 @@
+//! Character tokenizer over the model's small vocabulary.
+//!
+//! The authoritative token table lives in `artifacts/manifest.json` (written
+//! by `python/compile/aot.py`); this mirrors it so Rust-side encoding is
+//! guaranteed consistent with the embeddings the model was built with.
+//! A built-in copy of the same table supports manifest-free unit tests.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Value;
+
+/// Special token ids (fixed by `python/compile/model.py`).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    table: Vec<String>,
+    by_char: HashMap<char, i32>,
+}
+
+impl Tokenizer {
+    /// Build from the manifest's `tokenizer` object.
+    pub fn from_manifest(tok: &Value) -> Result<Self> {
+        let table: Vec<String> = tok
+            .get("table")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string))
+            .collect::<Result<_>>()?;
+        if tok.get("pad")?.as_i64()? != PAD as i64
+            || tok.get("bos")?.as_i64()? != BOS as i64
+            || tok.get("eos")?.as_i64()? != EOS as i64
+        {
+            bail!("manifest special-token ids disagree with the compiled constants");
+        }
+        Self::from_table(table)
+    }
+
+    /// The same table `aot.py` writes, for tests that run without artifacts.
+    pub fn builtin(vocab: usize) -> Self {
+        let mut table: Vec<String> =
+            ["<pad>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
+        table.extend(" 0123456789abcdefghijklmnopqrstuvwxyz+-*/=?.,:;#|()[]<>".chars().map(String::from));
+        let mut i = 0;
+        while table.len() < vocab {
+            table.push(format!("<unused{i}>"));
+            i += 1;
+        }
+        Self::from_table(table).expect("builtin table is valid")
+    }
+
+    fn from_table(table: Vec<String>) -> Result<Self> {
+        let mut by_char = HashMap::new();
+        for (i, entry) in table.iter().enumerate() {
+            let mut chars = entry.chars();
+            if let (Some(c), None) = (chars.next(), chars.next()) {
+                if by_char.insert(c, i as i32).is_some() {
+                    bail!("duplicate char {c:?} in token table");
+                }
+            }
+        }
+        Ok(Self { table, by_char })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Encode text; unknown characters fail loudly (the synthetic tasks only
+    /// emit in-alphabet text, so an unknown char is a bug).
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                self.by_char
+                    .get(&c)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("character {c:?} not in vocab"))
+            })
+            .collect()
+    }
+
+    /// Decode ids, skipping specials; out-of-range ids render as `¿`.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&id| id != PAD && id != BOS && id != EOS)
+            .map(|&id| {
+                self.table
+                    .get(id as usize)
+                    .filter(|e| e.chars().count() == 1)
+                    .map(|e| e.chars().next().unwrap())
+                    .unwrap_or('¿')
+            })
+            .collect()
+    }
+
+    /// Decode up to (excluding) the first EOS after `start`.
+    pub fn decode_until_eos(&self, ids: &[i32], start: usize) -> String {
+        let end = ids[start..]
+            .iter()
+            .position(|&t| t == EOS)
+            .map(|p| start + p)
+            .unwrap_or(ids.len());
+        self.decode(&ids[start..end])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let tok = Tokenizer::builtin(64);
+        let text = "12+34=46";
+        let ids = tok.encode(text).unwrap();
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn specials_are_skipped_in_decode() {
+        let tok = Tokenizer::builtin(64);
+        let mut ids = vec![BOS];
+        ids.extend(tok.encode("ab").unwrap());
+        ids.push(EOS);
+        ids.push(PAD);
+        assert_eq!(tok.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn decode_until_eos_stops() {
+        let tok = Tokenizer::builtin(64);
+        let mut ids = tok.encode("abc").unwrap();
+        ids.push(EOS);
+        ids.extend(tok.encode("zzz").unwrap());
+        assert_eq!(tok.decode_until_eos(&ids, 0), "abc");
+        assert_eq!(tok.decode_until_eos(&ids, 1), "bc");
+    }
+
+    #[test]
+    fn unknown_char_errors() {
+        let tok = Tokenizer::builtin(64);
+        assert!(tok.encode("ABC").is_err()); // uppercase not in alphabet
+    }
+
+    #[test]
+    fn builtin_matches_manifest_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let manifest = crate::util::json::parse(&text).unwrap();
+            let from_manifest = Tokenizer::from_manifest(manifest.get("tokenizer").unwrap()).unwrap();
+            let builtin = Tokenizer::builtin(from_manifest.vocab());
+            assert_eq!(builtin.table, from_manifest.table);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Figure regenerators (Figs. 2–7).  Each function prints the same series
+//! the paper plots and returns the rows for JSON export / assertions.
+//! All stochastic results average [`SEEDS`] independent runs, matching the
+//! paper's 5-run protocol.
+
+use crate::eval::report::Row;
+use crate::metrics::RunLog;
+use crate::sim::costmodel::CostModel;
+use crate::sim::gpu::GpuSpec;
+use crate::sim::pipeline::{simulate, steady_state_latency, steady_state_util, Pipeline, SimConfig};
+use crate::sim::presets::{self, Setup};
+use crate::sim::rewardmodel::RewardProcess;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Seeds per configuration (the paper averages 5 independent runs).
+pub const SEEDS: [u64; 5] = [11, 22, 33, 44, 55];
+
+fn mean_over_seeds(f: impl Fn(u64) -> f64) -> f64 {
+    stats::mean(&SEEDS.map(f))
+}
+
+/// Average time-to-reward (seconds) for a pipeline on a setup.
+pub fn time_to_reward(pipeline: Pipeline, setup: &Setup, steps: usize) -> f64 {
+    mean_over_seeds(|seed| {
+        let cfg = SimConfig::new(setup.clone(), steps, seed);
+        let log = simulate(pipeline, &cfg);
+        log.time_to_reward(setup.target_reward, 8)
+            .unwrap_or_else(|| log.total_wall_s() * 1.5) // censored: never reached
+    })
+}
+
+/// One simulated run (first seed) — for curve-shaped outputs.
+pub fn one_run(pipeline: Pipeline, setup: &Setup, steps: usize, seed: u64) -> RunLog {
+    simulate(pipeline, &SimConfig::new(setup.clone(), steps, seed))
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — motivation
+// ---------------------------------------------------------------------------
+
+/// Fig. 2a: per-stage GPU utilization across GPU generations (FLOP
+/// efficiency of each stage under the roofline model).
+pub fn fig2a() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for gpu in [GpuSpec::A40, GpuSpec::A100_80, GpuSpec::H200] {
+        let cm = CostModel {
+            model: crate::sim::ModelSpec::QWEN25_7B,
+            gpu,
+            tp: 1.0,
+            software_efficiency: 0.5,
+            iter_overhead_s: 2e-4,
+        };
+        let batch = 16.0;
+        let ctx = 768.0;
+        let t_dec = cm.decode_iter(batch, ctx);
+        let util_dec = cm.decode_iter_flops(batch) / (t_dec * gpu.fp16_tflops * 1e12);
+        let tokens = batch * ctx;
+        let t_pre = cm.prefill(tokens, ctx);
+        let util_pre = cm.prefill_flops(tokens, ctx) / (t_pre * gpu.fp16_tflops * 1e12);
+        let t_train = cm.train_step(tokens, 1.0, 0.0);
+        let util_train = cm.train_flops(tokens) / (t_train * gpu.fp16_tflops * 1e12);
+        rows.push(
+            Row::new(gpu.name)
+                .cell("gen_util_%", 100.0 * util_dec)
+                .cell("score_util_%", 100.0 * util_pre)
+                .cell("train_util_%", 100.0 * util_train),
+        );
+    }
+    rows
+}
+
+/// Fig. 2b: rollout-length distribution (warm-up vs converged phase).
+pub fn fig2b() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for setup in presets::all_main_setups() {
+        for (phase, p) in [("warmup", 0.0), ("converged", 1.0)] {
+            let mut rng = Rng::new(7);
+            let xs = setup.lengths.sample_batch(&mut rng, p, 20_000);
+            rows.push(
+                Row::new(format!("{} {phase}", setup.name))
+                    .cell("p50", stats::percentile(&xs, 50.0))
+                    .cell("p90", stats::percentile(&xs, 90.0))
+                    .cell("p99", stats::percentile(&xs, 99.0))
+                    .cell("max", stats::max(&xs))
+                    .cell("tail_p99/p50", stats::percentile(&xs, 99.0) / stats::percentile(&xs, 50.0)),
+            );
+        }
+    }
+    rows
+}
+
+/// Fig. 2c: asynchrony (staleness) hurts step-to-reward and final quality.
+pub fn fig2c() -> Vec<Row> {
+    let setup = presets::stackex_7b_h200();
+    let mut rows = Vec::new();
+    for k in [0usize, 1, 5] {
+        let final_r = mean_over_seeds(|seed| {
+            let mut p = RewardProcess::new(setup.reward, seed);
+            (0..600).map(|_| p.advance(k as f64, 0.0)).fold(0.0, |_, r| r)
+        });
+        let step_to_35 = mean_over_seeds(|seed| {
+            let mut p = RewardProcess::new(setup.reward, seed);
+            for s in 0..2000 {
+                if p.advance(k as f64, 0.0) >= 3.5 {
+                    return s as f64;
+                }
+            }
+            2000.0
+        });
+        rows.push(
+            Row::new(if k == 0 { "sync".into() } else { format!("staleness-{k}") })
+                .cell("reward@600", final_r)
+                .cell("steps_to_3.5", step_to_35),
+        );
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 — end-to-end time-to-reward speedup
+// ---------------------------------------------------------------------------
+
+pub fn fig3() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for setup in presets::all_main_setups() {
+        let steps = setup.total_steps + setup.total_steps / 2;
+        let trl = time_to_reward(Pipeline::TrlSequential, &setup, steps);
+        let oppo = time_to_reward(Pipeline::oppo(), &setup, steps);
+        rows.push(
+            Row::new(setup.name)
+                .cell("trl_min", trl / 60.0)
+                .cell("oppo_min", oppo / 60.0)
+                .cell("speedup", trl / oppo),
+        );
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 — step-to-reward parity
+// ---------------------------------------------------------------------------
+
+pub fn fig4() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for setup in presets::all_main_setups() {
+        let steps = setup.total_steps;
+        let at = |pipeline: Pipeline, frac: f64| {
+            mean_over_seeds(|seed| {
+                let log = one_run(pipeline, &setup, steps, seed);
+                let idx = ((steps as f64 * frac) as usize).min(steps - 1);
+                stats::mean(
+                    &log.records[idx.saturating_sub(4)..=idx]
+                        .iter()
+                        .map(|r| r.mean_score)
+                        .collect::<Vec<_>>(),
+                )
+            })
+        };
+        for frac in [0.25, 0.5, 1.0] {
+            let t = at(Pipeline::TrlSequential, frac);
+            let o = at(Pipeline::oppo(), frac);
+            rows.push(
+                Row::new(format!("{} @{:.0}%", setup.name, frac * 100.0))
+                    .cell("trl_reward", t)
+                    .cell("oppo_reward", o)
+                    .cell("abs_gap", (t - o).abs()),
+            );
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Figure 5 — GPU utilization
+// ---------------------------------------------------------------------------
+
+pub fn fig5() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for setup in presets::all_main_setups() {
+        let steps = 80;
+        let util = |p: Pipeline| {
+            mean_over_seeds(|seed| steady_state_util(&one_run(p, &setup, steps, seed)))
+        };
+        let t = util(Pipeline::TrlSequential);
+        let o = util(Pipeline::oppo());
+        rows.push(
+            Row::new(setup.name)
+                .cell("trl_util_%", 100.0 * t)
+                .cell("oppo_util_%", 100.0 * o)
+                .cell("ratio", o / t),
+        );
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Figure 6 — ablation breakdown
+// ---------------------------------------------------------------------------
+
+pub fn fig6() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for setup in [presets::stackex_7b_h200(), presets::stackex_3b_a100()] {
+        let steps = setup.total_steps + setup.total_steps / 2;
+        let arms = [
+            ("trl", Pipeline::TrlSequential),
+            ("oppo-no-inter (intra only)", Pipeline::Oppo {
+                intra: true, inter: false, fixed_delta: None,
+            }),
+            ("oppo-no-intra (inter only)", Pipeline::Oppo {
+                intra: false, inter: true, fixed_delta: None,
+            }),
+            ("oppo (full)", Pipeline::oppo()),
+        ];
+        let trl_time = time_to_reward(Pipeline::TrlSequential, &setup, steps);
+        for (name, p) in arms {
+            let t = time_to_reward(p, &setup, steps);
+            let final_r = mean_over_seeds(|seed| {
+                one_run(p, &setup, steps, seed).records.last().unwrap().mean_score
+            });
+            rows.push(
+                Row::new(format!("{} / {name}", setup.name))
+                    .cell("time_to_reward_min", t / 60.0)
+                    .cell("speedup", trl_time / t)
+                    .cell("final_reward", final_r),
+            );
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Figure 7 — adaptation ablations
+// ---------------------------------------------------------------------------
+
+/// Fig. 7a: fixed Δ ∈ {4, 8} vs dynamic Δ.
+pub fn fig7a() -> Vec<Row> {
+    let setup = presets::stackex_3b_a100();
+    let steps = setup.total_steps;
+    let arms = [
+        ("fixed Δ=4", Pipeline::Oppo { intra: true, inter: true, fixed_delta: Some(4) }),
+        ("fixed Δ=8", Pipeline::Oppo { intra: true, inter: true, fixed_delta: Some(8) }),
+        ("dynamic Δ", Pipeline::oppo()),
+    ];
+    let mut rows = Vec::new();
+    for (name, p) in arms {
+        let t = time_to_reward(p, &setup, steps + steps / 2);
+        let final_r = mean_over_seeds(|seed| {
+            one_run(p, &setup, steps, seed).records.last().unwrap().mean_score
+        });
+        rows.push(
+            Row::new(name)
+                .cell("time_to_reward_min", t / 60.0)
+                .cell("final_reward", final_r),
+        );
+    }
+    // the paper-internal sign discrepancy (DESIGN.md §4b): Alg. 1's literal
+    // Δ-update direction, for comparison against the Eq. (4) default
+    let t_lit = stats::mean(&SEEDS.map(|seed| {
+        let mut cfg = SimConfig::new(setup.clone(), steps + steps / 2, seed);
+        cfg.delta_policy = crate::coordinator::delta::Policy::Alg1Literal;
+        let log = simulate(Pipeline::oppo(), &cfg);
+        log.time_to_reward(setup.target_reward, 8)
+            .unwrap_or_else(|| log.total_wall_s() * 1.5)
+    }));
+    rows.push(
+        Row::new("dynamic Δ (Alg.1-literal sign)")
+            .cell("time_to_reward_min", t_lit / 60.0)
+            .cell("final_reward", rows.last().map(|r| r.cells[1].1).unwrap_or(0.0)),
+    );
+    rows
+}
+
+/// Fig. 7b: chunk size vs mean step latency (the U-shape).
+pub fn fig7b() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for setup in [presets::stackex_7b_h200(), presets::stackex_3b_a100()] {
+        for chunk in [100.0, 500.0, 1000.0, 3000.0] {
+            let lat = mean_over_seeds(|seed| {
+                let mut cfg = SimConfig::new(setup.clone(), 60, seed);
+                cfg.chunk_tokens = chunk;
+                steady_state_latency(&simulate(Pipeline::oppo(), &cfg))
+            });
+            rows.push(
+                Row::new(format!("{} C={}", setup.name, chunk as usize))
+                    .cell("step_latency_s", lat),
+            );
+        }
+    }
+    rows
+}

@@ -1,0 +1,11 @@
+//! Evaluation harness: the code that regenerates every table and figure of
+//! the paper (DESIGN.md §4's experiment index).  The `rust/benches/*`
+//! binaries and `examples/paper_figures.rs` are thin wrappers over
+//! [`figures`] / [`tables`]; results also land as JSON under
+//! `target/paper/`.
+
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+pub use report::{print_table, save_rows, Row};

@@ -1,0 +1,114 @@
+//! Table formatting + JSON export shared by the bench harness.
+
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// One output row: label + named numeric cells.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cells: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), cells: Vec::new() }
+    }
+
+    pub fn cell(mut self, name: &str, value: f64) -> Self {
+        self.cells.push((name.to_string(), value));
+        self
+    }
+}
+
+/// Print a fixed-width table in the paper's row/column layout.
+pub fn print_table(title: &str, rows: &[Row]) {
+    println!("\n=== {title} ===");
+    if rows.is_empty() {
+        println!("(no rows)");
+        return;
+    }
+    let label_w = rows.iter().map(|r| r.label.len()).max().unwrap().max(8) + 2;
+    let headers: Vec<&String> = rows[0].cells.iter().map(|(n, _)| n).collect();
+    let col_w = headers.iter().map(|h| h.len().max(10) + 2).collect::<Vec<_>>();
+    print!("{:label_w$}", "");
+    for (h, w) in headers.iter().zip(&col_w) {
+        print!("{h:>w$}");
+    }
+    println!();
+    for row in rows {
+        print!("{:label_w$}", row.label);
+        for ((_, v), w) in row.cells.iter().zip(&col_w) {
+            let text = format_cell(*v);
+            print!("{text:>w$}");
+        }
+        println!();
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 10000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Persist rows as JSON under `target/paper/<name>.json`.
+pub fn save_rows(name: &str, rows: &[Row]) -> Result<()> {
+    let arr = Value::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut pairs = vec![("label", json::s(&r.label))];
+                let cells: Vec<(&str, Value)> =
+                    r.cells.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect();
+                pairs.extend(cells);
+                json::obj(pairs)
+            })
+            .collect(),
+    );
+    let dir = std::path::Path::new("target/paper");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), json::to_string(&arr))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_build_and_print() {
+        let rows = vec![
+            Row::new("TRL").cell("latency_s", 498.30).cell("speedup", 1.0),
+            Row::new("OPPO").cell("latency_s", 111.08).cell("speedup", 4.49),
+        ];
+        print_table("table 1 smoke", &rows);
+        assert_eq!(rows[1].cells[1].1, 4.49);
+    }
+
+    #[test]
+    fn cells_format_reasonably() {
+        assert_eq!(format_cell(0.0), "0");
+        assert_eq!(format_cell(4.49), "4.49");
+        assert_eq!(format_cell(498.3), "498.3");
+        assert_eq!(format_cell(0.2345), "0.2345");
+        assert_eq!(format_cell(123456.0), "123456");
+    }
+
+    #[test]
+    fn save_rows_writes_json() {
+        let rows = vec![Row::new("x").cell("v", 1.5)];
+        save_rows("unit_test_rows", &rows).unwrap();
+        let text = std::fs::read_to_string("target/paper/unit_test_rows.json").unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.as_arr().unwrap()[0].get("v").unwrap().as_f64().unwrap(), 1.5);
+        let _ = std::fs::remove_file("target/paper/unit_test_rows.json");
+    }
+}

@@ -1,0 +1,39 @@
+//! # OPPO — Accelerating PPO-based RLHF via Pipeline Overlap
+//!
+//! A ground-up reproduction of the OPPO paper (Yan et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the OPPO coordinator: Algorithm 1's
+//!   `B + Δ` FIFO buffer, intra-step chunk streaming from the actor to the
+//!   reward model, the dynamic Δ controller (Eq. 4), the dynamic chunk-size
+//!   controller, plus every substrate the paper's evaluation needs (a
+//!   discrete-event GPU-cluster simulator, baselines for TRL / async RLHF /
+//!   VeRL / AReaL schedules, synthetic RLHF tasks, metrics).
+//! * **Layer 2** — a JAX transformer (actor + value head, reward model,
+//!   reference model) and the PPO/DPO update math, AOT-lowered to HLO text
+//!   by `python/compile/aot.py`.
+//! * **Layer 1** — Pallas kernels (chunked-prefill attention, decode
+//!   attention, GAE) that lower into the same HLO.
+//!
+//! Python never runs on the training path: [`runtime`] loads the
+//! `artifacts/*.hlo.txt` modules through PJRT once and the whole RLHF loop
+//! executes from Rust.
+//!
+//! Start with [`coordinator::OppoScheduler`] for the real-compute training
+//! loop, or [`sim::pipeline`] for the paper-scale discrete-event studies
+//! that regenerate every figure and table (see DESIGN.md §4 for the map).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod model;
+pub mod ppo;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,10 @@
+//! `oppo` — leader entrypoint for the OPPO reproduction.
+//! See `oppo help` (or `rust/src/cli/mod.rs`) for the subcommands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = oppo::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

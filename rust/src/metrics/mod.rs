@@ -1,0 +1,231 @@
+//! Run metrics: per-step records, deferral accounting (Table 2), and JSON
+//! export for the bench harness / examples.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+use crate::util::stats;
+
+/// One PPO step's telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub step: u64,
+    /// wall-clock duration of the step (seconds)
+    pub wall_s: f64,
+    /// cumulative wall-clock since run start (seconds)
+    pub elapsed_s: f64,
+    /// mean sequence score of the PPO batch (Alg. 1's reward signal)
+    pub mean_score: f64,
+    /// current overcommitment Δ
+    pub delta: usize,
+    /// current streaming chunk size C
+    pub chunk: usize,
+    /// sequences finished this step / left unfinished (deferred)
+    pub finished: usize,
+    pub deferred: usize,
+    /// generated tokens this step (throughput accounting)
+    pub gen_tokens: usize,
+    /// ppo_update stats: [loss, pg, v_loss, entropy, approx_kl, clip_frac]
+    pub train_stats: [f32; 6],
+    /// pool-wide GPU utilization for the step (simulator runs; 0 = n/a)
+    pub util: f64,
+}
+
+/// Whole-run log for one pipeline mode.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub mode: String,
+    pub task: String,
+    pub seed: u64,
+    pub records: Vec<StepRecord>,
+    /// deferral histogram: steps-deferred -> request count (Table 2)
+    pub deferral_hist: BTreeMap<u64, u64>,
+}
+
+impl RunLog {
+    pub fn new(mode: &str, task: &str, seed: u64) -> Self {
+        Self { mode: mode.into(), task: task.into(), seed, ..Default::default() }
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn record_deferral(&mut self, steps: u64) {
+        *self.deferral_hist.entry(steps).or_insert(0) += 1;
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.records.last().map(|r| r.elapsed_s).unwrap_or(0.0)
+    }
+
+    pub fn scores(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.mean_score).collect()
+    }
+
+    /// First elapsed time at which the trailing-`w` mean score reaches
+    /// `target` (the paper's *time-to-reward*); None if never.
+    pub fn time_to_reward(&self, target: f64, w: usize) -> Option<f64> {
+        let scores = self.scores();
+        for i in 0..scores.len() {
+            let lo = (i + 1).saturating_sub(w);
+            if stats::mean(&scores[lo..=i]) >= target {
+                return Some(self.records[i].elapsed_s);
+            }
+        }
+        None
+    }
+
+    /// First step index at which the trailing-`w` mean score reaches
+    /// `target` (the paper's *step-to-reward*).
+    pub fn step_to_reward(&self, target: f64, w: usize) -> Option<u64> {
+        let scores = self.scores();
+        for i in 0..scores.len() {
+            let lo = (i + 1).saturating_sub(w);
+            if stats::mean(&scores[lo..=i]) >= target {
+                return Some(self.records[i].step);
+            }
+        }
+        None
+    }
+
+    /// Deferral distribution as (steps, share) rows plus the mean —
+    /// Table 2's exact format.
+    pub fn deferral_distribution(&self) -> (Vec<(u64, f64)>, f64) {
+        let total: u64 = self.deferral_hist.values().sum();
+        if total == 0 {
+            return (vec![], 0.0);
+        }
+        let rows = self
+            .deferral_hist
+            .iter()
+            .map(|(&k, &v)| (k, v as f64 / total as f64))
+            .collect();
+        let mean = self
+            .deferral_hist
+            .iter()
+            .map(|(&k, &v)| k as f64 * v as f64)
+            .sum::<f64>()
+            / total as f64;
+        (rows, mean)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let records: Vec<Value> = self
+            .records
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("step", json::num(r.step as f64)),
+                    ("wall_s", json::num(r.wall_s)),
+                    ("elapsed_s", json::num(r.elapsed_s)),
+                    ("mean_score", json::num(r.mean_score)),
+                    ("delta", json::num(r.delta as f64)),
+                    ("chunk", json::num(r.chunk as f64)),
+                    ("finished", json::num(r.finished as f64)),
+                    ("deferred", json::num(r.deferred as f64)),
+                    ("gen_tokens", json::num(r.gen_tokens as f64)),
+                    ("util", json::num(r.util)),
+                    (
+                        "train_stats",
+                        json::arr_f64(&r.train_stats.map(|x| x as f64)),
+                    ),
+                ])
+            })
+            .collect();
+        let hist: Vec<Value> = self
+            .deferral_hist
+            .iter()
+            .map(|(&k, &v)| json::arr_f64(&[k as f64, v as f64]))
+            .collect();
+        json::obj(vec![
+            ("mode", json::s(&self.mode)),
+            ("task", json::s(&self.task)),
+            ("seed", json::num(self.seed as f64)),
+            ("records", Value::Arr(records)),
+            ("deferral_hist", Value::Arr(hist)),
+        ])
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, json::to_string(&self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with_scores(scores: &[f64]) -> RunLog {
+        let mut log = RunLog::new("oppo", "arith", 0);
+        for (i, &sc) in scores.iter().enumerate() {
+            log.push(StepRecord {
+                step: i as u64,
+                wall_s: 1.0,
+                elapsed_s: (i + 1) as f64,
+                mean_score: sc,
+                ..Default::default()
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn time_and_step_to_reward() {
+        let log = log_with_scores(&[0.0, 0.2, 0.5, 0.9, 0.95]);
+        assert_eq!(log.time_to_reward(0.85, 1), Some(4.0));
+        assert_eq!(log.step_to_reward(0.85, 1), Some(3));
+        assert_eq!(log.time_to_reward(2.0, 1), None);
+        // windowed: mean of last 2 must reach target
+        assert_eq!(log.step_to_reward(0.7, 2), Some(3));
+    }
+
+    #[test]
+    fn deferral_distribution_matches_counts() {
+        let mut log = RunLog::new("oppo", "arith", 0);
+        for _ in 0..78 {
+            log.record_deferral(0);
+        }
+        for _ in 0..20 {
+            log.record_deferral(1);
+        }
+        for _ in 0..2 {
+            log.record_deferral(3);
+        }
+        let (rows, mean) = log.deferral_distribution();
+        assert_eq!(rows[0].0, 0);
+        assert!((rows[0].1 - 0.78).abs() < 1e-9);
+        assert!((mean - (20.0 + 6.0) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut log = log_with_scores(&[0.1, 0.4]);
+        log.record_deferral(0);
+        log.record_deferral(1);
+        let v = log.to_json();
+        let text = crate::util::json::to_string(&v);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("mode").unwrap().as_str().unwrap(), "oppo");
+        assert_eq!(back.get("records").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn write_json_creates_dirs() {
+        let dir = std::env::temp_dir().join("oppo_test_metrics");
+        let _ = std::fs::remove_dir_all(&dir);
+        let log = log_with_scores(&[0.5]);
+        let path = dir.join("nested/run.json");
+        log.write_json(&path).unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

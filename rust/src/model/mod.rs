@@ -1,0 +1,10 @@
+//! Host-side model state: per-lane sequence lifecycle and PPO batch
+//! assembly.  The heavy tensors (params, KV caches, token buffers) stay
+//! device-resident in the runtime; this module tracks the small per-sequence
+//! bookkeeping the coordinator schedules with.
+
+pub mod rollout;
+pub mod sequence;
+
+pub use rollout::{PpoBatch, RolloutAssembler};
+pub use sequence::{SeqPhase, Sequence};

@@ -1,0 +1,197 @@
+//! PPO batch assembly: B finished sequences → the dense `[B, S]` host
+//! arrays the `gae` / `ppo_update` entry points consume.
+//!
+//! Alignment contract (shared with `python/compile/model.py::ppo_loss`):
+//! a response token generated at absolute position `p = prompt_len + j`
+//! occupies index `p` in every array — its log-prob is
+//! `log π(tok_p | tok_{<p})`, its value estimate was taken from the hidden
+//! state that produced it, and `mask[p] = 1` marks it as trained.
+
+use anyhow::{bail, Result};
+
+use crate::model::sequence::Sequence;
+use crate::ppo::reward::{compose_rewards, RewardInputs};
+
+/// Dense PPO inputs for one update step.
+#[derive(Clone, Debug)]
+pub struct PpoBatch {
+    pub b: usize,
+    pub s: usize,
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub old_logp: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub values: Vec<f32>,
+    /// mean sequence-level score of the batch (Alg. 1's `reward_scores`)
+    pub mean_score: f32,
+    /// per-sequence deferral (steps) for Table 2
+    pub deferrals: Vec<u64>,
+}
+
+/// Builds [`PpoBatch`]es with fixed `[B, S]` shapes.
+pub struct RolloutAssembler {
+    s_max: usize,
+    kl_beta: f32,
+}
+
+impl RolloutAssembler {
+    pub fn new(s_max: usize, kl_beta: f32) -> Self {
+        Self { s_max, kl_beta }
+    }
+
+    /// Assemble a batch.  `scores[i]` is sequence i's blended scalar score;
+    /// `ref_logp[i]` holds the reference model's per-token log-probs laid
+    /// out `[S]`-dense for sequence i (as returned by `ref_logprobs`).
+    pub fn assemble(
+        &self,
+        seqs: &[&Sequence],
+        scores: &[f32],
+        ref_logp_dense: &[f32],
+    ) -> Result<PpoBatch> {
+        let b = seqs.len();
+        let s = self.s_max;
+        if scores.len() != b || ref_logp_dense.len() != b * s {
+            bail!(
+                "arity mismatch: {b} seqs, {} scores, {} ref logps",
+                scores.len(),
+                ref_logp_dense.len()
+            );
+        }
+        let mut tokens = vec![0i32; b * s]; // PAD = 0
+        let mut mask = vec![0f32; b * s];
+        let mut old_logp = vec![0f32; b * s];
+        let mut rewards = vec![0f32; b * s];
+        let mut values = vec![0f32; b * s];
+        let mut deferrals = Vec::with_capacity(b);
+        let mut score_sum = 0f32;
+
+        for (i, seq) in seqs.iter().enumerate() {
+            if !seq.is_finished() {
+                bail!("sequence {} not finished", i);
+            }
+            let row = i * s;
+            let p0 = seq.prompt_len;
+            let n = seq.response.len();
+            if p0 + n > s {
+                bail!("sequence {} overflows s_max: {} + {n} > {s}", i, p0);
+            }
+            tokens[row..row + p0].copy_from_slice(&seq.prompt.tokens);
+            tokens[row + p0..row + p0 + n].copy_from_slice(&seq.response);
+
+            // reference log-probs for the response span, dense layout [S]
+            let ref_row = &ref_logp_dense[i * s..(i + 1) * s];
+            let per_tok = compose_rewards(&RewardInputs {
+                score: scores[i],
+                actor_logp: &seq.logps,
+                ref_logp: &ref_row[p0..p0 + n],
+                kl_beta: self.kl_beta,
+            });
+            for j in 0..n {
+                let p = row + p0 + j;
+                mask[p] = 1.0;
+                old_logp[p] = seq.logps[j];
+                values[p] = seq.values[j];
+                rewards[p] = per_tok[j];
+            }
+            score_sum += scores[i];
+            deferrals.push(seq.deferred_steps);
+        }
+
+        Ok(PpoBatch {
+            b,
+            s,
+            tokens,
+            mask,
+            old_logp,
+            rewards,
+            values,
+            mean_score: if b > 0 { score_sum / b as f32 } else { 0.0 },
+            deferrals,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{Prompt, TaskKind};
+    use crate::model::sequence::SeqPhase;
+
+    fn seq(prompt_len: usize, resp: &[i32], lane: usize) -> Sequence {
+        let mut s = Sequence::new(
+            Prompt {
+                kind: TaskKind::Arith,
+                text: "x".into(),
+                tokens: (0..prompt_len as i32).map(|i| i + 3).collect(),
+                answer: "y".into(),
+                id: lane as u64,
+            },
+            lane,
+            0,
+        );
+        s.phase = SeqPhase::Generating;
+        for (j, &t) in resp.iter().enumerate() {
+            s.logps.push(-0.1 * (j + 1) as f32);
+            s.values.push(0.2 * j as f32);
+            s.response.push(t);
+        }
+        s.phase = SeqPhase::Finished;
+        s
+    }
+
+    #[test]
+    fn layout_and_masking() {
+        let s_max = 16;
+        let asm = RolloutAssembler::new(s_max, 0.0);
+        let a = seq(3, &[10, 11, 2], 0);
+        let b = seq(5, &[20, 2], 1);
+        let scores = [1.0, -0.5];
+        let ref_lp = vec![0f32; 2 * s_max];
+        let batch = asm.assemble(&[&a, &b], &scores, &ref_lp).unwrap();
+
+        // row 0: tokens 3,4,5 then 10,11,2
+        assert_eq!(&batch.tokens[0..6], &[3, 4, 5, 10, 11, 2]);
+        assert_eq!(&batch.mask[0..8], &[0., 0., 0., 1., 1., 1., 0., 0.]);
+        // score lands on the last response token (index 5), KL beta = 0
+        assert_eq!(batch.rewards[5], 1.0);
+        assert_eq!(batch.rewards[4], 0.0);
+        // row 1
+        let r1 = s_max;
+        assert_eq!(&batch.tokens[r1..r1 + 7], &[3, 4, 5, 6, 7, 20, 2]);
+        assert_eq!(batch.rewards[r1 + 6], -0.5);
+        assert!((batch.mean_score - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_penalty_applied_per_token() {
+        let s_max = 8;
+        let asm = RolloutAssembler::new(s_max, 0.5);
+        let a = seq(2, &[10, 2], 0);
+        // ref logp dense: response occupies positions 2..4
+        let mut ref_lp = vec![0f32; s_max];
+        ref_lp[2] = -0.5; // actor logp[0] = -0.1 => KL term = -0.5*(-0.1+0.5) = -0.2
+        ref_lp[3] = -0.2;
+        let batch = asm.assemble(&[&a], &[2.0], &ref_lp).unwrap();
+        assert!((batch.rewards[2] - (-0.5 * (-0.1 + 0.5))).abs() < 1e-6);
+        assert!((batch.rewards[3] - (2.0 + -0.5 * (-0.2 + 0.2))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_unfinished_or_mismatched() {
+        let s_max = 8;
+        let asm = RolloutAssembler::new(s_max, 0.0);
+        let mut a = seq(2, &[10], 0);
+        a.phase = SeqPhase::Generating;
+        assert!(asm.assemble(&[&a], &[0.0], &vec![0.0; s_max]).is_err());
+        let b = seq(2, &[10, 2], 0);
+        assert!(asm.assemble(&[&b], &[0.0, 1.0], &vec![0.0; s_max]).is_err());
+        assert!(asm.assemble(&[&b], &[0.0], &vec![0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn overflow_is_rejected() {
+        let asm = RolloutAssembler::new(4, 0.0);
+        let a = seq(3, &[10, 11, 2], 0);
+        assert!(asm.assemble(&[&a], &[0.0], &vec![0.0; 4]).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Per-sequence state: one entry per buffer slot in Algorithm 1's
+//! `B + Δ` FIFO.  A sequence owns a generation *lane* (its row in the
+//! device-resident token/KV buffers) for its whole life, including across
+//! PPO steps when deferred — that is how inter-step overlap preserves
+//! partial work (§3.2).
+
+use crate::data::tasks::Prompt;
+
+/// Lifecycle phase of a buffered sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Waiting for prompt prefill on its lane.
+    Queued,
+    /// Actor is decoding (may span several chunks and several PPO steps).
+    Generating,
+    /// Hit EOS or the length cap; eligible for the next PPO batch.
+    Finished,
+}
+
+/// One sequence in the buffer.
+#[derive(Clone, Debug)]
+pub struct Sequence {
+    pub prompt: Prompt,
+    /// generation lane (row index in the device buffers), fixed for life
+    pub lane: usize,
+    pub phase: SeqPhase,
+    pub prompt_len: usize,
+    /// generated tokens so far (host mirror; device holds the full row)
+    pub response: Vec<i32>,
+    /// per-generated-token actor log-probs / value estimates
+    pub logps: Vec<f32>,
+    pub values: Vec<f32>,
+    /// PPO step at which the prompt entered the buffer (deferral stats)
+    pub enqueued_step: u64,
+    /// how many tokens (prompt + response) have been streamed to the
+    /// reward model's incremental prefill so far
+    pub reward_streamed: usize,
+    /// reward-model score once scored
+    pub rm_score: Option<f32>,
+    /// number of PPO steps this sequence was deferred past its first
+    /// eligible step (Table 2's metric); filled at batch selection
+    pub deferred_steps: u64,
+}
+
+impl Sequence {
+    pub fn new(prompt: Prompt, lane: usize, step: u64) -> Self {
+        let prompt_len = prompt.tokens.len();
+        Self {
+            prompt,
+            lane,
+            phase: SeqPhase::Queued,
+            prompt_len,
+            response: Vec::new(),
+            logps: Vec::new(),
+            values: Vec::new(),
+            enqueued_step: step,
+            reward_streamed: 0,
+            rm_score: None,
+            deferred_steps: 0,
+        }
+    }
+
+    /// Total committed length (prompt + response) — also the lane's `pos`.
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.response.len()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase == SeqPhase::Finished
+    }
+
+    /// Append a generated token; returns true if this token finished the
+    /// sequence (EOS or cap).
+    pub fn push_token(
+        &mut self,
+        tok: i32,
+        logp: f32,
+        value: f32,
+        eos: i32,
+        max_new: usize,
+        s_max: usize,
+    ) -> bool {
+        debug_assert_eq!(self.phase, SeqPhase::Generating);
+        self.response.push(tok);
+        self.logps.push(logp);
+        self.values.push(value);
+        let done = tok == eos
+            || self.response.len() >= max_new
+            || self.total_len() >= s_max;
+        if done {
+            self.phase = SeqPhase::Finished;
+        }
+        done
+    }
+
+    /// Tokens not yet streamed to the reward model (prompt + response view).
+    pub fn unstreamed(&self) -> usize {
+        self.total_len().saturating_sub(self.reward_streamed)
+    }
+
+    /// Full token row (prompt + response) — used for monolithic scoring.
+    pub fn full_tokens(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.total_len());
+        out.extend_from_slice(&self.prompt.tokens);
+        out.extend_from_slice(&self.response);
+        out
+    }
+
+    /// Response length excluding a trailing EOS (the scored answer text ends
+    /// before EOS, but EOS itself is still a trained token).
+    pub fn response_len(&self) -> usize {
+        self.response.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{Prompt, TaskKind};
+
+    fn prompt(n: usize) -> Prompt {
+        Prompt {
+            kind: TaskKind::Arith,
+            text: "1+1=".into(),
+            tokens: vec![1; n],
+            answer: "2".into(),
+            id: 0,
+        }
+    }
+
+    #[test]
+    fn lifecycle_and_lengths() {
+        let mut s = Sequence::new(prompt(5), 3, 7);
+        s.phase = SeqPhase::Generating;
+        assert_eq!(s.total_len(), 5);
+        assert!(!s.push_token(10, -0.5, 0.1, 2, 8, 100));
+        assert!(!s.push_token(11, -0.4, 0.2, 2, 8, 100));
+        assert_eq!(s.total_len(), 7);
+        assert_eq!(s.response_len(), 2);
+        assert!(s.push_token(2, -0.1, 0.3, 2, 8, 100)); // EOS
+        assert!(s.is_finished());
+        assert_eq!(s.full_tokens().len(), 8);
+    }
+
+    #[test]
+    fn cap_finishes_sequence() {
+        let mut s = Sequence::new(prompt(3), 0, 0);
+        s.phase = SeqPhase::Generating;
+        for i in 0..3 {
+            let done = s.push_token(10 + i, 0.0, 0.0, 2, 3, 100);
+            assert_eq!(done, i == 2);
+        }
+        assert!(s.is_finished());
+    }
+
+    #[test]
+    fn s_max_cap_finishes_sequence() {
+        let mut s = Sequence::new(prompt(9), 0, 0);
+        s.phase = SeqPhase::Generating;
+        assert!(s.push_token(10, 0.0, 0.0, 2, 100, 10));
+        assert!(s.is_finished());
+    }
+
+    #[test]
+    fn unstreamed_accounting() {
+        let mut s = Sequence::new(prompt(4), 0, 0);
+        s.phase = SeqPhase::Generating;
+        assert_eq!(s.unstreamed(), 4);
+        s.reward_streamed = 4;
+        s.push_token(10, 0.0, 0.0, 2, 8, 100);
+        assert_eq!(s.unstreamed(), 1);
+        s.reward_streamed = 5;
+        assert_eq!(s.unstreamed(), 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Generalized advantage estimation (Eq. 1) — Rust mirror of
+//! `python/compile/kernels/ref.py::gae`, bit-compatible in f32.
+
+/// GAE over row-major `[b, s]` slices.  `mask[t] = 1.0` marks valid
+/// transitions; the bootstrap value beyond the episode is zero.
+/// Returns `(advantages, returns)` with `returns = adv + values`, both
+/// zeroed outside the mask.
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    gamma: f32,
+    lam: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(rewards.len(), b * s);
+    assert_eq!(values.len(), b * s);
+    assert_eq!(mask.len(), b * s);
+    let mut adv = vec![0f32; b * s];
+    let mut ret = vec![0f32; b * s];
+    for i in 0..b {
+        let row = i * s;
+        let mut carry = 0f32;
+        for t in (0..s).rev() {
+            let nm = if t + 1 < s { mask[row + t + 1] } else { 0.0 };
+            let nv = if t + 1 < s { values[row + t + 1] } else { 0.0 };
+            let delta = rewards[row + t] + gamma * nv * nm - values[row + t];
+            carry = delta + gamma * lam * nm * carry;
+            adv[row + t] = carry * mask[row + t];
+            ret[row + t] = (carry + values[row + t]) * mask[row + t];
+        }
+    }
+    (adv, ret)
+}
+
+/// Mean of the masked entries (step-level reward metric for Alg. 1's
+/// `reward_scores` window).
+pub fn masked_mean(xs: &[f32], mask: &[f32]) -> f32 {
+    let mut num = 0f32;
+    let mut den = 0f32;
+    for (x, m) in xs.iter().zip(mask) {
+        num += x * m;
+        den += m;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_hand_computed_example() {
+        // Same fixture as python/tests/test_kernel.py::test_gae_manual_tiny
+        let (gamma, lam) = (0.5, 0.5);
+        let r = [1.0, 2.0, 3.0];
+        let v = [0.5, 1.0, 1.5];
+        let m = [1.0, 1.0, 1.0];
+        let (adv, ret) = gae(&r, &v, &m, 1, 3, gamma, lam);
+        let want = [1.53125, 2.125, 1.5];
+        for (a, w) in adv.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-6, "{a} vs {w}");
+        }
+        for t in 0..3 {
+            assert!((ret[t] - (want[t] + v[t])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn masked_tail_is_zero_and_independent() {
+        let s = 6;
+        let r1 = [1.0, -0.5, 2.0, 99.0, -99.0, 7.0];
+        let r2 = [1.0, -0.5, 2.0, 0.0, 0.0, 0.0];
+        let v = [0.1; 6];
+        let m = [1.0, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let (a1, _) = gae(&r1, &v, &m, 1, s, 0.99, 0.95);
+        let (a2, _) = gae(&r2, &v, &m, 1, s, 0.99, 0.95);
+        assert_eq!(&a1[..3], &a2[..3]);
+        assert!(a1[3..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn gamma_zero_reduces_to_td_residual() {
+        let r = [1.0, 2.0, 3.0];
+        let v = [0.5, 0.25, 0.125];
+        let m = [1.0; 3];
+        let (adv, _) = gae(&r, &v, &m, 1, 3, 0.0, 0.95);
+        for t in 0..3 {
+            assert!((adv[t] - (r[t] - v[t])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn multi_row_independence() {
+        let r = [1.0, 2.0, /* row 2 */ 5.0, -1.0];
+        let v = [0.0, 0.0, 0.0, 0.0];
+        let m = [1.0, 1.0, 1.0, 1.0];
+        let (adv, _) = gae(&r, &v, &m, 2, 2, 1.0, 1.0);
+        // row 0: A1 = 2, A0 = 1 + 2 = 3 ; row 1: A1 = -1, A0 = 5 - 1 = 4
+        assert_eq!(adv, vec![3.0, 2.0, 4.0, -1.0]);
+    }
+
+    #[test]
+    fn masked_mean_basics() {
+        assert_eq!(masked_mean(&[1.0, 5.0, 100.0], &[1.0, 1.0, 0.0]), 3.0);
+        assert_eq!(masked_mean(&[1.0], &[0.0]), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! PPO math mirrored in Rust.
+//!
+//! The authoritative implementations live in L2 (`python/compile/model.py`)
+//! and run as AOT executables; these mirrors exist to (a) cross-check the
+//! artifacts numerically in integration tests, and (b) compose the
+//! per-token reward vector (score + KL penalty) on the host, which is
+//! cheap elementwise work not worth a device dispatch.
+
+pub mod gae;
+pub mod reward;
+
+pub use reward::compose_rewards;

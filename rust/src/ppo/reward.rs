@@ -1,0 +1,95 @@
+//! Per-token reward composition (§2.1): sequence-level score at the final
+//! response token plus an InstructGPT-style per-token KL penalty
+//! `-β (log π_actor − log π_ref)` that regularizes the policy toward the
+//! frozen reference model.
+
+/// Inputs for one sequence's reward vector.
+pub struct RewardInputs<'a> {
+    /// scalar score for the full sequence (reward model and/or rule)
+    pub score: f32,
+    /// actor log-probs of the response tokens (length = response len)
+    pub actor_logp: &'a [f32],
+    /// reference log-probs of the same tokens
+    pub ref_logp: &'a [f32],
+    /// KL coefficient β
+    pub kl_beta: f32,
+}
+
+/// Compose the per-token reward row for one sequence.
+///
+/// Returns a vector with one entry per response token: every token gets the
+/// KL term; the last token additionally receives the sequence score.
+pub fn compose_rewards(inp: &RewardInputs) -> Vec<f32> {
+    assert_eq!(inp.actor_logp.len(), inp.ref_logp.len());
+    let n = inp.actor_logp.len();
+    let mut out = Vec::with_capacity(n);
+    for t in 0..n {
+        let mut r = -inp.kl_beta * (inp.actor_logp[t] - inp.ref_logp[t]);
+        if t + 1 == n {
+            r += inp.score;
+        }
+        out.push(r);
+    }
+    out
+}
+
+/// Blend a learned reward-model score with the rule reward (the paper runs
+/// both RM-scored and rule-based settings; §4.1).
+pub fn blend_score(rm_score: f32, rule_score: f32, rm_weight: f64) -> f32 {
+    let w = rm_weight as f32;
+    w * rm_score + (1.0 - w) * rule_score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_term_signs() {
+        // actor more confident than ref => positive KL => negative reward
+        let r = compose_rewards(&RewardInputs {
+            score: 0.0,
+            actor_logp: &[-0.1, -0.1],
+            ref_logp: &[-1.0, -1.0],
+            kl_beta: 0.5,
+        });
+        assert!(r.iter().all(|&x| x < 0.0));
+        // actor on-reference => zero KL penalty
+        let r = compose_rewards(&RewardInputs {
+            score: 2.0,
+            actor_logp: &[-0.3, -0.3],
+            ref_logp: &[-0.3, -0.3],
+            kl_beta: 0.5,
+        });
+        assert_eq!(r, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn score_lands_on_last_token_only() {
+        let r = compose_rewards(&RewardInputs {
+            score: 3.0,
+            actor_logp: &[-1.0, -1.0, -1.0],
+            ref_logp: &[-1.0, -1.0, -1.0],
+            kl_beta: 0.1,
+        });
+        assert_eq!(r, vec![0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_response_is_empty() {
+        let r = compose_rewards(&RewardInputs {
+            score: 1.0,
+            actor_logp: &[],
+            ref_logp: &[],
+            kl_beta: 0.1,
+        });
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn blend_endpoints() {
+        assert_eq!(blend_score(2.0, -1.0, 1.0), 2.0);
+        assert_eq!(blend_score(2.0, -1.0, 0.0), -1.0);
+        assert!((blend_score(2.0, -1.0, 0.25) - (-0.25)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,250 @@
+//! The PJRT engine: load HLO-text artifacts, compile once per entry point,
+//! execute from the hot path with device-resident buffers.
+//!
+//! Design points (EXPERIMENTS.md §Perf):
+//!
+//! * **Compile once** — executables are cached per entry name; compiles
+//!   happen at startup (`precompile`) or on first use.
+//! * **Device-resident state** — `execute` uses the patched
+//!   `execute_b_untupled`, so a tuple-rooted computation returns one buffer
+//!   per element.  Params, optimizer state, token buffers, and KV caches
+//!   never round-trip through the host between calls; only small arrays
+//!   (sampled tokens, log-probs, scores) are downloaded each chunk.
+//! * **Thread-safe** — PJRT's compile/execute are thread-safe; the actor
+//!   and reward workers execute concurrently from their own threads, which
+//!   is what realizes intra-step overlap on this backend.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+
+/// Cumulative per-entry execution counters (lock-free reads on the hot path).
+#[derive(Default)]
+pub struct EntryStats {
+    pub calls: AtomicU64,
+    pub nanos: AtomicU64,
+}
+
+/// PJRT engine over one artifact directory.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    executables: RwLock<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    stats: Mutex<HashMap<String, Arc<EntryStats>>>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over `dir` (must contain `manifest.json`).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(anyhow::Error::from).context("PJRT CPU client")?;
+        log::info!(
+            "engine: platform={} devices={} entries={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.entries.len()
+        );
+        Ok(Self {
+            client,
+            manifest,
+            executables: RwLock::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling + caching on first use) an entry's executable.
+    pub fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.read().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.entry(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(anyhow::Error::from)
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("compiling {name}"))?;
+        log::debug!("compiled {name} in {:.2?}", t0.elapsed());
+        let exe = Arc::new(exe);
+        self.executables.write().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile a set of entries up front (startup, off the hot path).
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.executable(name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry with device-resident arguments; returns one buffer
+    /// per output tuple element.  Validates arity against the manifest.
+    pub fn execute(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let spec = self.manifest.entry(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!("{name}: got {} args, manifest says {}", args.len(), spec.inputs.len());
+        }
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let mut outs = exe
+            .execute_b_untupled(args)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("executing {name}"))?;
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        let stats = self.entry_stats(name);
+        stats.calls.fetch_add(1, Ordering::Relaxed);
+        stats.nanos.fetch_add(elapsed, Ordering::Relaxed);
+
+        if outs.len() != 1 {
+            bail!("{name}: expected 1 replica, got {}", outs.len());
+        }
+        let bufs = outs.pop().unwrap();
+        if bufs.len() != spec.outputs.len() {
+            bail!("{name}: got {} outputs, manifest says {}", bufs.len(), spec.outputs.len());
+        }
+        Ok(bufs)
+    }
+
+    fn entry_stats(&self, name: &str) -> Arc<EntryStats> {
+        let mut map = self.stats.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Snapshot of (entry, calls, total_seconds), sorted by time desc.
+    pub fn stats_snapshot(&self) -> Vec<(String, u64, f64)> {
+        let map = self.stats.lock().unwrap();
+        let mut rows: Vec<(String, u64, f64)> = map
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(), v.calls.load(Ordering::Relaxed),
+                 v.nanos.load(Ordering::Relaxed) as f64 * 1e-9)
+            })
+            .collect();
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        rows
+    }
+
+    // ---- host <-> device helpers ----
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(anyhow::Error::from)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(anyhow::Error::from)
+    }
+
+    pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(anyhow::Error::from)
+    }
+
+    pub fn zeros_f32(&self, dims: &[usize]) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        self.upload_f32(&vec![0.0; n], dims)
+    }
+
+    pub fn scalar_i32(&self, x: i32) -> Result<PjRtBuffer> {
+        self.upload_i32(&[x], &[])
+    }
+
+    // Downloads go through a host literal: the CPU PJRT plugin does not
+    // implement CopyRawToHost.  Only small tensors (tokens, log-probs,
+    // scores, stats) are downloaded on the hot path.
+    pub fn download_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(anyhow::Error::from)?;
+        lit.to_vec::<f32>().map_err(anyhow::Error::from)
+    }
+
+    pub fn download_i32(&self, buf: &PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf.to_literal_sync().map_err(anyhow::Error::from)?;
+        lit.to_vec::<i32>().map_err(anyhow::Error::from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir).join("manifest.json").exists().then(|| {
+            Engine::load(dir).expect("engine loads")
+        })
+    }
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let Some(e) = engine() else { return };
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let buf = e.upload_f32(&data, &[3, 4]).unwrap();
+        assert_eq!(e.download_f32(&buf).unwrap(), data);
+        let ints: Vec<i32> = (0..6).collect();
+        let buf = e.upload_i32(&ints, &[6]).unwrap();
+        assert_eq!(e.download_i32(&buf).unwrap(), ints);
+    }
+
+    #[test]
+    fn gae_executes_and_matches_rust_mirror() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest().shape.clone();
+        let (b, s) = (m.ppo_batch, m.s_max);
+        let mut rewards = vec![0f32; b * s];
+        let mut values = vec![0f32; b * s];
+        let mut mask = vec![0f32; b * s];
+        for i in 0..b {
+            for t in 0..10 {
+                rewards[i * s + t] = (t as f32 * 0.3).sin();
+                values[i * s + t] = (t as f32 * 0.1).cos();
+                mask[i * s + t] = 1.0;
+            }
+        }
+        let args = [
+            e.upload_f32(&rewards, &[b, s]).unwrap(),
+            e.upload_f32(&values, &[b, s]).unwrap(),
+            e.upload_f32(&mask, &[b, s]).unwrap(),
+        ];
+        let arg_refs: Vec<&PjRtBuffer> = args.iter().collect();
+        let outs = e.execute("gae", &arg_refs).unwrap();
+        assert_eq!(outs.len(), 2);
+        let adv = e.download_f32(&outs[0]).unwrap();
+
+        let (want_adv, _) = crate::ppo::gae::gae(
+            &rewards, &values, &mask, b, s, m.gamma as f32, m.lam as f32,
+        );
+        for (a, w) in adv.iter().zip(&want_adv) {
+            assert!((a - w).abs() < 1e-4, "{a} vs {w}");
+        }
+        // stats recorded
+        let snap = e.stats_snapshot();
+        assert!(snap.iter().any(|(n, c, _)| n == "gae" && *c == 1));
+    }
+
+    #[test]
+    fn arity_mismatch_is_rejected() {
+        let Some(e) = engine() else { return };
+        let buf = e.upload_f32(&[0.0], &[1]).unwrap();
+        assert!(e.execute("gae", &[&buf]).is_err());
+    }
+}

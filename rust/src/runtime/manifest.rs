@@ -1,0 +1,268 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the AOT
+//! compiler (`python/compile/aot.py`) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Static model/shape configuration baked into the artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelShape {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub s_max: usize,
+    pub prompt_max: usize,
+    /// generation lanes G = ppo_batch + delta_max
+    pub lanes: usize,
+    pub ppo_batch: usize,
+    pub chunk_sizes: Vec<usize>,
+    pub gamma: f64,
+    pub lam: f64,
+    pub kl_beta_default: f64,
+}
+
+impl ModelShape {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Shape of one KV cache tensor for `batch` lanes.
+    pub fn kv_shape(&self, batch: usize) -> Vec<usize> {
+        vec![batch, self.n_heads, self.s_max, self.head_dim()]
+    }
+
+    /// Total parameter count (elements) of one model.
+    pub fn approx_params(&self) -> usize {
+        let d = self.d_model;
+        self.vocab * d + self.s_max * d + self.n_layers * (4 * d * d + 2 * d * self.d_ff) + 4 * d
+    }
+}
+
+/// One tensor in an entry-point signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One parameter tensor's slot in `params_*.bin`.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub shape: ModelShape,
+    pub n_params: usize,
+    pub param_table: Vec<ParamSpec>,
+    pub params_files: BTreeMap<String, String>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub tokenizer: Value,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        if v.get("format_version")?.as_usize()? != 1 {
+            bail!("unsupported manifest format_version");
+        }
+
+        let cfg = v.get("config")?;
+        let shape = ModelShape {
+            vocab: cfg.get("vocab")?.as_usize()?,
+            d_model: cfg.get("d_model")?.as_usize()?,
+            n_heads: cfg.get("n_heads")?.as_usize()?,
+            n_layers: cfg.get("n_layers")?.as_usize()?,
+            d_ff: cfg.get("d_ff")?.as_usize()?,
+            s_max: cfg.get("s_max")?.as_usize()?,
+            prompt_max: cfg.get("prompt_max")?.as_usize()?,
+            lanes: cfg.get("lanes")?.as_usize()?,
+            ppo_batch: cfg.get("ppo_batch")?.as_usize()?,
+            chunk_sizes: cfg.get("chunk_sizes")?.as_usize_vec()?,
+            gamma: cfg.get("gamma")?.as_f64()?,
+            lam: cfg.get("lam")?.as_f64()?,
+            kl_beta_default: cfg.opt("kl_beta").map(|x| x.as_f64()).transpose()?.unwrap_or(0.02),
+        };
+
+        let param_table = v
+            .get("param_table")?
+            .as_arr()?
+            .iter()
+            .map(|row| {
+                Ok(ParamSpec {
+                    name: row.get("name")?.as_str()?.to_string(),
+                    shape: row.get("shape")?.as_usize_vec()?,
+                    offset: row.get("offset")?.as_usize()?,
+                    bytes: row.get("bytes")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let params_files = v
+            .get("params_files")?
+            .as_obj()?
+            .iter()
+            .map(|(k, f)| Ok((k.clone(), f.as_str()?.to_string())))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.as_obj()? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            shape: t.get("shape")?.as_usize_vec()?,
+                            dtype: t.get("dtype")?.as_str()?.to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+
+        let manifest = Manifest {
+            dir,
+            shape,
+            n_params: v.get("n_params")?.as_usize()?,
+            param_table,
+            params_files,
+            entries,
+            tokenizer: v.get("tokenizer")?.clone(),
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.param_table.len() != self.n_params {
+            bail!("param_table length {} != n_params {}", self.param_table.len(), self.n_params);
+        }
+        let mut offset = 0;
+        for p in &self.param_table {
+            if p.offset != offset {
+                bail!("param {} offset {} != expected {offset}", p.name, p.offset);
+            }
+            let elems: usize = p.shape.iter().product::<usize>().max(1);
+            if p.bytes != 4 * elems {
+                bail!("param {} bytes {} != 4 * {elems}", p.name, p.bytes);
+            }
+            offset += p.bytes;
+        }
+        if self.shape.lanes <= self.shape.ppo_batch {
+            bail!("lanes must exceed ppo_batch (need room for Δ)");
+        }
+        for required in ["actor_prefill", "reward_score_full", "ref_logprobs", "gae", "ppo_update"]
+        {
+            if !self.entries.contains_key(required) {
+                bail!("manifest missing required entry {required:?}");
+            }
+        }
+        for c in &self.shape.chunk_sizes {
+            for prefix in ["actor_generate_chunk_c", "reward_prefill_chunk_c"] {
+                let name = format!("{prefix}{c}");
+                if !self.entries.contains_key(&name) {
+                    bail!("manifest missing chunk variant {name:?}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total bytes of one params file.
+    pub fn params_bytes(&self) -> usize {
+        self.param_table.last().map(|p| p.offset + p.bytes).unwrap_or(0)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("entry {name:?} not in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()))
+    }
+
+    /// The Pallas-flavoured reward-prefill entry name, if shipped.
+    pub fn pallas_reward_entry(&self) -> Option<(&str, usize)> {
+        self.entries.keys().find_map(|k| {
+            k.strip_prefix("reward_prefill_chunk_pallas_c")
+                .and_then(|c| c.parse::<usize>().ok())
+                .map(|c| (k.as_str(), c))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.shape.ppo_batch + 4, m.shape.lanes);
+        assert_eq!(m.n_params, m.shape.n_layers * 12 + 6);
+        assert!(m.params_bytes() > 0);
+        assert!(m.pallas_reward_entry().is_some());
+        let gen = m.entry(&format!("actor_generate_chunk_c{}", m.shape.chunk_sizes[0])).unwrap();
+        assert_eq!(gen.inputs.len(), m.n_params + 3 + 2 * m.shape.n_layers + 1);
+    }
+
+    #[test]
+    fn kv_shape_dims() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let kv = m.shape.kv_shape(m.shape.lanes);
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv[0], m.shape.lanes);
+        assert_eq!(kv[2], m.shape.s_max);
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

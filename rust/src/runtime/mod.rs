@@ -1,0 +1,16 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compile once per entry point, and execute from
+//! the coordinator's hot path with device-resident state.
+//!
+//! Adapted from `/opt/xla-example/load_hlo` with two hot-path extensions:
+//! untupled execution (`execute_b_untupled`, vendored-crate patch) so
+//! recurrent state feeds straight back in as buffers, and thread-safe
+//! sharing so the actor/reward workers overlap for real.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+
+pub use engine::Engine;
+pub use manifest::{EntrySpec, Manifest, ModelShape, ParamSpec, TensorSpec};
+pub use params::ParamSet;

@@ -1,0 +1,134 @@
+//! Parameter sets: raw `params_*.bin` → device-resident buffer lists.
+//!
+//! A [`ParamSet`] is the opaque `Vec<PjRtBuffer>` threaded through the AOT
+//! entry points.  `ppo_update` returns fresh param/optimizer buffers; the
+//! trainer swaps them in without any host copy (the weights live on device
+//! for the entire run).
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use super::engine::Engine;
+
+/// One model's parameters (or one Adam moment set) on device, in the
+/// canonical manifest order.
+pub struct ParamSet {
+    bufs: Vec<PjRtBuffer>,
+}
+
+impl ParamSet {
+    /// Load `params_<which>.bin` (which ∈ actor|reward|ref) onto the device.
+    pub fn load(engine: &Engine, which: &str) -> Result<Self> {
+        let m = engine.manifest();
+        let file = m
+            .params_files
+            .get(which)
+            .with_context(|| format!("no params file for {which:?} in manifest"))?;
+        let path = m.dir.join(file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != m.params_bytes() {
+            bail!(
+                "{}: {} bytes on disk, manifest says {}",
+                path.display(), bytes.len(), m.params_bytes()
+            );
+        }
+        let mut bufs = Vec::with_capacity(m.param_table.len());
+        for spec in &m.param_table {
+            let raw = &bytes[spec.offset..spec.offset + spec.bytes];
+            // params are little-endian f32 (native on all supported targets)
+            let floats: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            bufs.push(engine.upload_f32(&floats, &spec.shape)?);
+        }
+        Ok(Self { bufs })
+    }
+
+    /// Zero-initialized set with the same shapes (Adam m/v).
+    pub fn zeros_like(engine: &Engine) -> Result<Self> {
+        let m = engine.manifest();
+        let mut bufs = Vec::with_capacity(m.param_table.len());
+        for spec in &m.param_table {
+            bufs.push(engine.zeros_f32(&spec.shape)?);
+        }
+        Ok(Self { bufs })
+    }
+
+    /// Wrap buffers returned by an update entry (must match the table arity).
+    pub fn from_bufs(engine: &Engine, bufs: Vec<PjRtBuffer>) -> Result<Self> {
+        if bufs.len() != engine.manifest().param_table.len() {
+            bail!(
+                "param set arity {} != manifest {}",
+                bufs.len(), engine.manifest().param_table.len()
+            );
+        }
+        Ok(Self { bufs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    pub fn bufs(&self) -> &[PjRtBuffer] {
+        &self.bufs
+    }
+
+    /// Download one named parameter (tests / debugging).
+    pub fn download(&self, engine: &Engine, name: &str) -> Result<Vec<f32>> {
+        let idx = engine
+            .manifest()
+            .param_table
+            .iter()
+            .position(|p| p.name == name)
+            .with_context(|| format!("no param named {name:?}"))?;
+        engine.download_f32(&self.bufs[idx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("manifest.json")
+            .exists()
+            .then(|| Engine::load(dir).unwrap())
+    }
+
+    #[test]
+    fn actor_and_ref_params_are_identical() {
+        let Some(e) = engine() else { return };
+        let actor = ParamSet::load(&e, "actor").unwrap();
+        let refm = ParamSet::load(&e, "ref").unwrap();
+        let a = actor.download(&e, "embed").unwrap();
+        let r = refm.download(&e, "embed").unwrap();
+        assert_eq!(a, r);
+        let reward = ParamSet::load(&e, "reward").unwrap();
+        let w = reward.download(&e, "embed").unwrap();
+        assert_ne!(a, w);
+    }
+
+    #[test]
+    fn zeros_like_is_zero() {
+        let Some(e) = engine() else { return };
+        let z = ParamSet::zeros_like(&e).unwrap();
+        assert_eq!(z.len(), e.manifest().param_table.len());
+        let x = z.download(&e, "embed").unwrap();
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn ln_scales_initialized_to_one() {
+        let Some(e) = engine() else { return };
+        let actor = ParamSet::load(&e, "actor").unwrap();
+        let s = actor.download(&e, "l00_ln1_s").unwrap();
+        assert!(s.iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,79 @@
+//! Cluster topology: GPU pools, scoring placement, nodes, interconnect.
+
+use super::gpu::GpuSpec;
+
+/// Hardware + placement for one experiment (the paper's §4.1 setups:
+/// "seven GPUs to the generation and training stages, and one GPU to the
+/// scoring stage").
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterSetup {
+    pub gpu: GpuSpec,
+    /// GPUs in the generation + training pool
+    pub n_gen: usize,
+    /// GPUs dedicated to reward-model scoring (0 ⇒ colocated or rule-based)
+    pub n_score: usize,
+    /// number of nodes the gen pool spans
+    pub nodes: usize,
+    /// inter-node bandwidth, Gb/s (0 ⇒ single node / NVLink only)
+    pub network_gbps: f64,
+    /// true when the reward model shares the generation GPUs
+    pub colocated_scoring: bool,
+}
+
+impl ClusterSetup {
+    /// The paper's default 8-GPU split: 7 gen/train + 1 score.
+    pub fn single_node(gpu: GpuSpec, n_gen: usize, n_score: usize) -> Self {
+        Self { gpu, n_gen, n_score, nodes: 1, network_gbps: 0.0, colocated_scoring: n_score == 0 }
+    }
+
+    /// Table 1's two-node setup: 2 × 4×A100-40GB over 100 Gb/s IB.
+    pub fn two_node_a100_40() -> Self {
+        Self {
+            gpu: GpuSpec::A100_40,
+            n_gen: 7,
+            n_score: 1,
+            nodes: 2,
+            network_gbps: 100.0,
+            colocated_scoring: false,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.n_gen + self.n_score
+    }
+
+    /// Cross-node communication is on the training path iff multi-node.
+    pub fn train_network_gbps(&self) -> f64 {
+        if self.nodes > 1 {
+            self.network_gbps
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_split() {
+        let c = ClusterSetup::single_node(GpuSpec::H200, 7, 1);
+        assert_eq!(c.total_gpus(), 8);
+        assert!(!c.colocated_scoring);
+        assert_eq!(c.train_network_gbps(), 0.0);
+    }
+
+    #[test]
+    fn colocation_when_no_score_gpu() {
+        let c = ClusterSetup::single_node(GpuSpec::GH200_96, 4, 0);
+        assert!(c.colocated_scoring);
+    }
+
+    #[test]
+    fn multinode_exposes_network() {
+        let c = ClusterSetup::two_node_a100_40();
+        assert_eq!(c.nodes, 2);
+        assert_eq!(c.train_network_gbps(), 100.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Per-stage latency rooflines for transformer inference/training.
+//!
+//! Stage characters (the paper's §2.2 observation, Fig. 2a):
+//!
+//! * **decode** — one token per sequence per iteration; every iteration
+//!   streams the full weight set (plus KV) through HBM ⇒ bandwidth-bound,
+//!   utilization well under 40%;
+//! * **prefill / scoring** — processes whole sequences at once ⇒ MXU/tensor
+//!   compute-bound, high utilization;
+//! * **training** — fwd+bwd (≈3× forward FLOPs) ⇒ compute-bound + an
+//!   allreduce term.
+//!
+//! A per-framework `software_efficiency` scales achievable throughput (TRL's
+//! HF-generate loop is far from roofline; that inefficiency is part of what
+//! the paper measures).  Calibration notes live in DESIGN.md §1.
+
+use super::gpu::GpuSpec;
+
+/// Transformer size entering the cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// total parameters
+    pub params: f64,
+    pub n_layers: f64,
+    pub hidden: f64,
+    pub n_heads: f64,
+}
+
+impl ModelSpec {
+    pub const QWEN25_7B: ModelSpec =
+        ModelSpec { name: "Qwen2.5-7B", params: 7.6e9, n_layers: 28.0, hidden: 3584.0, n_heads: 28.0 };
+    pub const QWEN25_3B: ModelSpec =
+        ModelSpec { name: "Qwen2.5-3B", params: 3.1e9, n_layers: 36.0, hidden: 2048.0, n_heads: 16.0 };
+
+    /// bf16 weight bytes.
+    pub fn weight_bytes(&self) -> f64 {
+        2.0 * self.params
+    }
+
+    /// KV-cache bytes for one sequence of `ctx` tokens (bf16, MHA).
+    pub fn kv_bytes_per_seq(&self, ctx: f64) -> f64 {
+        2.0 * 2.0 * self.n_layers * self.hidden * ctx
+    }
+}
+
+/// Per-stage cost model over a GPU pool of `n_gpus` identical devices.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    /// tensor-parallel degree for latency-critical ops
+    pub tp: f64,
+    /// achievable fraction of roofline for this software stack (0, 1]
+    pub software_efficiency: f64,
+    /// fixed per-kernel-launch / scheduling overhead per decode iteration
+    pub iter_overhead_s: f64,
+}
+
+impl CostModel {
+    /// Seconds for ONE decode iteration serving `batch` sequences at mean
+    /// context `ctx`.  Bandwidth term: weights once + live KV; compute
+    /// term: 2·P FLOPs per token.
+    pub fn decode_iter(&self, batch: f64, ctx: f64) -> f64 {
+        let eff_bw = self.gpu.hbm_gbps * 1e9 * self.tp * self.software_efficiency;
+        let bytes = self.model.weight_bytes() + batch * self.model.kv_bytes_per_seq(ctx);
+        let mem = bytes / eff_bw;
+        let eff_fl = self.gpu.fp16_tflops * 1e12 * self.tp * self.software_efficiency;
+        let compute = (2.0 * self.model.params * batch) / eff_fl;
+        mem.max(compute) + self.iter_overhead_s
+    }
+
+    /// Useful FLOPs executed by one decode iteration (for utilization).
+    pub fn decode_iter_flops(&self, batch: f64) -> f64 {
+        2.0 * self.model.params * batch
+    }
+
+    /// Seconds to prefill `tokens` total tokens (scoring / reference /
+    /// value prefill — compute-bound with a quadratic attention term).
+    pub fn prefill(&self, tokens: f64, mean_ctx: f64) -> f64 {
+        let linear = 2.0 * self.model.params * tokens;
+        let attn = 2.0 * self.model.n_layers * self.hidden_sq() * 0.0
+            + 4.0 * self.model.n_layers * self.model.hidden * tokens * mean_ctx;
+        let eff_fl = self.gpu.fp16_tflops * 1e12 * self.tp * self.software_efficiency;
+        let compute = (linear + attn) / eff_fl;
+        let mem = self.model.weight_bytes() / (self.gpu.hbm_gbps * 1e9 * self.tp);
+        compute.max(mem)
+    }
+
+    pub fn prefill_flops(&self, tokens: f64, mean_ctx: f64) -> f64 {
+        2.0 * self.model.params * tokens
+            + 4.0 * self.model.n_layers * self.model.hidden * tokens * mean_ctx
+    }
+
+    fn hidden_sq(&self) -> f64 {
+        self.model.hidden * self.model.hidden
+    }
+
+    /// Seconds for one optimizer step over `tokens` tokens on `n_gpus`
+    /// data-parallel workers (fwd+bwd ≈ 6·P FLOPs per token) plus a ring
+    /// allreduce of the gradients over `network_gbps` (0 ⇒ NVLink-local,
+    /// modeled inside software_efficiency).
+    pub fn train_step(&self, tokens: f64, n_gpus: f64, network_gbps: f64) -> f64 {
+        let eff_fl =
+            self.gpu.fp16_tflops * 1e12 * n_gpus * self.software_efficiency;
+        let compute = 6.0 * self.model.params * tokens / eff_fl;
+        let comm = if network_gbps > 0.0 {
+            // ring allreduce: 2·(n-1)/n · bytes over the slowest link
+            2.0 * (n_gpus - 1.0) / n_gpus * self.model.weight_bytes()
+                / (network_gbps / 8.0 * 1e9)
+        } else {
+            0.0
+        };
+        compute + comm
+    }
+
+    pub fn train_flops(&self, tokens: f64) -> f64 {
+        6.0 * self.model.params * tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel {
+            model: ModelSpec::QWEN25_7B,
+            gpu: GpuSpec::H200,
+            tp: 1.0,
+            software_efficiency: 0.5,
+            iter_overhead_s: 2e-4,
+        }
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound_at_small_batch() {
+        let m = cm();
+        // tiny batch: memory term dominates → time ≈ weights / eff_bw
+        let t = m.decode_iter(1.0, 512.0);
+        let floor = m.model.weight_bytes() / (m.gpu.hbm_gbps * 1e9 * 0.5);
+        assert!(t >= floor);
+        assert!(t < 3.0 * floor, "t={t}, floor={floor}");
+    }
+
+    #[test]
+    fn decode_utilization_is_low_prefill_high() {
+        let m = cm();
+        let b = 16.0;
+        let t_dec = m.decode_iter(b, 512.0);
+        let util_dec = m.decode_iter_flops(b) / (t_dec * m.gpu.fp16_tflops * 1e12);
+        // the Fig. 2a observation: decode well under 40%
+        assert!(util_dec < 0.4, "decode util {util_dec}");
+        let tokens = 4096.0;
+        let t_pre = m.prefill(tokens, 512.0);
+        let util_pre = m.prefill_flops(tokens, 512.0) / (t_pre * m.gpu.fp16_tflops * 1e12);
+        assert!(util_pre > util_dec * 2.0, "prefill {util_pre} vs decode {util_dec}");
+    }
+
+    #[test]
+    fn decode_iter_grows_with_batch_and_ctx() {
+        let m = cm();
+        assert!(m.decode_iter(64.0, 1024.0) > m.decode_iter(8.0, 1024.0));
+        assert!(m.decode_iter(8.0, 4096.0) > m.decode_iter(8.0, 256.0));
+    }
+
+    #[test]
+    fn train_comm_term_matters_across_nodes() {
+        let m = cm();
+        let local = m.train_step(10_000.0, 8.0, 0.0);
+        let cross = m.train_step(10_000.0, 8.0, 100.0); // 100 Gb/s IB
+        assert!(cross > local * 1.5, "local {local}, cross {cross}");
+    }
+
+    #[test]
+    fn software_efficiency_scales_latency() {
+        let fast = cm();
+        let mut slow = cm();
+        slow.software_efficiency = 0.1;
+        assert!(slow.decode_iter(8.0, 512.0) > 3.0 * fast.decode_iter(8.0, 512.0));
+    }
+}

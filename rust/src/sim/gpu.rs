@@ -1,0 +1,136 @@
+//! GPU device specs and utilization accounting (Fig. 2a / Fig. 5 inputs).
+
+/// Peak capabilities of one accelerator (dense fp16/bf16).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// dense fp16 tensor throughput, TFLOP/s
+    pub fp16_tflops: f64,
+    /// HBM bandwidth, GB/s
+    pub hbm_gbps: f64,
+    /// device memory, GB
+    pub mem_gb: f64,
+}
+
+impl GpuSpec {
+    pub const A40: GpuSpec =
+        GpuSpec { name: "A40", fp16_tflops: 149.7, hbm_gbps: 696.0, mem_gb: 48.0 };
+    pub const A100_80: GpuSpec =
+        GpuSpec { name: "A100-80GB", fp16_tflops: 312.0, hbm_gbps: 2039.0, mem_gb: 80.0 };
+    pub const A100_40: GpuSpec =
+        GpuSpec { name: "A100-40GB", fp16_tflops: 312.0, hbm_gbps: 1555.0, mem_gb: 40.0 };
+    pub const H200: GpuSpec =
+        GpuSpec { name: "H200", fp16_tflops: 989.0, hbm_gbps: 4800.0, mem_gb: 141.0 };
+    pub const GH200_96: GpuSpec =
+        GpuSpec { name: "GH200-96GB", fp16_tflops: 989.0, hbm_gbps: 4000.0, mem_gb: 96.0 };
+
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name {
+            "A40" => Some(Self::A40),
+            "A100-80GB" | "A100" => Some(Self::A100_80),
+            "A100-40GB" => Some(Self::A100_40),
+            "H200" => Some(Self::H200),
+            "GH200-96GB" | "GH200" => Some(Self::GH200_96),
+            _ => None,
+        }
+    }
+
+    /// Seconds to stream `bytes` once through HBM.
+    pub fn mem_time(&self, bytes: f64) -> f64 {
+        bytes / (self.hbm_gbps * 1e9)
+    }
+
+    /// Seconds to execute `flops` at peak (caller applies efficiency).
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / (self.fp16_tflops * 1e12)
+    }
+}
+
+/// Accumulates (busy-flop, wall-time) per named phase — utilization is
+/// achieved-FLOPs over peak-FLOPs for the wall time, the metric behind
+/// Figures 2a and 5.
+#[derive(Clone, Debug, Default)]
+pub struct UtilAccounting {
+    entries: Vec<(String, f64, f64)>, // (phase, seconds, flops)
+    peak_tflops: f64,
+    gpus: f64,
+}
+
+impl UtilAccounting {
+    pub fn new(peak_tflops: f64, gpus: f64) -> Self {
+        Self { entries: Vec::new(), peak_tflops, gpus }
+    }
+
+    /// Record `seconds` of wall time in `phase` during which `flops` of
+    /// useful work executed across the whole pool.
+    pub fn record(&mut self, phase: &str, seconds: f64, flops: f64) {
+        if seconds > 0.0 {
+            self.entries.push((phase.to_string(), seconds, flops));
+        }
+    }
+
+    /// Pool-wide utilization over all recorded time.
+    pub fn overall(&self) -> f64 {
+        let wall: f64 = self.entries.iter().map(|e| e.1).sum();
+        let flops: f64 = self.entries.iter().map(|e| e.2).sum();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        (flops / (wall * self.peak_tflops * 1e12 * self.gpus)).min(1.0)
+    }
+
+    /// Utilization restricted to one phase.
+    pub fn phase(&self, phase: &str) -> f64 {
+        let wall: f64 = self.entries.iter().filter(|e| e.0 == phase).map(|e| e.1).sum();
+        let flops: f64 = self.entries.iter().filter(|e| e.0 == phase).map(|e| e.2).sum();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        (flops / (wall * self.peak_tflops * 1e12 * self.gpus)).min(1.0)
+    }
+
+    pub fn total_wall(&self) -> f64 {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_sane() {
+        assert!(GpuSpec::H200.hbm_gbps > GpuSpec::A100_80.hbm_gbps);
+        assert!(GpuSpec::A100_80.hbm_gbps > GpuSpec::A40.hbm_gbps);
+        assert!(GpuSpec::by_name("H200").unwrap().mem_gb == 141.0);
+        assert!(GpuSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn roofline_times() {
+        let g = GpuSpec::A100_80;
+        // 2 GB stream at ~2 TB/s ≈ 1 ms
+        let t = g.mem_time(2e9);
+        assert!((t - 2e9 / 2.039e12).abs() < 1e-9);
+        // 312 TFLOP at peak = 1 s
+        assert!((g.compute_time(312e12) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut u = UtilAccounting::new(100.0, 1.0); // 100 TFLOP/s peak
+        u.record("decode", 1.0, 20e12); // 20% busy
+        u.record("train", 1.0, 80e12); // 80% busy
+        assert!((u.phase("decode") - 0.2).abs() < 1e-9);
+        assert!((u.phase("train") - 0.8).abs() < 1e-9);
+        assert!((u.overall() - 0.5).abs() < 1e-9);
+        assert_eq!(u.phase("missing"), 0.0);
+    }
+
+    #[test]
+    fn utilization_caps_at_one() {
+        let mut u = UtilAccounting::new(1.0, 1.0);
+        u.record("x", 1.0, 9e12);
+        assert_eq!(u.overall(), 1.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Long-tailed, phase-evolving response-length distributions (Fig. 2b).
+//!
+//! Lengths are lognormal (median `exp(mu)`, tail weight `sigma`) truncated
+//! at `max_len`.  `mu`/`sigma` interpolate between a warm-up profile and a
+//! converged profile as training progresses — the paper's observation that
+//! "the length distribution evolves across stages", which is what defeats
+//! static GPU-allocation tuning and motivates the *dynamic* Δ controller.
+
+use crate::util::rng::Rng;
+
+/// One phase's lognormal parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Phase {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+/// Evolving length model.
+#[derive(Clone, Debug)]
+pub struct LengthModel {
+    pub warmup: Phase,
+    pub converged: Phase,
+    pub max_len: f64,
+}
+
+impl LengthModel {
+    /// Interpolated parameters at training progress `p ∈ [0, 1]`.
+    pub fn phase_at(&self, p: f64) -> Phase {
+        let p = p.clamp(0.0, 1.0);
+        Phase {
+            mu: self.warmup.mu + (self.converged.mu - self.warmup.mu) * p,
+            sigma: self.warmup.sigma + (self.converged.sigma - self.warmup.sigma) * p,
+        }
+    }
+
+    /// Sample one response length at progress `p`.
+    pub fn sample(&self, rng: &mut Rng, p: f64) -> f64 {
+        let ph = self.phase_at(p);
+        rng.lognormal(ph.mu, ph.sigma).clamp(1.0, self.max_len)
+    }
+
+    /// Sample a batch of lengths.
+    pub fn sample_batch(&self, rng: &mut Rng, p: f64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng, p)).collect()
+    }
+
+    /// Median at progress `p` (analytic).
+    pub fn median(&self, p: f64) -> f64 {
+        self.phase_at(p).mu.exp().min(self.max_len)
+    }
+
+    /// Analytic tail ratio p99/median at progress `p` (untruncated):
+    /// `exp(2.326 * sigma)`.
+    pub fn tail_ratio(&self, p: f64) -> f64 {
+        (2.326 * self.phase_at(p).sigma).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn model() -> LengthModel {
+        LengthModel {
+            warmup: Phase { mu: 6.0, sigma: 0.9 },
+            converged: Phase { mu: 5.3, sigma: 0.6 },
+            max_len: 8192.0,
+        }
+    }
+
+    #[test]
+    fn long_tail_at_warmup() {
+        let m = model();
+        let mut rng = Rng::new(1);
+        let xs = m.sample_batch(&mut rng, 0.0, 20_000);
+        let med = stats::percentile(&xs, 50.0);
+        let p99 = stats::percentile(&xs, 99.0);
+        assert!(p99 / med > 5.0, "tail ratio {}", p99 / med);
+        assert!((med - 403.0).abs() < 40.0, "median {med} vs exp(6)≈403");
+    }
+
+    #[test]
+    fn distribution_tightens_as_training_converges() {
+        let m = model();
+        let mut rng = Rng::new(2);
+        let warm = m.sample_batch(&mut rng, 0.0, 20_000);
+        let conv = m.sample_batch(&mut rng, 1.0, 20_000);
+        let ratio = |xs: &[f64]| stats::percentile(xs, 99.0) / stats::percentile(xs, 50.0);
+        assert!(ratio(&conv) < ratio(&warm), "{} !< {}", ratio(&conv), ratio(&warm));
+        assert!(stats::percentile(&conv, 50.0) < stats::percentile(&warm, 50.0));
+    }
+
+    #[test]
+    fn truncation_and_floor() {
+        let m = LengthModel {
+            warmup: Phase { mu: 9.0, sigma: 1.5 },
+            converged: Phase { mu: 9.0, sigma: 1.5 },
+            max_len: 1000.0,
+        };
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let x = m.sample(&mut rng, 0.5);
+            assert!((1.0..=1000.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn analytic_helpers_consistent() {
+        let m = model();
+        assert!(m.median(0.0) > m.median(1.0));
+        assert!(m.tail_ratio(0.0) > m.tail_ratio(1.0));
+        // interpolation midpoint
+        let mid = m.phase_at(0.5);
+        assert!((mid.mu - 5.65).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,39 @@
+//! Discrete-event GPU-cluster simulator — the testbed substitute
+//! (DESIGN.md §1) that regenerates the paper's evaluation at Qwen-7B /
+//! 8×H200 scale.
+//!
+//! The real-compute path (runtime + coordinator) proves the *algorithm*;
+//! this simulator reproduces the *efficiency claims*: per-stage roofline
+//! cost models (decode is HBM-bandwidth-bound, prefill/training are
+//! compute-bound), long-tailed and phase-evolving rollout lengths, reward
+//! dynamics with staleness penalties, colocation contention, and multi-node
+//! networking — enough structure for every figure/table shape of §2 and §4
+//! (who wins, by what factor, where crossovers fall).
+//!
+//! * [`gpu`] — device specs (A40 / A100 / H200 / GH200) + utilization
+//!   accounting;
+//! * [`costmodel`] — model FLOPs/bytes and per-stage latency rooflines;
+//! * [`lengths`] — long-tail response-length distributions (Fig. 2b);
+//! * [`rewardmodel`] — reward-vs-step dynamics + staleness (Fig. 2c);
+//! * [`cluster`] — GPU pools, colocation, nodes, interconnect;
+//! * [`pipeline`] — the schedules under study: TRL-sequential, OPPO (full +
+//!   ablations + fixed Δ), async staleness-k, VeRL DP / DP+SP / fully-async
+//!   w/ SP, AReaL;
+//! * [`presets`] — the paper's four experimental setups, calibrated so the
+//!   TRL baseline's stage shares match the paper's reported behaviour.
+
+pub mod cluster;
+pub mod costmodel;
+pub mod gpu;
+pub mod lengths;
+pub mod pipeline;
+pub mod presets;
+pub mod rewardmodel;
+
+pub use cluster::ClusterSetup;
+pub use costmodel::ModelSpec;
+pub use gpu::GpuSpec;
+pub use lengths::LengthModel;
+pub use pipeline::{simulate, Pipeline, SimConfig};
+pub use presets::Setup;
+pub use rewardmodel::RewardCurve;

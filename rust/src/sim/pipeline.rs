@@ -1,0 +1,537 @@
+//! Pipeline schedules under study — the simulator's heart.
+//!
+//! Every schedule steps the same substrate (cost model + length model +
+//! reward process); they differ only in *when* stages run and *what* they
+//! wait for — which is exactly the paper's claim surface:
+//!
+//! * [`Pipeline::TrlSequential`] — generate-all → score-all → train
+//!   (Fig. 1a);
+//! * [`Pipeline::Oppo`] — intra-step streaming + inter-step overcommit
+//!   (Fig. 1b, Alg. 1), with both ablation arms and fixed-Δ variants;
+//! * [`Pipeline::AsyncStale`] — decoupled stages with staleness k
+//!   (Fig. 2c);
+//! * [`Pipeline::VerlDp`] / [`Pipeline::VerlDpSp`] /
+//!   [`Pipeline::VerlAsyncSp`] — VeRL-style schedules (Table 4);
+//! * [`Pipeline::AReal`] — AReaL-style fully-async (Table 4).
+//!
+//! Generation is simulated event-stepped: between consecutive sequence
+//! completions the active set is constant, so time advances in segments of
+//! `(remaining_tokens_delta) × decode_iter(active_batch)`.  Decode is
+//! bandwidth-bound, so the *longest* active sequence governs stage time —
+//! the tail-straggler effect inter-step overlap attacks.
+
+use crate::coordinator::delta::{DeltaController, Policy};
+use crate::metrics::{RunLog, StepRecord};
+use crate::sim::costmodel::CostModel;
+use crate::sim::presets::Setup;
+use crate::sim::rewardmodel::RewardProcess;
+use crate::util::rng::Rng;
+
+/// A schedule to simulate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pipeline {
+    TrlSequential,
+    /// full OPPO or an ablation arm; `fixed_delta` disables the controller
+    Oppo { intra: bool, inter: bool, fixed_delta: Option<usize> },
+    AsyncStale { k: usize },
+    VerlDp,
+    VerlDpSp,
+    VerlAsyncSp,
+    AReal,
+}
+
+impl Pipeline {
+    pub fn oppo() -> Self {
+        Pipeline::Oppo { intra: true, inter: true, fixed_delta: None }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Pipeline::TrlSequential => "trl".into(),
+            Pipeline::Oppo { intra: true, inter: true, fixed_delta: None } => "oppo".into(),
+            Pipeline::Oppo { intra: false, inter: true, fixed_delta: None } => {
+                "oppo-no-intra".into()
+            }
+            Pipeline::Oppo { intra: true, inter: false, .. } => "oppo-no-inter".into(),
+            Pipeline::Oppo { fixed_delta: Some(d), .. } => format!("oppo-fixed-d{d}"),
+            Pipeline::Oppo { .. } => "oppo-variant".into(),
+            Pipeline::AsyncStale { k } => format!("async-k{k}"),
+            Pipeline::VerlDp => "verl-dp".into(),
+            Pipeline::VerlDpSp => "verl-dp-sp".into(),
+            Pipeline::VerlAsyncSp => "verl-async-sp".into(),
+            Pipeline::AReal => "areal".into(),
+        }
+    }
+}
+
+/// Simulation run parameters.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub setup: Setup,
+    pub steps: usize,
+    pub seed: u64,
+    /// intra-step streaming chunk size in tokens (paper's Fig. 7b axis)
+    pub chunk_tokens: f64,
+    /// Δ bounds for the dynamic controller
+    pub delta_max: usize,
+    pub window: usize,
+    /// Δ-update direction convention (the paper specifies both; see
+    /// `coordinator::delta` module docs — Eq4 is the default)
+    pub delta_policy: Policy,
+}
+
+impl SimConfig {
+    pub fn new(setup: Setup, steps: usize, seed: u64) -> Self {
+        let delta_max = setup.delta_max;
+        Self {
+            setup, steps, seed,
+            chunk_tokens: 500.0,
+            delta_max,
+            window: 8,
+            delta_policy: Policy::Eq4,
+        }
+    }
+}
+
+/// One in-flight sequence.
+#[derive(Clone, Debug)]
+struct GenSeq {
+    remaining: f64,
+    total_len: f64,
+    prompt: f64,
+    enq_step: u64,
+}
+
+/// Outcome of one generation stage.
+struct GenOutcome {
+    time: f64,
+    /// total tokens decoded this stage (all lanes)
+    tokens: f64,
+    finished: Vec<GenSeq>,
+}
+
+/// Event-stepped decode: advance until `stop_finished` sequences complete
+/// (or all).  Mutates `active` (finished removed, survivors decremented).
+fn run_generation(
+    active: &mut Vec<GenSeq>,
+    stop_finished: usize,
+    cm: &CostModel,
+    per_gpu_shards: f64,
+) -> GenOutcome {
+    let mut time = 0.0;
+    let mut tokens = 0.0;
+    let mut finished = Vec::new();
+    while !active.is_empty() && finished.len() < stop_finished {
+        let min_rem = active.iter().map(|s| s.remaining).fold(f64::INFINITY, f64::min);
+        let batch = active.len() as f64 / per_gpu_shards.max(1.0);
+        let mean_ctx = active.iter().map(|s| s.prompt + s.total_len - s.remaining).sum::<f64>()
+            / active.len() as f64;
+        let t_iter = cm.decode_iter(batch, mean_ctx);
+        time += min_rem * t_iter;
+        tokens += min_rem * active.len() as f64;
+        for s in active.iter_mut() {
+            s.remaining -= min_rem;
+        }
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].remaining <= 1e-9 {
+                finished.push(active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+    }
+    // simultaneous completions can overshoot the stop target (ties at the
+    // truncation cap); the overflow stays buffered and joins the next
+    // step's first-B selection — exactly Alg. 1's `finished[:B]`
+    while finished.len() > stop_finished {
+        let mut seq = finished.pop().unwrap();
+        seq.remaining = 0.0;
+        active.push(seq);
+    }
+    GenOutcome { time, tokens, finished }
+}
+
+/// Simulate `cfg.steps` PPO steps of `pipeline`; returns a [`RunLog`] whose
+/// `wall_s` is simulated seconds.
+pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
+    let su = &cfg.setup;
+    let mut rng = Rng::new(cfg.seed ^ 0x51D);
+    let mut reward = RewardProcess::new(su.reward, cfg.seed);
+    let mut log = RunLog::new(&pipeline.name(), su.name, cfg.seed);
+
+    let gen_cm = CostModel {
+        model: su.model,
+        gpu: su.cluster.gpu,
+        tp: 1.0,
+        software_efficiency: su.gen_eff * pipeline_gen_eff_factor(pipeline),
+        iter_overhead_s: su.iter_overhead_s,
+    };
+    let score_cm = CostModel {
+        model: su.model,
+        gpu: su.cluster.gpu,
+        tp: su.cluster.n_score.max(1) as f64,
+        software_efficiency: su.score_eff,
+        iter_overhead_s: 0.0,
+    };
+    let train_cm = CostModel {
+        model: su.model,
+        gpu: su.cluster.gpu,
+        tp: 1.0,
+        software_efficiency: su.train_eff,
+        iter_overhead_s: 0.0,
+    };
+
+    let b = su.batch;
+    let mut carried: Vec<GenSeq> = Vec::new();
+    let mut delta_ctl = match pipeline {
+        Pipeline::Oppo { inter: true, fixed_delta: None, .. } => Some(DeltaController::new(
+            (cfg.delta_max / 2).max(1),
+            0,
+            cfg.delta_max,
+            cfg.window,
+            cfg.delta_policy,
+        )),
+        _ => None,
+    };
+    let fixed_delta = match pipeline {
+        Pipeline::Oppo { inter: true, fixed_delta: Some(d), .. } => d,
+        _ => 0,
+    };
+
+    let mut elapsed = 0.0;
+
+    for step in 0..cfg.steps as u64 {
+        let progress = step as f64 / su.total_steps.max(1) as f64;
+
+        // ---- admit prompts ----
+        let (intra, inter) = match pipeline {
+            Pipeline::Oppo { intra, inter, .. } => (intra, inter),
+            _ => (false, false),
+        };
+        let delta = if !inter {
+            0
+        } else if let Some(ctl) = &delta_ctl {
+            ctl.delta()
+        } else {
+            fixed_delta
+        };
+        let want = (b + delta).saturating_sub(carried.len());
+        for _ in 0..want {
+            let len = su.lengths.sample(&mut rng, progress);
+            carried.push(GenSeq {
+                remaining: len,
+                total_len: len,
+                prompt: su.prompt_len,
+                enq_step: step,
+            });
+        }
+
+        // ---- generation ----
+        let shards = su.cluster.n_gen as f64;
+        let stop = if inter { b } else { carried.len() };
+        let (mut gen_time, gen_tokens, finished) = match pipeline {
+            Pipeline::VerlDp | Pipeline::VerlDpSp | Pipeline::VerlAsyncSp => {
+                // data-parallel shards with a stage barrier at the slowest
+                let mut shard_seqs: Vec<Vec<GenSeq>> =
+                    (0..su.cluster.n_gen).map(|_| Vec::new()).collect();
+                for (i, s) in carried.drain(..).enumerate() {
+                    shard_seqs[i % su.cluster.n_gen].push(s);
+                }
+                let sp = matches!(pipeline, Pipeline::VerlDpSp | Pipeline::VerlAsyncSp);
+                let mut max_t = 0.0f64;
+                let mut toks = 0.0;
+                let mut fin = Vec::new();
+                for mut shard in shard_seqs {
+                    let n = shard.len();
+                    let out = run_generation(&mut shard, n, &gen_cm, 1.0);
+                    let mut t = out.time;
+                    if sp {
+                        // sequence parallelism accelerates the tail segment
+                        // (longest-minus-median decoded at sp_gain speedup)
+                        let med_frac = 0.55;
+                        t = t * med_frac + t * (1.0 - med_frac) / su.sp_gain;
+                    }
+                    max_t = max_t.max(t);
+                    toks += out.tokens;
+                    fin.extend(out.finished);
+                }
+                (max_t, toks, fin)
+            }
+            Pipeline::AReal => {
+                // AReaL interrupts the extreme tail (device-level rollout
+                // interruption) and resumes later — cut at ~93% completion
+                let stop_at = ((carried.len() * 97) / 100).max(1);
+                let out = run_generation(&mut carried, stop_at, &gen_cm, shards);
+                (out.time, out.tokens, out.finished)
+            }
+            _ => {
+                let out = run_generation(&mut carried, stop, &gen_cm, shards);
+                (out.time, out.tokens, out.finished)
+            }
+        };
+
+        // intra-step streaming: per-chunk dispatch overhead + colocation
+        // contention inflate generation slightly (the Fig. 7b tradeoff)
+        let total_tokens: f64 =
+            finished.iter().map(|s| s.prompt + s.total_len).sum::<f64>().max(1.0);
+        let mean_seq = total_tokens / finished.len().max(1) as f64;
+        let p95_seq = {
+            let mut lens: Vec<f64> =
+                finished.iter().map(|s| s.prompt + s.total_len).collect();
+            lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            lens.get(lens.len().saturating_sub(1).min(lens.len() * 95 / 100))
+                .copied()
+                .unwrap_or(mean_seq)
+        };
+        if intra && su.use_reward_model {
+            let n_chunks = (total_tokens / cfg.chunk_tokens).max(1.0);
+            gen_time += n_chunks * su.chunk_overhead_s;
+            if su.cluster.colocated_scoring {
+                gen_time *= 1.0 + su.colocation_contention;
+            }
+        }
+
+        // ---- scoring ----
+        let reward_prefill =
+            if su.use_reward_model { score_cm.prefill(total_tokens, mean_seq) } else { 0.0 };
+        let ref_value_prefill =
+            2.0 * train_cm.prefill(total_tokens, mean_seq) / su.cluster.n_gen as f64;
+        let (exposed_reward, hidden_reward) = if intra && su.use_reward_model {
+            // streamed scoring drains during the generation window.  Exposed:
+            // (a) the final chunk of the last straggler, and (b) sequences
+            // shorter than one chunk, which cannot stream incrementally at
+            // all — the Fig. 7b right-side penalty.
+            let coarse_frac = (0.8 * cfg.chunk_tokens / p95_seq).clamp(0.0, 1.0);
+            let last_chunk = score_cm.prefill(cfg.chunk_tokens.min(mean_seq), mean_seq);
+            let exposed = (reward_prefill * coarse_frac + last_chunk).min(reward_prefill);
+            let hidden = (reward_prefill - exposed).min(gen_time);
+            (reward_prefill - hidden, hidden)
+        } else {
+            (reward_prefill, 0.0)
+        };
+        let (exposed_rv, hidden_rv) = if intra {
+            let hidden = (0.85 * ref_value_prefill).min((gen_time - hidden_reward).max(0.0));
+            (ref_value_prefill - hidden, hidden)
+        } else {
+            (ref_value_prefill, 0.0)
+        };
+        let score_time = exposed_reward + exposed_rv;
+
+        // ---- training ----
+        let train_time = train_cm.train_step(
+            total_tokens,
+            su.cluster.n_gen as f64,
+            su.cluster.train_network_gbps(),
+        );
+
+        // ---- compose step latency by schedule ----
+        // inter-step overlap hides most of the fixed overhead (weight
+        // sync/broadcast proceeds while carried lanes keep decoding)
+        let const_s = if inter { su.step_const_s * 0.4 } else { su.step_const_s };
+        let (step_time, staleness) = match pipeline {
+            Pipeline::TrlSequential
+            | Pipeline::VerlDp
+            | Pipeline::VerlDpSp
+            | Pipeline::Oppo { .. } => {
+                (gen_time + score_time + train_time + const_s, 0.0)
+            }
+            Pipeline::AsyncStale { k } => {
+                let t = gen_time.max(score_time + train_time) + const_s;
+                (t, k as f64)
+            }
+            Pipeline::VerlAsyncSp => {
+                (gen_time.max(score_time + train_time) + const_s, 1.0)
+            }
+            Pipeline::AReal => {
+                // interruptible async generation with sync/recovery overhead
+                let t = (gen_time.max(score_time + train_time)) * (1.0 + su.areal_sync_overhead)
+                    + const_s;
+                (t, 1.0)
+            }
+        };
+
+        // ---- utilization (nvidia-smi-style activity model; Fig. 2a/5) ----
+        // decode activity: intrinsically low (bandwidth-bound) and further
+        // diluted as lanes drain during the tail
+        let gen_iters = finished
+            .iter()
+            .map(|s| s.total_len)
+            .fold(0.0f64, f64::max)
+            .max(1.0);
+        let act_frac = (gen_tokens / (gen_iters * (b + delta) as f64)).clamp(0.05, 1.0);
+        let decode_act = 0.95 * (0.15 + 0.85 * act_frac);
+        let n_gen = su.cluster.n_gen as f64;
+        let n_score = su.cluster.n_score as f64;
+        let total_gpus = su.cluster.total_gpus() as f64;
+        let mut busy = gen_time * n_gen * decode_act;
+        busy += hidden_reward * n_score.max(1.0) * 0.85; // streamed scoring inside gen window
+        busy += exposed_reward * n_score.max(1.0) * 0.85;
+        busy += (exposed_rv + hidden_rv) * n_gen * 0.75;
+        busy += train_time * n_gen * 0.70;
+        busy += const_s * total_gpus * 0.05;
+        let util_val = (busy / (step_time * total_gpus)).min(1.0);
+
+        // ---- reward process ----
+        let deferrals: Vec<u64> =
+            finished.iter().map(|s| step.saturating_sub(s.enq_step)).collect();
+        let mean_deferral =
+            deferrals.iter().sum::<u64>() as f64 / deferrals.len().max(1) as f64;
+        for &d in &deferrals {
+            log.record_deferral(d);
+        }
+        // OPPO's first-B selection induces a tiny, bounded composition bias
+        let bias = if inter { 0.01 * mean_deferral } else { 0.0 };
+        let mean_score = reward.advance(staleness, bias);
+
+        if let Some(ctl) = &mut delta_ctl {
+            ctl.observe(step, mean_score);
+        }
+
+        elapsed += step_time;
+        log.push(StepRecord {
+            step,
+            wall_s: step_time,
+            elapsed_s: elapsed,
+            mean_score,
+            delta,
+            chunk: cfg.chunk_tokens as usize,
+            finished: finished.len(),
+            deferred: carried.len(),
+            gen_tokens: gen_tokens as usize,
+            train_stats: [0.0; 6],
+            util: util_val,
+        });
+
+        // non-inter pipelines never carry work across steps (except AReaL,
+        // whose interrupted rollouts resume)
+        if !inter && !matches!(pipeline, Pipeline::AReal) {
+            carried.clear();
+        }
+    }
+    log
+}
+
+/// Framework-level generation efficiency relative to the setup baseline
+/// (TRL's HF-generate loop is the 1.0 reference; vLLM-based stacks decode
+/// considerably faster, which Table 4 prices in).
+fn pipeline_gen_eff_factor(p: Pipeline) -> f64 {
+    match p {
+        Pipeline::VerlDp | Pipeline::VerlDpSp | Pipeline::VerlAsyncSp | Pipeline::AReal => 1.35,
+        _ => 1.0,
+    }
+}
+
+/// Mean per-step latency over the last half of a run (warm steady state).
+pub fn steady_state_latency(log: &RunLog) -> f64 {
+    let n = log.records.len();
+    let tail = &log.records[n / 2..];
+    tail.iter().map(|r| r.wall_s).sum::<f64>() / tail.len().max(1) as f64
+}
+
+/// Mean utilization over the last half of a run.
+pub fn steady_state_util(log: &RunLog) -> f64 {
+    let n = log.records.len();
+    let tail = &log.records[n / 2..];
+    tail.iter().map(|r| r.util).sum::<f64>() / tail.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::presets;
+
+    fn quick(pipeline: Pipeline, steps: usize, seed: u64) -> RunLog {
+        let cfg = SimConfig::new(presets::stackex_7b_h200(), steps, seed);
+        simulate(pipeline, &cfg)
+    }
+
+    #[test]
+    fn oppo_steps_are_faster_than_trl() {
+        let trl = quick(Pipeline::TrlSequential, 60, 1);
+        let oppo = quick(Pipeline::oppo(), 60, 1);
+        let ratio = steady_state_latency(&trl) / steady_state_latency(&oppo);
+        assert!(
+            (1.5..4.0).contains(&ratio),
+            "per-step speedup {ratio} out of the paper's plausible band"
+        );
+    }
+
+    #[test]
+    fn ablations_order_correctly() {
+        // paper Fig. 6: inter-only > intra-only, both > 1, full > each
+        let trl = steady_state_latency(&quick(Pipeline::TrlSequential, 60, 2));
+        let intra = steady_state_latency(&quick(
+            Pipeline::Oppo { intra: true, inter: false, fixed_delta: None },
+            60,
+            2,
+        ));
+        let inter = steady_state_latency(&quick(
+            Pipeline::Oppo { intra: false, inter: true, fixed_delta: None },
+            60,
+            2,
+        ));
+        let full = steady_state_latency(&quick(Pipeline::oppo(), 60, 2));
+        assert!(trl / intra > 1.05, "intra-only speedup {}", trl / intra);
+        assert!(trl / inter > trl / intra, "inter should beat intra");
+        assert!(trl / full >= trl / inter * 0.98, "full {} vs inter {}", trl / full, trl / inter);
+    }
+
+    #[test]
+    fn oppo_improves_utilization() {
+        let trl = steady_state_util(&quick(Pipeline::TrlSequential, 60, 3));
+        let oppo = steady_state_util(&quick(Pipeline::oppo(), 60, 3));
+        assert!(oppo > trl * 1.2, "util {trl} -> {oppo}");
+    }
+
+    #[test]
+    fn async_staleness_hurts_final_reward() {
+        let sync = quick(Pipeline::TrlSequential, 600, 4);
+        let stale = quick(Pipeline::AsyncStale { k: 5 }, 600, 4);
+        let last = |l: &RunLog| l.records.last().unwrap().mean_score;
+        assert!(last(&stale) < last(&sync) - 0.05, "{} vs {}", last(&stale), last(&sync));
+    }
+
+    #[test]
+    fn oppo_preserves_step_to_reward() {
+        let trl = quick(Pipeline::TrlSequential, 400, 5);
+        let oppo = quick(Pipeline::oppo(), 400, 5);
+        let t = trl.step_to_reward(3.5, 5);
+        let o = oppo.step_to_reward(3.5, 5);
+        let (t, o) = (t.expect("trl reaches 3.5") as f64, o.expect("oppo reaches 3.5") as f64);
+        assert!((o - t).abs() / t < 0.25, "step-to-reward diverged: trl {t} oppo {o}");
+    }
+
+    #[test]
+    fn most_requests_not_deferred() {
+        let oppo = quick(Pipeline::oppo(), 200, 6);
+        let (rows, mean) = oppo.deferral_distribution();
+        assert!(!rows.is_empty());
+        let zero_share = rows.iter().find(|(k, _)| *k == 0).map(|(_, s)| *s).unwrap_or(0.0);
+        assert!(zero_share > 0.6, "zero-deferral share {zero_share}");
+        assert!(mean < 1.0, "mean deferral {mean}");
+    }
+
+    #[test]
+    fn table4_ordering() {
+        let lat = |p| steady_state_latency(&quick(p, 60, 7));
+        let dp = lat(Pipeline::VerlDp);
+        let dpsp = lat(Pipeline::VerlDpSp);
+        let areal = lat(Pipeline::AReal);
+        let oppo = lat(Pipeline::oppo());
+        assert!(dp > dpsp, "DP {dp} !> DP+SP {dpsp}");
+        assert!(dpsp > areal, "DP+SP {dpsp} !> AReaL {areal}");
+        assert!(areal > oppo, "AReaL {areal} !> OPPO {oppo}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = quick(Pipeline::oppo(), 30, 9);
+        let b = quick(Pipeline::oppo(), 30, 9);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.wall_s, y.wall_s);
+            assert_eq!(x.mean_score, y.mean_score);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! The paper's experimental setups (§4.1), calibrated so the TRL baseline's
+//! stage composition matches the behaviour the paper reports (scoring ≈
+//! 15-25% of a step, heavy generation tails, framework overhead) — see
+//! DESIGN.md §1 on why shape, not absolute seconds, is the reproduction
+//! target.
+
+use super::cluster::ClusterSetup;
+use super::costmodel::ModelSpec;
+use super::gpu::GpuSpec;
+use super::lengths::{LengthModel, Phase};
+use super::rewardmodel::RewardCurve;
+
+/// One experiment's full parameterization.
+#[derive(Clone, Debug)]
+pub struct Setup {
+    pub name: &'static str,
+    pub model: ModelSpec,
+    pub cluster: ClusterSetup,
+    /// PPO batch size B (paper default 112)
+    pub batch: usize,
+    /// mean prompt length in tokens
+    pub prompt_len: f64,
+    pub lengths: LengthModel,
+    pub reward: RewardCurve,
+    /// time-to-reward measurement target (paper's reported reward)
+    pub target_reward: f64,
+    /// nominal total training steps (drives length-phase progress)
+    pub total_steps: usize,
+    /// software efficiencies (fraction of roofline) per stage
+    pub gen_eff: f64,
+    pub score_eff: f64,
+    pub train_eff: f64,
+    /// fixed per-step overhead (weight sync, dataloader, logging)
+    pub step_const_s: f64,
+    /// per-decode-iteration dispatch overhead
+    pub iter_overhead_s: f64,
+    /// per-streamed-chunk dispatch/context-switch cost (Fig. 7b left side)
+    pub chunk_overhead_s: f64,
+    /// generation slowdown when scoring shares the GPUs
+    pub colocation_contention: f64,
+    /// AReaL interruption/sync overhead
+    pub areal_sync_overhead: f64,
+    /// learned reward model (false ⇒ rule-based, GSM8K style)
+    pub use_reward_model: bool,
+    /// sequence-parallel tail speedup for the VeRL +SP arms
+    pub sp_gain: f64,
+    /// Δ_max for the dynamic controller (scales with tail heaviness: at
+    /// B=112, a heavy-tailed task needs a deeper overcommit pool to skip
+    /// all concurrent stragglers)
+    pub delta_max: usize,
+}
+
+/// Stack-Exchange-Paired + Qwen2.5-7B-Instruct on 8×H200 (7 gen + 1 score).
+pub fn stackex_7b_h200() -> Setup {
+    Setup {
+        name: "stackex-7b-h200",
+        model: ModelSpec::QWEN25_7B,
+        cluster: ClusterSetup::single_node(GpuSpec::H200, 7, 1),
+        batch: 112,
+        prompt_len: 220.0,
+        lengths: LengthModel {
+            warmup: Phase { mu: 6.05, sigma: 1.05 },
+            converged: Phase { mu: 5.75, sigma: 0.85 },
+            max_len: 4096.0,
+        },
+        reward: RewardCurve {
+            r0: 0.2,
+            plateau: 4.17,
+            tau: 170.0,
+            dip_depth: 0.0,
+            dip_center: 0.0,
+            dip_width: 1.0,
+            noise: 0.04,
+        },
+        target_reward: 4.0,
+        total_steps: 650,
+        gen_eff: 0.30,
+        score_eff: 0.07,
+        train_eff: 0.35,
+        step_const_s: 12.0,
+        iter_overhead_s: 6e-3,
+        chunk_overhead_s: 0.010,
+        colocation_contention: 0.12,
+        areal_sync_overhead: 0.12,
+        use_reward_model: true,
+        sp_gain: 1.6,
+        delta_max: 12,
+    }
+}
+
+/// Stack-Exchange-Paired + Qwen2.5-3B-Instruct on 8×A100-80GB.
+pub fn stackex_3b_a100() -> Setup {
+    Setup {
+        name: "stackex-3b-a100",
+        model: ModelSpec::QWEN25_3B,
+        cluster: ClusterSetup::single_node(GpuSpec::A100_80, 7, 1),
+        batch: 112,
+        prompt_len: 220.0,
+        lengths: LengthModel {
+            // the 3B model rambles: heavier tails → bigger inter gains
+            // (paper: 2.5× e2e, 2.06× inter-only)
+            warmup: Phase { mu: 6.2, sigma: 1.25 },
+            converged: Phase { mu: 5.9, sigma: 1.0 },
+            max_len: 4096.0,
+        },
+        reward: RewardCurve {
+            r0: 0.3,
+            plateau: 5.12,
+            tau: 260.0,
+            dip_depth: 0.0,
+            dip_center: 0.0,
+            dip_width: 1.0,
+            noise: 0.05,
+        },
+        target_reward: 5.0,
+        total_steps: 1000,
+        gen_eff: 0.30,
+        score_eff: 0.07,
+        train_eff: 0.35,
+        step_const_s: 12.0,
+        iter_overhead_s: 6e-3,
+        chunk_overhead_s: 0.010,
+        colocation_contention: 0.12,
+        areal_sync_overhead: 0.12,
+        use_reward_model: true,
+        sp_gain: 1.6,
+        delta_max: 16,
+    }
+}
+
+/// GSM8K + Qwen2.5-7B (rule-based reward) on 4×GH200-96GB.
+pub fn gsm8k_7b_gh200() -> Setup {
+    Setup {
+        name: "gsm8k-7b-gh200",
+        model: ModelSpec::QWEN25_7B,
+        // rule-based scoring: no dedicated reward GPU (colocated/none)
+        cluster: ClusterSetup::single_node(GpuSpec::GH200_96, 4, 0),
+        batch: 112,
+        prompt_len: 180.0,
+        lengths: LengthModel {
+            // chain-of-thought math: the heaviest tail of the four tasks
+            // (paper: 2.8×, the largest speedup)
+            warmup: Phase { mu: 6.1, sigma: 1.45 },
+            converged: Phase { mu: 5.9, sigma: 1.15 },
+            max_len: 8192.0,
+        },
+        reward: RewardCurve {
+            r0: 0.70,
+            plateau: 0.82,
+            tau: 70.0,
+            dip_depth: 0.07,
+            dip_center: 35.0,
+            dip_width: 14.0,
+            noise: 0.008,
+        },
+        target_reward: 0.80,
+        total_steps: 200,
+        gen_eff: 0.30,
+        score_eff: 0.07,
+        train_eff: 0.35,
+        step_const_s: 10.0,
+        iter_overhead_s: 6e-3,
+        chunk_overhead_s: 0.010,
+        colocation_contention: 0.12,
+        areal_sync_overhead: 0.12,
+        use_reward_model: false,
+        sp_gain: 1.6,
+        delta_max: 24,
+    }
+}
+
+/// OpenCoder-SFT (Stage 2) + Qwen2.5-3B-Instruct on 8×A100-80GB.
+pub fn opencoder_3b_a100() -> Setup {
+    Setup {
+        name: "opencoder-3b-a100",
+        model: ModelSpec::QWEN25_3B,
+        cluster: ClusterSetup::single_node(GpuSpec::A100_80, 7, 1),
+        batch: 112,
+        prompt_len: 300.0,
+        lengths: LengthModel {
+            warmup: Phase { mu: 6.3, sigma: 1.3 },
+            converged: Phase { mu: 6.0, sigma: 1.05 },
+            max_len: 6144.0,
+        },
+        reward: RewardCurve {
+            r0: 0.5,
+            plateau: 2.4,
+            tau: 25.0,
+            dip_depth: 0.0,
+            dip_center: 0.0,
+            dip_width: 1.0,
+            noise: 0.03,
+        },
+        target_reward: 2.3,
+        total_steps: 80,
+        gen_eff: 0.30,
+        score_eff: 0.07,
+        train_eff: 0.35,
+        step_const_s: 12.0,
+        iter_overhead_s: 6e-3,
+        chunk_overhead_s: 0.010,
+        colocation_contention: 0.12,
+        areal_sync_overhead: 0.12,
+        use_reward_model: true,
+        sp_gain: 1.6,
+        delta_max: 16,
+    }
+}
+
+/// Table 1's multi-node setting: StackEx-7B over 2 × 4×A100-40GB.
+pub fn multinode_7b_a100_40() -> Setup {
+    let mut s = stackex_7b_h200();
+    s.name = "stackex-7b-2node-a100-40";
+    s.cluster = ClusterSetup::two_node_a100_40();
+    // cross-node NCCL + weight broadcast make the fixed overhead heavier,
+    // and the straggler barrier now spans nodes
+    s.step_const_s = 40.0;
+    s.gen_eff = 0.22;
+    s.lengths.warmup.sigma = 1.35;
+    s.lengths.converged.sigma = 1.1;
+    s.lengths.max_len = 8192.0;
+    s.delta_max = 16;
+    s
+}
+
+/// Table 4's controlled comparison: identical hardware and rollout settings
+/// for all frameworks (milder tail than the e2e runs — the paper's Table 4
+/// spread is ~1.26×, far narrower than the e2e speedups).
+pub fn table4_setup() -> Setup {
+    let mut s = stackex_7b_h200();
+    s.name = "table4-7b-h200";
+    s.lengths.warmup.sigma = 0.9;
+    s.lengths.converged.sigma = 0.8;
+    s.areal_sync_overhead = 0.18;
+    s
+}
+
+/// The Figure 3/4/5 sweep: all four single-node setups.
+pub fn all_main_setups() -> Vec<Setup> {
+    vec![stackex_7b_h200(), stackex_3b_a100(), gsm8k_7b_gh200(), opencoder_3b_a100()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setups_have_paper_targets() {
+        let all = all_main_setups();
+        assert_eq!(all.len(), 4);
+        assert!((all[0].reward.plateau - 4.17).abs() < 1e-9);
+        assert!((all[1].reward.plateau - 5.12).abs() < 1e-9);
+        assert!((all[2].reward.plateau - 0.82).abs() < 1e-9);
+        assert!((all[3].reward.plateau - 2.4).abs() < 1e-9);
+        for s in &all {
+            assert_eq!(s.batch, 112);
+            assert!(s.gen_eff > 0.0 && s.gen_eff <= 1.0);
+        }
+    }
+
+    #[test]
+    fn gsm8k_is_rule_based_and_colocated() {
+        let s = gsm8k_7b_gh200();
+        assert!(!s.use_reward_model);
+        assert_eq!(s.cluster.n_score, 0);
+        assert!(s.cluster.colocated_scoring);
+    }
+
+    #[test]
+    fn multinode_crosses_nodes() {
+        let s = multinode_7b_a100_40();
+        assert_eq!(s.cluster.nodes, 2);
+        assert!(s.cluster.train_network_gbps() > 0.0);
+    }
+}

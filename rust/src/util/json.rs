@@ -1,0 +1,413 @@
+//! Minimal JSON: a recursive-descent parser (for `artifacts/manifest.json`)
+//! and a writer (for metrics / bench exports).  Hand-rolled because serde is
+//! not in the offline crate set (DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed JSON value.  Numbers are kept as f64 (the manifest only holds
+/// shapes/offsets well below 2^53).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            _ => bail!("not an object (looking up {key:?})"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(x) => Ok(*x),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("not a non-negative integer: {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let x = self.as_f64()?;
+        if x.fract() != 0.0 {
+            bail!("not an integer: {x}");
+        }
+        Ok(x as i64)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            _ => bail!("not an object: {self:?}"),
+        }
+    }
+
+    /// `[1, 2, 3]` -> `vec![1, 2, 3]` (shape vectors in the manifest).
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+/// Parse a complete JSON document.
+pub fn parse(text: &str) -> Result<Value> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value().context("parsing JSON")?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow!("unexpected end of input"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos - 1, got as char);
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow!("unexpected end of input"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.literal("true", Value::Bool(true)),
+            b'f' => self.literal("false", Value::Bool(false)),
+            b'n' => self.literal("null", Value::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value> {
+        for &b in word.as_bytes() {
+            self.expect(b)?;
+        }
+        Ok(v)
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(key, v);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Value::Obj(m)),
+                c => bail!("expected ',' or '}}' in object, got {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Value::Arr(v)),
+                c => bail!("expected ',' or ']' in array, got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()? as char;
+                            code = code * 16
+                                + c.to_digit(16)
+                                    .ok_or_else(|| anyhow!("bad \\u escape digit {c:?}"))?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    c => bail!("bad escape \\{}", c as char),
+                },
+                b if b < 0x80 => s.push(b as char),
+                b => {
+                    // multi-byte UTF-8: copy the raw continuation bytes
+                    let start = self.pos - 1;
+                    let len = if b >= 0xF0 {
+                        4
+                    } else if b >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    for _ in 1..len {
+                        self.bump()?;
+                    }
+                    s.push_str(
+                        std::str::from_utf8(&self.bytes[start..start + len])
+                            .map_err(|e| anyhow!("bad utf8 in string: {e}"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let x: f64 = text.parse().map_err(|e| anyhow!("bad number {text:?}: {e}"))?;
+        Ok(Value::Num(x))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Serialize a [`Value`] compactly.
+pub fn to_string(v: &Value) -> String {
+    let mut s = String::new();
+    write_value(&mut s, v);
+    s
+}
+
+fn write_value(out: &mut String, v: &Value) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(x) => {
+            if x.fract() == 0.0 && x.abs() < 9e15 {
+                let _ = write!(out, "{}", *x as i64);
+            } else {
+                let _ = write!(out, "{x}");
+            }
+        }
+        Value::Str(s) => write_string(out, s),
+        Value::Arr(xs) => {
+            out.push('[');
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(out, x);
+            }
+            out.push(']');
+        }
+        Value::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(out, k);
+                out.push(':');
+                write_value(out, x);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience builders for export code.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn arr_f64(xs: &[f64]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
+}
+
+pub fn num(x: f64) -> Value {
+    Value::Num(x)
+}
+
+pub fn s(x: &str) -> Value {
+    Value::Str(x.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let text = r#"{"a": [1, 2.5, -3], "b": {"c": "hi\n", "d": true}, "e": null}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "hi\n");
+        assert!(v.get("b").unwrap().get("d").unwrap().as_bool().unwrap());
+        assert_eq!(*v.get("e").unwrap(), Value::Null);
+        let re = parse(&to_string(&v)).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn parses_scientific_and_negative() {
+        let v = parse("[1e3, -2.5e-2, 0.0]").unwrap();
+        let xs = v.as_arr().unwrap();
+        assert_eq!(xs[0].as_f64().unwrap(), 1000.0);
+        assert!((xs[1].as_f64().unwrap() + 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse(r#""Aé""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "Aé");
+    }
+
+    #[test]
+    fn raw_utf8_passthrough() {
+        let v = parse("\"héllo → world\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo → world");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("12 34").is_err());
+    }
+
+    #[test]
+    fn usize_vec_and_errors() {
+        let v = parse("[2, 3, 4]").unwrap();
+        assert_eq!(v.as_usize_vec().unwrap(), vec![2, 3, 4]);
+        assert!(parse("[1.5]").unwrap().as_usize_vec().is_err());
+        assert!(parse("[-1]").unwrap().as_usize_vec().is_err());
+    }
+
+    #[test]
+    fn writer_escapes() {
+        let v = obj(vec![("k\n", s("v\t\""))]);
+        assert_eq!(to_string(&v), "{\"k\\n\":\"v\\t\\\"\"}");
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let v = parse(&text).unwrap();
+            assert_eq!(v.get("format_version").unwrap().as_usize().unwrap(), 1);
+            assert!(v.get("entries").unwrap().as_obj().unwrap().len() >= 10);
+        }
+    }
+}

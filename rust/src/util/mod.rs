@@ -1,0 +1,52 @@
+//! Small self-contained utilities (the offline crate set has no serde /
+//! rand / proptest, so these are hand-rolled — see DESIGN.md §2).
+
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Format a duration in seconds with adaptive units (for bench tables).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.1}h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1}min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}us", s * 1e6)
+    }
+}
+
+/// Left-pad / truncate a cell for fixed-width bench tables.
+pub fn cell(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s[..w].to_string()
+    } else {
+        format!("{}{}", " ".repeat(w - s.len()), s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(7200.0), "2.0h");
+        assert_eq!(fmt_secs(90.0), "1.5min");
+        assert_eq!(fmt_secs(1.5), "1.50s");
+        assert_eq!(fmt_secs(0.0015), "1.50ms");
+        assert_eq!(fmt_secs(2e-5), "20.00us");
+    }
+
+    #[test]
+    fn cell_pads_and_truncates() {
+        assert_eq!(cell("ab", 4), "  ab");
+        assert_eq!(cell("abcdef", 4), "abcd");
+    }
+}

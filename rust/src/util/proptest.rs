@@ -1,0 +1,183 @@
+//! In-repo randomized property-testing harness (proptest is not in the
+//! offline crate set).  Deterministic seed-derived cases + linear input
+//! shrinking for `Vec`-shaped inputs; on failure the reporting includes the
+//! failing seed so a case can be replayed exactly.
+//!
+//! Used by the coordinator invariant suites (`rust/tests/test_props.rs`):
+//! buffer capacity/FIFO order, first-B-completion selection, Δ-controller
+//! bounds, chunk-controller accounting, simulator conservation laws.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// max shrink attempts after a failure
+    pub shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xC0FFEE, shrink_iters: 200 }
+    }
+}
+
+/// Outcome of one property check.
+pub type CheckResult = Result<(), String>;
+
+/// Run `prop` against `cases` randomly generated inputs.
+///
+/// `gen` draws an input from an [`Rng`]; `prop` returns `Err(reason)` on
+/// violation.  Panics with a replayable report on the first failure.
+pub fn forall<T, G, P>(cfg: Config, name: &str, mut gen: G, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CheckResult,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {case_seed:#x}):\n  \
+                 reason: {reason}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but with list-shaped inputs, shrunk on failure by
+/// repeatedly dropping elements while the property still fails — reports the
+/// (locally) minimal counterexample.
+pub fn forall_vec<T, G, P>(cfg: Config, name: &str, mut gen: G, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> Vec<T>,
+    P: FnMut(&[T]) -> CheckResult,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(first_reason) = prop(&input) {
+            let (min_input, reason) =
+                shrink_vec(input, first_reason, cfg.shrink_iters, &mut rng, &mut prop);
+            panic!(
+                "property {name:?} failed on case {case} (seed {case_seed:#x}):\n  \
+                 reason: {reason}\n  minimal input ({} elems): {min_input:?}",
+                min_input.len()
+            );
+        }
+    }
+}
+
+fn shrink_vec<T, P>(
+    mut input: Vec<T>,
+    mut reason: String,
+    iters: usize,
+    rng: &mut Rng,
+    prop: &mut P,
+) -> (Vec<T>, String)
+where
+    T: Clone,
+    P: FnMut(&[T]) -> CheckResult,
+{
+    for _ in 0..iters {
+        if input.len() <= 1 {
+            break;
+        }
+        // try dropping a random contiguous span (halves first, then singles)
+        let span = (input.len() / 2).max(1);
+        let start = rng.range_usize(0, input.len() - span + 1);
+        let mut candidate = input.clone();
+        candidate.drain(start..start + span);
+        match prop(&candidate) {
+            Err(r) => {
+                input = candidate;
+                reason = r;
+            }
+            Ok(()) => {
+                // span too aggressive; try dropping a single element
+                let i = rng.range_usize(0, input.len());
+                let mut one = input.clone();
+                one.remove(i);
+                if let Err(r) = prop(&one) {
+                    input = one;
+                    reason = r;
+                }
+            }
+        }
+    }
+    (input, reason)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(
+            Config { cases: 50, ..Default::default() },
+            "sum-commutes",
+            |r| (r.range(0, 100), r.range(0, 100)),
+            |&(a, b)| {
+                n += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Config::default(),
+            "always-fails",
+            |r| r.range(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // property: no vector contains a 7 — counterexample should shrink
+        // down to (nearly) a single element.
+        let result = std::panic::catch_unwind(|| {
+            forall_vec(
+                Config { cases: 10, seed: 42, shrink_iters: 500 },
+                "no-sevens",
+                |r| (0..r.range_usize(5, 60)).map(|_| r.range(0, 10)).collect::<Vec<u64>>(),
+                |xs| {
+                    if xs.contains(&7) {
+                        Err("found 7".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the minimal report should be tiny (a few elements at most)
+        let n: usize = msg
+            .split("minimal input (")
+            .nth(1)
+            .unwrap()
+            .split(" elems")
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(n <= 3, "shrink left {n} elems: {msg}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Summary statistics + histogram helpers for metrics and bench tables.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Sliding-window mean of the last `w` entries (used by the Δ controller).
+pub fn tail_mean(xs: &[f64], w: usize) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let start = xs.len().saturating_sub(w);
+    mean(&xs[start..])
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside are clamped to the
+/// edge bins.  Returns (bin_edges, counts).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let width = (hi - lo) / bins as f64;
+    let edges: Vec<f64> = (0..=bins).map(|i| lo + i as f64 * width).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let idx = (((x - lo) / width) as isize).clamp(0, bins as isize - 1) as usize;
+        counts[idx] += 1;
+    }
+    (edges, counts)
+}
+
+/// Ordinary least squares slope of y over x (the Δ controller's reward
+/// trend `s_t`); 0.0 when degenerate.
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    if x.len() != y.len() || x.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        num += (xi - mx) * (yi - my);
+        den += (xi - mx) * (xi - mx);
+    }
+    if den.abs() < 1e-12 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Running mean/var (Welford) — allocation-free accumulation in hot loops.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamps() {
+        let xs = [-1.0, 0.1, 0.2, 0.5, 0.9, 2.0];
+        let (edges, counts) = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(edges.len(), 3);
+        assert_eq!(counts, vec![3, 3]); // -1 clamps low, 2.0 clamps high
+    }
+
+    #[test]
+    fn slope_signs() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let up: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        let down: Vec<f64> = x.iter().map(|v| -0.5 * v).collect();
+        assert!((ols_slope(&x, &up) - 2.0).abs() < 1e-9);
+        assert!((ols_slope(&x, &down) + 0.5).abs() < 1e-9);
+        assert_eq!(ols_slope(&x[..1], &up[..1]), 0.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.5];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_mean_window() {
+        let xs = [0.0, 0.0, 3.0, 5.0];
+        assert!((tail_mean(&xs, 2) - 4.0).abs() < 1e-12);
+        assert!((tail_mean(&xs, 100) - 2.0).abs() < 1e-12);
+    }
+}

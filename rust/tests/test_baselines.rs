@@ -1,0 +1,25 @@
+//! Baseline drivers: DPO generalization runs end to end; the async
+//! staleness baseline queues and applies updates off-policy.
+use oppo::config::{Mode, TrainConfig};
+use oppo::coordinator::dpo::DpoTrainer;
+
+#[test]
+fn dpo_trainer_runs_and_improves_margin_signal() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() { return }
+    let cfg = TrainConfig {
+        mode: Mode::Dpo,
+        steps: 2,
+        task: "arith".into(),
+        seed: 1,
+        log_every: 0,
+        max_new_tokens: 24,
+        ..Default::default()
+    };
+    let log = DpoTrainer::new(cfg).unwrap().run().unwrap();
+    assert_eq!(log.records.len(), 2);
+    for r in &log.records {
+        assert!(r.mean_score > 0.0, "chosen-vs-rejected margin must be positive");
+        assert!(r.train_stats[0].is_finite());
+        assert_eq!(r.finished, 8);
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration: the training scheduler completes steps in every mode over
+//! real compute, with controllers live and metrics recorded.
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+use oppo::config::{Mode, TrainConfig};
+use oppo::coordinator::OppoScheduler;
+use oppo::runtime::Engine;
+
+static ENGINE: Lazy<Option<Arc<Engine>>> = Lazy::new(|| {
+    std::path::Path::new("artifacts/manifest.json")
+        .exists()
+        .then(|| Arc::new(Engine::load("artifacts").expect("engine")))
+});
+
+fn cfg(mode: Mode) -> TrainConfig {
+    TrainConfig {
+        mode,
+        steps: 3,
+        task: "mixed".into(),
+        seed: 5,
+        log_every: 0,
+        max_new_tokens: 48,
+        staleness: if mode == Mode::AsyncStale { 2 } else { 0 },
+        ..Default::default()
+    }
+}
+
+fn run_mode(mode: Mode) -> oppo::metrics::RunLog {
+    let engine = ENGINE.clone().expect("artifacts");
+    let sched = OppoScheduler::with_engine(cfg(mode), engine).expect("scheduler");
+    sched.run().expect("run")
+}
+
+#[test]
+fn oppo_mode_runs_and_records() {
+    if ENGINE.is_none() { return }
+    let engine = ENGINE.clone().unwrap();
+    let mut sched = OppoScheduler::with_engine(cfg(Mode::Oppo), engine).unwrap();
+    let mut logs = Vec::new();
+    for s in 0..3 {
+        let rec = sched.run_step(s).unwrap();
+        assert_eq!(rec.finished, engine_batch());
+        assert!(rec.mean_score.is_finite());
+        assert!(rec.gen_tokens > 0);
+        assert!(rec.train_stats.iter().all(|x| x.is_finite()));
+        logs.push(rec);
+    }
+    // inter-step overlap engaged: capacity B+Δ with Δ >= delta_min
+    assert!(sched.delta() <= 4);
+}
+
+fn engine_batch() -> usize {
+    ENGINE.clone().unwrap().manifest().shape.ppo_batch
+}
+
+#[test]
+fn sequential_and_ablations_run() {
+    if ENGINE.is_none() { return }
+    for mode in [Mode::Sequential, Mode::OppoNoIntra, Mode::OppoNoInter] {
+        let log = run_mode(mode);
+        assert_eq!(log.records.len(), 3, "{mode:?}");
+        assert!(log.records.iter().all(|r| r.finished == engine_batch()));
+    }
+}
+
+#[test]
+fn sequential_has_no_deferrals_oppo_may() {
+    if ENGINE.is_none() { return }
+    let seq = run_mode(Mode::Sequential);
+    let (rows, mean) = seq.deferral_distribution();
+    assert!(rows.len() == 1 && rows[0].0 == 0, "sequential deferred: {rows:?}");
+    assert_eq!(mean, 0.0);
+}
+
+#[test]
+fn async_stale_defers_updates() {
+    if ENGINE.is_none() { return }
+    let log = run_mode(Mode::AsyncStale);
+    // first `staleness` steps have no applied update (zero stats)
+    assert!(log.records[0].train_stats.iter().all(|&x| x == 0.0));
+    assert!(log.records[1].train_stats.iter().all(|&x| x == 0.0));
+    assert!(log.records[2].train_stats[0] != 0.0);
+}
+
+#[test]
+fn same_seed_same_mode_is_deterministic() {
+    if ENGINE.is_none() { return }
+    let a = run_mode(Mode::Oppo);
+    let b = run_mode(Mode::Oppo);
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.mean_score, y.mean_score);
+        assert_eq!(x.gen_tokens, y.gen_tokens);
+    }
+}

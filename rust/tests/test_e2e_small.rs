@@ -1,0 +1,31 @@
+//! Small end-to-end smoke: a short full-OPPO training run completes, the
+//! policy evaluates, and the reward signal is live (the long-form run is
+//! examples/train_rlhf_e2e.rs, recorded in EXPERIMENTS.md).
+use oppo::config::TrainConfig;
+use oppo::coordinator::OppoScheduler;
+
+#[test]
+fn short_oppo_training_run() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() { return }
+    let cfg = TrainConfig {
+        steps: 4,
+        task: "arith".into(),
+        seed: 11,
+        log_every: 0,
+        max_new_tokens: 32,
+        ..Default::default()
+    };
+    let mut sched = OppoScheduler::new(cfg).unwrap();
+    let acc0 = sched.eval_accuracy(24, 7).unwrap();
+    assert!((0.0..=1.0).contains(&acc0));
+    let mut deferrals = 0u64;
+    for s in 0..4 {
+        let rec = sched.run_step(s).unwrap();
+        assert!(rec.mean_score.is_finite());
+        assert!(rec.wall_s > 0.0);
+        deferrals += rec.finished as u64;
+    }
+    assert!(deferrals > 0);
+    let acc1 = sched.eval_accuracy(24, 7).unwrap();
+    assert!((0.0..=1.0).contains(&acc1));
+}

@@ -1,0 +1,79 @@
+//! The paper's §3.1 invariance claim, tested over real compute: intra-step
+//! streaming must not change what is learned.  With Δ = 0 and a shared
+//! seed, the streamed (OppoNoInter) and monolithic (Sequential) pipelines
+//! generate identical tokens and produce near-identical step rewards; the
+//! only difference is *when* the reward model runs.
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+use oppo::config::{Mode, TrainConfig};
+use oppo::coordinator::OppoScheduler;
+use oppo::runtime::Engine;
+
+static ENGINE: Lazy<Option<Arc<Engine>>> = Lazy::new(|| {
+    std::path::Path::new("artifacts/manifest.json")
+        .exists()
+        .then(|| Arc::new(Engine::load("artifacts").expect("engine")))
+});
+
+fn one_step(mode: Mode, seed: u64) -> oppo::metrics::StepRecord {
+    let cfg = TrainConfig {
+        mode,
+        steps: 1,
+        task: "mixed".into(),
+        seed,
+        log_every: 0,
+        max_new_tokens: 48,
+        ..Default::default()
+    };
+    let mut sched = OppoScheduler::with_engine(cfg, ENGINE.clone().unwrap()).unwrap();
+    sched.run_step(0).unwrap()
+}
+
+#[test]
+fn streamed_scoring_equals_monolithic_scoring() {
+    if ENGINE.is_none() { return }
+    for seed in [3u64, 17] {
+        let streamed = one_step(Mode::OppoNoInter, seed);
+        let monolithic = one_step(Mode::Sequential, seed);
+        // identical sampled tokens => identical token counts
+        assert_eq!(
+            streamed.gen_tokens, monolithic.gen_tokens,
+            "seed {seed}: generation diverged"
+        );
+        // scores come from two different HLO programs (incremental vs dense
+        // attention) — identical up to float re-association
+        assert!(
+            (streamed.mean_score - monolithic.mean_score).abs() < 2e-3,
+            "seed {seed}: streamed {} vs monolithic {}",
+            streamed.mean_score,
+            monolithic.mean_score
+        );
+        // and the PPO update saw the same losses
+        for (a, b) in streamed.train_stats.iter().zip(&monolithic.train_stats) {
+            assert!((a - b).abs() < 2e-2, "train stats diverged: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn intra_overlap_streams_while_generating() {
+    if ENGINE.is_none() { return }
+    // in streamed mode the reward worker processed chunks during the step —
+    // indirectly visible as identical results with a different exec count
+    let engine = ENGINE.clone().unwrap();
+    let before: u64 = engine
+        .stats_snapshot()
+        .iter()
+        .filter(|(n, _, _)| n.starts_with("reward_prefill_chunk"))
+        .map(|(_, c, _)| *c)
+        .sum();
+    let _ = one_step(Mode::OppoNoInter, 23);
+    let after: u64 = engine
+        .stats_snapshot()
+        .iter()
+        .filter(|(n, _, _)| n.starts_with("reward_prefill_chunk"))
+        .map(|(_, c, _)| *c)
+        .sum();
+    assert!(after > before, "no incremental prefill calls recorded");
+}

@@ -1,0 +1,193 @@
+//! Property tests over the coordinator invariants (DESIGN.md §5/§6), using
+//! the in-repo randomized harness (`oppo::util::proptest`).
+
+use oppo::coordinator::buffer::SeqBuffer;
+use oppo::coordinator::chunkctl::ChunkController;
+use oppo::coordinator::delta::{DeltaController, Policy};
+use oppo::data::tasks::{Prompt, TaskKind};
+use oppo::model::sequence::SeqPhase;
+use oppo::util::proptest::{forall, forall_vec, Config};
+use oppo::util::rng::Rng;
+
+fn prompt(id: u64) -> Prompt {
+    Prompt {
+        kind: TaskKind::Arith,
+        text: "1+1=".into(),
+        tokens: vec![1, 5, 40, 5, 44],
+        answer: "2".into(),
+        id,
+    }
+}
+
+/// Random buffer op schedule.
+#[derive(Clone, Debug)]
+enum Op {
+    Fill,
+    FinishRandom,
+    Take(usize),
+    SetCapacity(usize),
+}
+
+fn gen_ops(rng: &mut Rng) -> Vec<Op> {
+    (0..rng.range_usize(5, 60))
+        .map(|_| match rng.range(0, 4) {
+            0 => Op::Fill,
+            1 => Op::FinishRandom,
+            2 => Op::Take(rng.range_usize(1, 9)),
+            _ => Op::SetCapacity(rng.range_usize(1, 13)),
+        })
+        .collect()
+}
+
+#[test]
+fn buffer_invariants_hold_under_random_schedules() {
+    forall_vec(
+        Config { cases: 300, seed: 0xBEEF, shrink_iters: 300 },
+        "buffer-invariants",
+        gen_ops,
+        |ops| {
+            let lanes = 12;
+            let mut buf = SeqBuffer::new(8, lanes);
+            let mut rng = Rng::new(1);
+            let mut next_id = 0u64;
+            let mut step = 0u64;
+            let mut taken_total = 0usize;
+            let mut added_total = 0usize;
+            for op in ops {
+                match op {
+                    Op::Fill => {
+                        while buf.has_room() && buf.len() < lanes {
+                            buf.add(prompt(next_id), step).map_err(|e| e.to_string())?;
+                            next_id += 1;
+                            added_total += 1;
+                        }
+                    }
+                    Op::FinishRandom => {
+                        let lanes_unfinished: Vec<usize> =
+                            buf.unfinished().map(|s| s.lane).collect();
+                        if !lanes_unfinished.is_empty() {
+                            let lane = *rng.choice(&lanes_unfinished);
+                            if let Some(s) = buf.by_lane_mut(lane) {
+                                s.phase = SeqPhase::Generating;
+                                s.push_token(2, 0.0, 0.0, 2, 8, 100);
+                            }
+                            buf.mark_finished(lane);
+                        }
+                    }
+                    Op::Take(b) => {
+                        step += 1;
+                        let finished_before = buf.finished_count();
+                        let batch = buf.take_finished(*b, step);
+                        taken_total += batch.len();
+                        if batch.len() != finished_before.min(*b) {
+                            return Err(format!(
+                                "take({b}) returned {} of {finished_before} finished",
+                                batch.len()
+                            ));
+                        }
+                        for seq in &batch {
+                            if !seq.is_finished() {
+                                return Err("took an unfinished sequence".into());
+                            }
+                        }
+                    }
+                    Op::SetCapacity(c) => buf.set_capacity(*c),
+                }
+                buf.check_invariants().map_err(|e| e.to_string())?;
+            }
+            if taken_total + buf.len() != added_total {
+                return Err(format!(
+                    "conservation violated: took {taken_total} + {} buffered != {added_total} added",
+                    buf.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn delta_controller_always_within_bounds() {
+    forall(
+        Config { cases: 200, ..Default::default() },
+        "delta-bounds",
+        |rng| {
+            let lo = rng.range_usize(0, 4);
+            let hi = lo + rng.range_usize(1, 12);
+            let init = lo + rng.range_usize(0, hi - lo + 1);
+            let w = rng.range_usize(1, 6);
+            let rewards: Vec<f64> = (0..rng.range_usize(10, 120)).map(|_| rng.normal()).collect();
+            let policy = *rng.choice(&[Policy::Eq4, Policy::Alg1Literal, Policy::Fixed]);
+            (lo, hi, init, w, rewards, policy)
+        },
+        |(lo, hi, init, w, rewards, policy)| {
+            let mut c = DeltaController::new(*init, *lo, *hi, *w, *policy);
+            for (i, &r) in rewards.iter().enumerate() {
+                let d = c.observe(i as u64, r);
+                if d < *lo || d > *hi {
+                    return Err(format!("delta {d} escaped [{lo}, {hi}]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn chunk_controller_always_emits_a_compiled_variant() {
+    forall(
+        Config { cases: 150, ..Default::default() },
+        "chunk-in-candidates",
+        |rng| {
+            let mut cands: Vec<usize> =
+                (0..rng.range_usize(1, 5)).map(|i| 8 << i).collect();
+            cands.dedup();
+            let initial = *rng.choice(&cands);
+            let probes = rng.range_usize(1, 3);
+            let period = cands.len() * probes + rng.range_usize(0, 10);
+            let latencies: Vec<f64> =
+                (0..rng.range_usize(20, 150)).map(|_| rng.range_f64(0.1, 2.0)).collect();
+            (cands, initial, period, probes, latencies)
+        },
+        |(cands, initial, period, probes, latencies)| {
+            let mut ctl =
+                ChunkController::new(cands.clone(), *initial, *period, *probes, true);
+            for &lat in latencies {
+                let c = ctl.chunk();
+                if !cands.contains(&c) {
+                    return Err(format!("chunk {c} has no compiled executable"));
+                }
+                ctl.observe_step(lat);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sim_deferral_never_exceeds_buffer_depth() {
+    forall(
+        Config { cases: 30, ..Default::default() },
+        "sim-deferral-bound",
+        |rng| rng.range(0, 1_000_000),
+        |&seed| {
+            use oppo::sim::pipeline::{simulate, Pipeline, SimConfig};
+            use oppo::sim::presets;
+            let setup = presets::stackex_7b_h200();
+            let cfg = SimConfig::new(setup.clone(), 40, seed);
+            let log = simulate(Pipeline::oppo(), &cfg);
+            for r in &log.records {
+                if r.finished != setup.batch {
+                    return Err(format!("step {} trained on {}", r.step, r.finished));
+                }
+                if r.deferred > setup.delta_max {
+                    return Err(format!(
+                        "step {}: {} deferred > Δ_max {}",
+                        r.step, r.deferred, setup.delta_max
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

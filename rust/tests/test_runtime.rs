@@ -1,0 +1,119 @@
+//! Integration: every AOT artifact loads, compiles, and executes through
+//! PJRT with manifest-consistent arity; training entries mutate parameters.
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+use oppo::runtime::{Engine, ParamSet};
+
+static ENGINE: Lazy<Option<Arc<Engine>>> = Lazy::new(|| {
+    std::path::Path::new("artifacts/manifest.json")
+        .exists()
+        .then(|| Arc::new(Engine::load("artifacts").expect("engine")))
+});
+
+fn engine() -> Option<Arc<Engine>> {
+    ENGINE.clone()
+}
+
+#[test]
+fn all_entries_compile() {
+    let Some(e) = engine() else { return };
+    let names: Vec<String> = e.manifest().entries.keys().cloned().collect();
+    for name in names {
+        e.executable(&name).unwrap_or_else(|err| panic!("{name}: {err:#}"));
+    }
+}
+
+#[test]
+fn ppo_update_executes_and_moves_params() {
+    let Some(e) = engine() else { return };
+    let m = e.manifest().shape.clone();
+    let (b, s) = (m.ppo_batch, m.s_max);
+    let actor = ParamSet::load(&e, "actor").unwrap();
+    let zm = ParamSet::zeros_like(&e).unwrap();
+    let zv = ParamSet::zeros_like(&e).unwrap();
+
+    let mut tokens = vec![0i32; b * s];
+    let mut mask = vec![0f32; b * s];
+    let mut adv = vec![0f32; b * s];
+    for i in 0..b {
+        for t in 0..12 {
+            tokens[i * s + t] = 3 + ((i + t) % 30) as i32;
+            if t >= 4 {
+                mask[i * s + t] = 1.0;
+                adv[i * s + t] = if i % 2 == 0 { 0.5 } else { -0.5 };
+            }
+        }
+    }
+    let old_logp = vec![-2.0f32; b * s];
+    let ret = vec![0.1f32; b * s];
+
+    let up = |x: &[f32], dims: &[usize]| e.upload_f32(x, dims).unwrap();
+    let toks_b = e.upload_i32(&tokens, &[b, s]).unwrap();
+    let step_b = e.scalar_i32(1).unwrap();
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+    args.extend(actor.bufs());
+    args.extend(zm.bufs());
+    args.extend(zv.bufs());
+    let mask_b = up(&mask, &[b, s]);
+    let old_b = up(&old_logp, &[b, s]);
+    let adv_b = up(&adv, &[b, s]);
+    let ret_b = up(&ret, &[b, s]);
+    args.push(&toks_b);
+    args.push(&mask_b);
+    args.push(&old_b);
+    args.push(&adv_b);
+    args.push(&ret_b);
+    args.push(&step_b);
+    let outs = e.execute("ppo_update", &args).unwrap();
+    assert_eq!(outs.len(), 3 * actor.len() + 1);
+
+    // first output = new embed; must differ from the input embed
+    let new_embed = e.download_f32(&outs[0]).unwrap();
+    let old_embed = actor.download(&e, "embed").unwrap();
+    assert_ne!(new_embed, old_embed);
+    // stats are finite
+    let stats = e.download_f32(outs.last().unwrap()).unwrap();
+    assert_eq!(stats.len(), 6);
+    assert!(stats.iter().all(|x| x.is_finite()), "{stats:?}");
+}
+
+#[test]
+fn gae_pallas_artifact_matches_jnp_artifact() {
+    let Some(e) = engine() else { return };
+    let m = e.manifest().shape.clone();
+    let (b, s) = (m.ppo_batch, m.s_max);
+    let mut rewards = vec![0f32; b * s];
+    let mut values = vec![0f32; b * s];
+    let mut mask = vec![0f32; b * s];
+    for i in 0..b {
+        for t in 0..(20 + i * 3) {
+            rewards[i * s + t] = ((i + t) as f32 * 0.7).sin();
+            values[i * s + t] = ((i * t) as f32 * 0.3).cos() * 0.5;
+            mask[i * s + t] = 1.0;
+        }
+    }
+    let args = [
+        e.upload_f32(&rewards, &[b, s]).unwrap(),
+        e.upload_f32(&values, &[b, s]).unwrap(),
+        e.upload_f32(&mask, &[b, s]).unwrap(),
+    ];
+    let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+    let jnp = e.execute("gae", &refs).unwrap();
+    let pal = e.execute("gae_pallas", &refs).unwrap();
+    for (a, b_) in jnp.iter().zip(&pal) {
+        let x = e.download_f32(a).unwrap();
+        let y = e.download_f32(b_).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((xi - yi).abs() < 1e-4, "{xi} vs {yi}");
+        }
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_arity() {
+    let Some(e) = engine() else { return };
+    let buf = e.upload_f32(&[1.0], &[1]).unwrap();
+    assert!(e.execute("ppo_update", &[&buf]).is_err());
+    assert!(e.execute("no_such_entry", &[&buf]).is_err());
+}

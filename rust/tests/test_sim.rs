@@ -1,0 +1,55 @@
+//! Simulator integration: multi-seed stability of the headline shapes.
+use oppo::sim::pipeline::{simulate, steady_state_latency, Pipeline, SimConfig};
+use oppo::sim::presets;
+
+#[test]
+fn speedups_hold_across_seeds_and_setups() {
+    for setup in presets::all_main_setups() {
+        for seed in [1u64, 2, 3] {
+            let cfg = SimConfig::new(setup.clone(), 60, seed);
+            let trl = steady_state_latency(&simulate(Pipeline::TrlSequential, &cfg));
+            let oppo = steady_state_latency(&simulate(Pipeline::oppo(), &cfg));
+            let ratio = trl / oppo;
+            assert!(
+                (1.3..4.5).contains(&ratio),
+                "{} seed {seed}: per-step speedup {ratio}",
+                setup.name
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_delta_variants_bracket_dynamic() {
+    let setup = presets::stackex_3b_a100();
+    let lat = |p| {
+        steady_state_latency(&simulate(p, &SimConfig::new(setup.clone(), 80, 5)))
+    };
+    let d4 = lat(Pipeline::Oppo { intra: true, inter: true, fixed_delta: Some(4) });
+    let trl = lat(Pipeline::TrlSequential);
+    assert!(d4 < trl, "even Δ=4 must beat TRL: {d4} vs {trl}");
+}
+
+#[test]
+fn conservation_every_step_trains_exactly_b() {
+    let setup = presets::stackex_7b_h200();
+    let cfg = SimConfig::new(setup.clone(), 50, 9);
+    let log = simulate(Pipeline::oppo(), &cfg);
+    for r in &log.records {
+        assert_eq!(r.finished, setup.batch, "step {} trained on {}", r.step, r.finished);
+        assert!(r.deferred <= setup.batch + setup.delta_max);
+    }
+}
+
+#[test]
+fn multinode_gap_exceeds_single_node() {
+    let single = presets::stackex_7b_h200();
+    let multi = presets::multinode_7b_a100_40();
+    let ratio = |setup: &presets::Setup| {
+        let cfg = SimConfig::new(setup.clone(), 50, 4);
+        steady_state_latency(&simulate(Pipeline::TrlSequential, &cfg))
+            / steady_state_latency(&simulate(Pipeline::oppo(), &cfg))
+    };
+    assert!(ratio(&multi) > ratio(&single) * 1.15,
+        "multi-node should amplify OPPO's advantage");
+}
