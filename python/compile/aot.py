@@ -20,8 +20,9 @@ Outputs (``--out-dir``, default ``../artifacts``):
 
 Chunk-size variants: HLO shapes are static, so OPPO's dynamic chunk-size
 controller (§3.1) selects among pre-compiled executables
-``actor_generate_chunk_c{C}`` / ``reward_prefill_chunk_c{C}``,
-C ∈ ``cfg.chunk_sizes`` — "one compiled executable per model variant".
+``actor_generate_chunk_c{C}`` / ``reward_prefill_chunk_c{C}`` /
+``ref_prefill_chunk_c{C}``, C ∈ ``cfg.chunk_sizes`` — "one compiled
+executable per model variant".
 
 Kernel flavours: the default artifact set lowers with ``kernel_impl="jnp"``
 (XLA-fused oracles — the throughput flavour; see EXPERIMENTS.md §Perf).  The
@@ -109,6 +110,11 @@ def entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
         sigs[f"reward_prefill_chunk_c{c}"] = (
             M.make_reward_prefill_chunk(cfg, c),
             [*p, _sds((g, c), i32), _sds((g,), i32), _sds((g,), i32), *kv_specs(cfg, g)],
+        )
+        sigs[f"ref_prefill_chunk_c{c}"] = (
+            M.make_ref_prefill_chunk(cfg, c),
+            [*p, _sds((g, c), i32), _sds((g,), i32), _sds((g,), i32),
+             _sds((g, cfg.vocab), f32), *kv_specs(cfg, g)],
         )
     sigs["reward_score_full"] = (
         M.make_reward_score_full(cfg),

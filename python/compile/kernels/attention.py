@@ -44,8 +44,10 @@ DEFAULT_BLOCK_K = 32
 def _prefill_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
     """One (batch*head) program: C queries vs the blocked KV history."""
     c, d = q_ref.shape[1], q_ref.shape[2]
-    start = start_ref[0]
-    q = q_ref[0].astype(jnp.float32) * scale  # [C, D] — VMEM-resident Q tile
+    # int indices into refs are rejected by interpret-mode discharge on this
+    # jax version; read the whole (1, ...) block and squeeze instead.
+    start = start_ref[...][0]
+    q = q_ref[...][0].astype(jnp.float32) * scale  # [C, D] — VMEM-resident Q tile
 
     m0 = jnp.full((c,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((c,), jnp.float32)
@@ -58,8 +60,8 @@ def _prefill_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scal
 
     def body(kb, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        k = pl.load(k_ref, (slice(None), pl.dslice(kb * block_k, block_k), slice(None)))[0]
+        v = pl.load(v_ref, (slice(None), pl.dslice(kb * block_k, block_k), slice(None)))[0]
         scores = q @ k.astype(jnp.float32).T  # [C, BLOCK_K] — MXU matmul 1
         jpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (c, block_k), 1)
         qpos = start + jax.lax.broadcasted_iota(jnp.int32, (c, block_k), 0)
@@ -73,7 +75,7 @@ def _prefill_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scal
         return m_new, l_new, acc_new
 
     m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
-    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))

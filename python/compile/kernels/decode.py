@@ -27,8 +27,10 @@ DEFAULT_BLOCK_K = 32
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
     d = q_ref.shape[1]
-    pos = pos_ref[0]
-    q = q_ref[0].astype(jnp.float32) * scale  # [D]
+    # whole-block reads + squeeze: int ref indices fail interpret-mode
+    # discharge on this jax version.
+    pos = pos_ref[...][0]
+    q = q_ref[...][0].astype(jnp.float32) * scale  # [D]
 
     m0 = jnp.float32(NEG_INF)
     l0 = jnp.float32(0.0)
@@ -37,8 +39,8 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: 
 
     def body(kb, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        k = pl.load(k_ref, (slice(None), pl.dslice(kb * block_k, block_k), slice(None)))[0]
+        v = pl.load(v_ref, (slice(None), pl.dslice(kb * block_k, block_k), slice(None)))[0]
         scores = k.astype(jnp.float32) @ q  # [BLOCK_K]
         jpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
         scores = jnp.where(jpos <= pos, scores, NEG_INF)
@@ -50,7 +52,7 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: 
         return m_new, l_new, acc_new
 
     m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
-    o_ref[0] = (acc / l).astype(o_ref.dtype)
+    o_ref[...] = (acc / l).astype(o_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))

@@ -21,9 +21,11 @@ from jax.experimental import pallas as pl
 
 def _gae_kernel(r_ref, v_ref, m_ref, adv_ref, ret_ref, *, gamma: float, lam: float):
     t = r_ref.shape[1]
-    r = r_ref[0]
-    v = v_ref[0]
-    m = m_ref[0]
+    # whole-block reads + squeeze: int ref indices fail interpret-mode
+    # discharge on this jax version.
+    r = r_ref[...][0]
+    v = v_ref[...][0]
+    m = m_ref[...][0]
 
     def body(i, carry):
         # walk t-1 .. 0; carry = A_{t+1}
@@ -32,8 +34,8 @@ def _gae_kernel(r_ref, v_ref, m_ref, adv_ref, ret_ref, *, gamma: float, lam: flo
         nv = jnp.where(idx + 1 < t, v[jnp.minimum(idx + 1, t - 1)], 0.0)
         delta = r[idx] + gamma * nv * nm - v[idx]
         adv = delta + gamma * lam * nm * carry
-        pl.store(adv_ref, (0, pl.dslice(idx, 1)), (adv * m[idx])[None])
-        pl.store(ret_ref, (0, pl.dslice(idx, 1)), ((adv + v[idx]) * m[idx])[None])
+        pl.store(adv_ref, (slice(None), pl.dslice(idx, 1)), (adv * m[idx]).reshape(1, 1))
+        pl.store(ret_ref, (slice(None), pl.dslice(idx, 1)), ((adv + v[idx]) * m[idx]).reshape(1, 1))
         return adv
 
     jax.lax.fori_loop(0, t, body, jnp.float32(0.0))

@@ -436,6 +436,48 @@ def make_ref_logprobs(cfg: ModelConfig) -> Callable:
     return fn
 
 
+def make_ref_prefill_chunk(cfg: ModelConfig, c: int) -> Callable:
+    """(refparams, chunk [G,C], start [G], n_valid [G], boundary [G,V], kv)
+    -> (kv', boundary' [G,V], logp [G,C]).
+
+    Incremental reference log-probs: the same streamed ``[G, C]`` chunks the
+    reward worker consumes also feed the reference model, so the KL-term
+    inputs are prefileld *during* actor decoding instead of in one dense
+    post-generation pass (the third pipeline stage of the intra-step
+    overlap).  ``logp[g, j] = log P(chunk[g, j] | prefix)``, matching
+    ``token_logprobs`` exactly when chunks are streamed contiguously.
+
+    The cross-chunk seam: token ``j = 0`` of a chunk is predicted by the
+    logits *after* the previous chunk's last valid token.  Those logits
+    travel as the device-resident ``boundary [G, V]`` log-softmax, updated
+    each call at ``n_valid - 1`` (lanes with ``n_valid == 0`` keep their
+    boundary).  At ``start == 0`` there is no prefix and ``logp[:, 0] = 0``,
+    the same convention as ``token_logprobs``.  Positions ``j >= n_valid``
+    are garbage-in-garbage-out exactly like the reward flavour.
+    """
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        chunk, start, n_valid, boundary = args[np_], args[np_ + 1], args[np_ + 2], args[np_ + 3]
+        kv = list(args[np_ + 4 :])
+        _, logits, new_kv = prefill_chunk(cfg, params, chunk, start, kv)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)  # [G, C, V]
+        g = chunk.shape[0]
+        lanes = jnp.arange(g)
+        # within-chunk: token j is predicted by this chunk's logits at j-1
+        intra = jnp.take_along_axis(logp_all[:, :-1], chunk[:, 1:, None], axis=-1)[..., 0]
+        first = jnp.where(start > 0, boundary[lanes, chunk[:, 0]], 0.0)
+        logp = jnp.concatenate([first[:, None], intra], axis=1)  # [G, C]
+        last_idx = jnp.maximum(n_valid - 1, 0)
+        new_boundary = jnp.where(
+            (n_valid > 0)[:, None], logp_all[lanes, last_idx], boundary
+        )
+        return (*new_kv, new_boundary, logp)
+
+    return fn
+
+
 def make_actor_forward_full(cfg: ModelConfig) -> Callable:
     """(params, tokens [B,S]) -> (logp [B,S], values [B,S]) — test/debug aid."""
 

@@ -62,6 +62,7 @@ def test_expected_entries_present(manifest):
     for c in cfg["chunk_sizes"]:
         want.add(f"actor_generate_chunk_c{c}")
         want.add(f"reward_prefill_chunk_c{c}")
+        want.add(f"ref_prefill_chunk_c{c}")
     missing = want - names
     assert not missing, missing
     # the Pallas validation flavour must ship too
@@ -103,6 +104,13 @@ def test_entry_io_arity(manifest):
     upd = e["ppo_update"]
     assert len(upd["inputs"]) == 3 * np_ + 6
     assert len(upd["outputs"]) == 3 * np_ + 1
+    # chunked ref prefill: params + (chunk, start, n_valid, boundary) + kv
+    ref = e[f"ref_prefill_chunk_c{c0}"]
+    assert len(ref["inputs"]) == np_ + 4 + l2
+    assert len(ref["outputs"]) == l2 + 2  # kv' + boundary' + logp
+    g, v = cfg["lanes"], cfg["vocab"]
+    assert ref["outputs"][-2]["shape"] == [g, v]   # boundary'
+    assert ref["outputs"][-1]["shape"] == [g, c0]  # logp
 
 
 def test_generate_chunk_output_shapes(manifest):

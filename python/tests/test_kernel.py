@@ -10,9 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from compile.kernels import attention, decode, gae, ref
+hypothesis = pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import attention, decode, gae, ref  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -183,6 +183,75 @@ def test_streamed_reward_chunk_size_invariance(params):
     np.testing.assert_allclose(np.asarray(s4), np.asarray(s8), rtol=5e-4, atol=5e-4)
 
 
+def test_streamed_ref_prefill_equals_dense_logprobs(params):
+    """The third pipeline stage's invariant: chunk-streamed reference
+    log-probs must reproduce the dense ``token_logprobs`` at every valid
+    position, across the cross-chunk seam (the boundary carry)."""
+    key = jax.random.PRNGKey(21)
+    g = CFG.lanes
+    lens = jnp.array([14, 23, 32, 7], jnp.int32)  # ragged, not chunk-aligned
+    tokens = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    tokens = tokens.at[:, 0].set(M.BOS)
+    flat = M.flatten_params(CFG, params)
+
+    dense, _ = M.token_logprobs(CFG, params, tokens)
+
+    c = 4
+    fn = M.make_ref_prefill_chunk(CFG, c)
+    kv = fresh_kv(g)
+    boundary = jnp.zeros((g, CFG.vocab), jnp.float32)
+    got = np.full((g, CFG.s_max), np.nan, np.float32)
+    for start in range(0, int(lens.max()), c):
+        chunk = jax.lax.dynamic_slice(tokens, (0, start), (g, c))
+        starts = jnp.full((g,), start, jnp.int32)
+        n_valid = jnp.clip(lens - start, 0, c)
+        res = fn(*flat, chunk, starts, n_valid, boundary, *kv)
+        kv = list(res[: 2 * CFG.n_layers])
+        boundary = res[2 * CFG.n_layers]
+        logp = np.asarray(res[2 * CFG.n_layers + 1])  # [G, C]
+        for lane in range(g):
+            nv = int(n_valid[lane])
+            got[lane, start : start + nv] = logp[lane, :nv]
+
+    for lane in range(g):
+        n = int(lens[lane])
+        np.testing.assert_allclose(
+            got[lane, :n], np.asarray(dense)[lane, :n], rtol=5e-4, atol=5e-4,
+            err_msg=f"lane {lane}",
+        )
+    # position 0 convention matches token_logprobs (no prefix -> 0)
+    assert np.all(got[:, 0] == 0.0)
+
+
+def test_streamed_ref_chunk_size_invariance(params):
+    """Different chunk sizes must give identical streamed ref log-probs."""
+    key = jax.random.PRNGKey(22)
+    g = CFG.lanes
+    lens = jnp.array([16, 9, 26, 12], jnp.int32)
+    tokens = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    flat = M.flatten_params(CFG, params)
+
+    def stream(c):
+        fn = M.make_ref_prefill_chunk(CFG, c)
+        kv = fresh_kv(g)
+        boundary = jnp.zeros((g, CFG.vocab), jnp.float32)
+        out = np.zeros((g, CFG.s_max), np.float32)
+        for start in range(0, int(lens.max()), c):
+            chunk = jax.lax.dynamic_slice(tokens, (0, start), (g, c))
+            starts = jnp.full((g,), start, jnp.int32)
+            n_valid = jnp.clip(lens - start, 0, c)
+            res = fn(*flat, chunk, starts, n_valid, boundary, *kv)
+            kv = list(res[: 2 * CFG.n_layers])
+            boundary = res[2 * CFG.n_layers]
+            logp = np.asarray(res[2 * CFG.n_layers + 1])
+            for lane in range(g):
+                nv = int(n_valid[lane])
+                out[lane, start : start + nv] = logp[lane, :nv]
+        return out
+
+    np.testing.assert_allclose(stream(4), stream(8), rtol=5e-4, atol=5e-4)
+
+
 def test_dead_lanes_are_frozen(params):
     """live=0 lanes must keep tokens, pos, and KV bit-identical (§3.2)."""
     key = jax.random.PRNGKey(8)

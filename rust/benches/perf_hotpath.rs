@@ -5,10 +5,13 @@
 //! artifacts are present, the PJRT dispatch path (per-chunk decode latency,
 //! per-token cost, dispatch overhead vs execute time).
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use anyhow::Result;
 use oppo::coordinator::buffer::SeqBuffer;
 use oppo::coordinator::engine_ops::Ops;
+use oppo::coordinator::stage::{StageHandler, StageWorker};
+use oppo::coordinator::worker::{RefReq, RefWorker};
 use oppo::data::tasks::{Prompt, TaskKind};
 use oppo::eval::{print_table, save_rows, Row};
 use oppo::ppo::gae::gae;
@@ -68,6 +71,81 @@ fn main() {
     });
     rows.push(Row::new("sim oppo steps").cell("ops_per_sec", steps as f64 / secs));
 
+    // StageWorker dispatch overhead: submit/recv round trips with a no-op
+    // handler — the per-chunk tax of the stage runtime itself
+    {
+        struct Nop;
+        impl StageHandler for Nop {
+            type Req = u64;
+            type Resp = u64;
+            fn handle(&mut self, x: u64) -> Result<u64> {
+                Ok(x)
+            }
+        }
+        let mut w = StageWorker::spawn("nop", 2, || Ok(Nop)).expect("spawn");
+        let n = 20_000u64;
+        let secs = time_it(|| {
+            for i in 0..n {
+                w.submit(i).expect("submit");
+                w.recv().expect("recv");
+            }
+        });
+        rows.push(Row::new("stage dispatch (1-deep)").cell("ops_per_sec", n as f64 / secs));
+    }
+
+    // Stage-overlap microbench: synchronous downstream scoring vs streamed
+    // prefill through two StageWorkers overlapping a simulated actor decode
+    // (the §3.1 shape with sleep-based costs: decode 3ms/chunk, each of the
+    // two downstream stages 2ms/chunk)
+    {
+        struct SleepStage(Duration);
+        impl StageHandler for SleepStage {
+            type Req = ();
+            type Resp = ();
+            fn handle(&mut self, _: ()) -> Result<()> {
+                std::thread::sleep(self.0);
+                Ok(())
+            }
+        }
+        let n_chunks = 25;
+        let decode = Duration::from_millis(3);
+        let stage = Duration::from_millis(2);
+
+        let sync_secs = time_it(|| {
+            for _ in 0..n_chunks {
+                std::thread::sleep(decode); // actor chunk
+                std::thread::sleep(stage); // reward prefill, synchronous
+                std::thread::sleep(stage); // ref prefill, synchronous
+            }
+        });
+
+        let mut reward = StageWorker::spawn("bench-reward", 2, move || Ok(SleepStage(stage)))
+            .expect("spawn");
+        let mut refm = StageWorker::spawn("bench-ref", 2, move || Ok(SleepStage(stage)))
+            .expect("spawn");
+        let overlap_secs = time_it(|| {
+            for _ in 0..n_chunks {
+                reward.submit(()).expect("submit");
+                refm.submit(()).expect("submit");
+                std::thread::sleep(decode); // actor decodes while stages prefill
+                while reward.try_recv().expect("recv").is_some() {}
+                while refm.try_recv().expect("recv").is_some() {}
+            }
+            while reward.in_flight() > 0 {
+                reward.recv().expect("recv");
+            }
+            while refm.in_flight() > 0 {
+                refm.recv().expect("recv");
+            }
+        });
+        rows.push(
+            Row::new("stage overlap (2 stages)")
+                .cell("sync_ms", 1e3 * sync_secs)
+                .cell("overlap_ms", 1e3 * overlap_secs)
+                .cell("speedup", sync_secs / overlap_secs),
+        );
+    }
+
     // PJRT dispatch path (needs artifacts)
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let engine = Arc::new(Engine::load("artifacts").unwrap());
@@ -114,6 +192,59 @@ fn main() {
             }
         });
         rows.push(Row::new("pjrt dispatch (gae)").cell("ms_per_call", 1e3 * secs / reps as f64));
+
+        // streamed vs synchronous reference scoring — the third-stage
+        // overlap win, measured over real compute.  Dense `ref_logprobs`
+        // blocks after generation; streamed `ref_prefill_chunk` hides
+        // behind actor decode chunks, so only the non-overlapped remainder
+        // (`exposed`) lands on the step's critical path.
+        if engine.manifest().ref_prefill_supported() {
+            let c = shape.chunk_sizes[shape.chunk_sizes.len() / 2];
+            let dense_tokens = vec![1i32; shape.ppo_batch * smax];
+            let _ = ops.ref_logprobs(&dense_tokens).unwrap(); // warm compile
+            let reps = 5;
+            let dense_secs = time_it(|| {
+                for _ in 0..reps {
+                    ops.ref_logprobs(&dense_tokens).unwrap();
+                }
+            }) / reps as f64;
+
+            let mut refw = RefWorker::spawn(engine.clone(), 2).unwrap();
+            let entry = format!("ref_prefill_chunk_c{c}");
+            let mk_req = |start: usize| RefReq::Stream {
+                entry: entry.clone(),
+                chunk: vec![1i32; g * c],
+                start: vec![start as i32; g],
+                n_valid: vec![c as i32; g],
+            };
+            refw.submit(mk_req(0)).unwrap(); // warm compile (worker thread)
+            refw.recv().unwrap();
+
+            let n_chunks = (64.min(smax - c)) / c;
+            let pos = vec![2i32; g];
+            let live = vec![1i32; g];
+            let actor_secs = time_it(|| {
+                for _ in 0..n_chunks {
+                    ops.generate_chunk(&mut state, c, &pos, &live).unwrap();
+                }
+            });
+            let overlap_secs = time_it(|| {
+                for k in 0..n_chunks {
+                    refw.submit(mk_req(k * c)).unwrap();
+                    ops.generate_chunk(&mut state, c, &pos, &live).unwrap();
+                    refw.recv().unwrap();
+                }
+            });
+            let exposed = (overlap_secs - actor_secs).max(0.0);
+            rows.push(
+                Row::new(format!("ref prefill c={c}"))
+                    .cell("sync_dense_ms", 1e3 * dense_secs)
+                    .cell("streamed_exposed_ms", 1e3 * exposed)
+                    .cell("hidden_frac", (1.0 - exposed / dense_secs.max(1e-9)).max(0.0)),
+            );
+        } else {
+            println!("(artifacts lack ref_prefill_chunk entries — ref overlap bench skipped)");
+        }
     } else {
         println!("(artifacts missing — PJRT microbenches skipped)");
     }

@@ -20,6 +20,10 @@ pub enum Mode {
     OppoNoIntra,
     /// Ablation "OPPO w/o Inter": streaming only, Δ = 0.
     OppoNoInter,
+    /// Ablation "OPPO w/o ref streaming": reward streams, but reference
+    /// log-probs run as the monolithic post-generation call (the arm that
+    /// isolates the third pipeline stage's contribution).
+    OppoNoRef,
     /// Async staleness-k baseline (Fig. 2c): scoring uses k-step-old actor outputs.
     AsyncStale,
     /// DPO generalization (§4.3): generate B+Δ, update on first B pairs.
@@ -33,10 +37,12 @@ impl Mode {
             "sequential" | "trl" => Mode::Sequential,
             "oppo-no-intra" | "no-intra" => Mode::OppoNoIntra,
             "oppo-no-inter" | "no-inter" => Mode::OppoNoInter,
+            "oppo-no-ref" | "no-ref" => Mode::OppoNoRef,
             "async" | "async-stale" => Mode::AsyncStale,
             "dpo" => Mode::Dpo,
             _ => bail!(
-                "unknown mode {s:?} (want oppo|sequential|oppo-no-intra|oppo-no-inter|async|dpo)"
+                "unknown mode {s:?} \
+                 (want oppo|sequential|oppo-no-intra|oppo-no-inter|oppo-no-ref|async|dpo)"
             ),
         })
     }
@@ -47,19 +53,27 @@ impl Mode {
             Mode::Sequential => "sequential",
             Mode::OppoNoIntra => "oppo-no-intra",
             Mode::OppoNoInter => "oppo-no-inter",
+            Mode::OppoNoRef => "oppo-no-ref",
             Mode::AsyncStale => "async-stale",
             Mode::Dpo => "dpo",
         }
     }
 
-    /// Does this mode stream chunks to the reward model mid-generation?
+    /// Does this mode stream chunks to the downstream stages mid-generation?
     pub fn intra_enabled(&self) -> bool {
-        matches!(self, Mode::Oppo | Mode::OppoNoInter | Mode::Dpo)
+        matches!(self, Mode::Oppo | Mode::OppoNoInter | Mode::OppoNoRef | Mode::Dpo)
     }
 
     /// Does this mode overcommit Δ extra prompts and defer stragglers?
     pub fn inter_enabled(&self) -> bool {
-        matches!(self, Mode::Oppo | Mode::OppoNoIntra | Mode::Dpo)
+        matches!(self, Mode::Oppo | Mode::OppoNoIntra | Mode::OppoNoRef | Mode::Dpo)
+    }
+
+    /// Does this mode feed the *reference model* from streamed chunks (vs
+    /// the monolithic post-generation `ref_logprobs` call)?  `OppoNoRef` is
+    /// the ablation arm that keeps reward streaming but not ref streaming.
+    pub fn ref_stream_enabled(&self) -> bool {
+        matches!(self, Mode::Oppo | Mode::OppoNoInter)
     }
 }
 
@@ -100,6 +114,15 @@ pub struct TrainConfig {
     /// Blend weight of the learned reward model vs the rule reward in
     /// [0, 1]; rule-only tasks (GSM8K-style) use 0.0.
     pub reward_model_weight: f64,
+    /// Per-stage enable knobs: stream chunks to the reward / reference
+    /// stage workers when the mode's intra overlap is on.  Disabling a
+    /// stage falls back to its monolithic path (ablations, debugging).
+    pub stream_reward: bool,
+    pub stream_ref: bool,
+    /// Bounded request-queue depth per stage worker: how many streamed
+    /// chunks may be in flight before submission backpressures the actor
+    /// loop (>= 1).
+    pub stage_queue_depth: usize,
     pub artifacts_dir: String,
     pub log_every: usize,
     /// Where to drop JSON metrics (None = don't write).
@@ -127,6 +150,9 @@ impl Default for TrainConfig {
             ppo_epochs: 1,
             staleness: 0,
             reward_model_weight: 0.25,
+            stream_reward: true,
+            stream_ref: true,
+            stage_queue_depth: 2,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             out_dir: None,
@@ -169,6 +195,9 @@ impl TrainConfig {
         set!(ppo_epochs, as_usize);
         set!(staleness, as_usize);
         set!(reward_model_weight, as_f64);
+        set!(stream_reward, as_bool);
+        set!(stream_ref, as_bool);
+        set!(stage_queue_depth, as_usize);
         set!(log_every, as_usize);
         if let Some(v) = get("task") {
             cfg.task = v.as_str()?.to_string();
@@ -221,6 +250,9 @@ impl TrainConfig {
         if self.mode == Mode::AsyncStale && self.staleness == 0 {
             bail!("async-stale mode needs staleness >= 1");
         }
+        if self.stage_queue_depth == 0 {
+            bail!("stage_queue_depth must be >= 1 (bounded stage queues need room)");
+        }
         match self.task.as_str() {
             "arith" | "copy" | "sort" | "mixed" => {}
             t => bail!("unknown task {t:?} (want arith|copy|sort|mixed)"),
@@ -255,6 +287,18 @@ impl TrainConfig {
         if prompt_max + self.max_new_tokens > s_max {
             bail!(
                 "prompt_max {prompt_max} + max_new_tokens {} exceeds s_max {s_max}",
+                self.max_new_tokens
+            );
+        }
+        // Streamed prefill scatters a full [G, C] window at each lane's
+        // cursor, so the last chunk of a maximal sequence must still fit:
+        // otherwise the stage kernels would clamp the scatter against s_max
+        // and overwrite earlier KV rows (or trip the runtime guard mid-step).
+        let max_chunk = chunk_sizes.iter().copied().max().unwrap_or(0);
+        if self.mode.intra_enabled() && prompt_max + self.max_new_tokens + max_chunk > s_max {
+            bail!(
+                "prompt_max {prompt_max} + max_new_tokens {} + largest chunk {max_chunk} \
+                 exceeds s_max {s_max}: the final streamed chunk window would clamp",
                 self.max_new_tokens
             );
         }
@@ -308,11 +352,42 @@ mod tests {
     }
 
     #[test]
+    fn streamed_tail_chunk_must_fit_s_max() {
+        // prompt 10 + max_new 50 = 60 <= 64, but the last streamed chunk
+        // window (start 58, C=8) would clamp against s_max — reject it for
+        // streaming modes, allow it for the non-streaming baseline.
+        let cfg = TrainConfig { max_new_tokens: 50, chunk_size: 8, ..Default::default() };
+        assert!(cfg.validate_against_manifest(8, 12, &[8], 64, 10).is_err());
+        let seq = TrainConfig {
+            mode: Mode::Sequential,
+            max_new_tokens: 50,
+            chunk_size: 8,
+            ..Default::default()
+        };
+        seq.validate_against_manifest(8, 12, &[8], 64, 10).unwrap();
+    }
+
+    #[test]
     fn mode_capability_flags() {
         assert!(Mode::Oppo.intra_enabled() && Mode::Oppo.inter_enabled());
         assert!(!Mode::Sequential.intra_enabled() && !Mode::Sequential.inter_enabled());
         assert!(Mode::OppoNoIntra.inter_enabled() && !Mode::OppoNoIntra.intra_enabled());
         assert!(Mode::OppoNoInter.intra_enabled() && !Mode::OppoNoInter.inter_enabled());
+        // the no-ref arm keeps both overlaps but not the ref stream
+        assert!(Mode::OppoNoRef.intra_enabled() && Mode::OppoNoRef.inter_enabled());
+        assert!(!Mode::OppoNoRef.ref_stream_enabled());
+        assert!(Mode::Oppo.ref_stream_enabled() && Mode::OppoNoInter.ref_stream_enabled());
+        assert!(!Mode::Sequential.ref_stream_enabled());
+        assert_eq!(Mode::parse("no-ref").unwrap(), Mode::OppoNoRef);
+        assert_eq!(Mode::OppoNoRef.name(), "oppo-no-ref");
+    }
+
+    #[test]
+    fn stage_knobs_validate() {
+        let cfg = TrainConfig { stage_queue_depth: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = TrainConfig { stream_reward: false, stream_ref: false, ..Default::default() };
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -109,7 +109,7 @@ impl Ops {
         args.push(&plen);
         args.push(&rst);
         args.extend(state.kv.iter());
-        let outs = self.engine.execute("actor_prefill", &args)?;
+        let outs = self.engine.execute_scoped("actor", "actor_prefill", &args)?;
         state.kv = outs;
         state.tokens = tokens;
         Ok(())
@@ -143,7 +143,7 @@ impl Ops {
         args.push(&live_b);
         args.extend(state.kv.iter());
         args.push(&key_b);
-        let mut outs = self.engine.execute(&entry, &args)?;
+        let mut outs = self.engine.execute_scoped("actor", &entry, &args)?;
 
         // outputs: tokens', pos', kv' ×n_kv, out_tok, logp, value
         let values_b = outs.pop().unwrap();
@@ -171,7 +171,7 @@ impl Ops {
         let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.refm.len() + 1);
         args.extend(self.refm.bufs());
         args.push(&toks);
-        let outs = self.engine.execute("ref_logprobs", &args)?;
+        let outs = self.engine.execute_scoped("ref", "ref_logprobs", &args)?;
         self.engine.download_f32(&outs[0])
     }
 
@@ -189,7 +189,7 @@ impl Ops {
         let r = self.engine.upload_f32(rewards, &[b, s])?;
         let v = self.engine.upload_f32(values, &[b, s])?;
         let m = self.engine.upload_f32(mask, &[b, s])?;
-        let mut outs = self.engine.execute("gae", &[&r, &v, &m])?;
+        let mut outs = self.engine.execute_scoped("train", "gae", &[&r, &v, &m])?;
         let ret = outs.pop().unwrap();
         let adv = outs.pop().unwrap();
         Ok((adv, ret))
@@ -222,7 +222,7 @@ impl Ops {
         args.push(adv);
         args.push(ret);
         args.push(&step_b);
-        let mut outs = self.engine.execute("ppo_update", &args)?;
+        let mut outs = self.engine.execute_scoped("train", "ppo_update", &args)?;
 
         let stats_b = outs.pop().unwrap();
         let v: Vec<PjRtBuffer> = outs.drain(2 * np..).collect();
@@ -269,7 +269,7 @@ impl Ops {
         for b in [&ch, &rj, &mc, &mr, &rc, &rr, &step_b] {
             args.push(b);
         }
-        let mut outs = self.engine.execute("dpo_update", &args)?;
+        let mut outs = self.engine.execute_scoped("train", "dpo_update", &args)?;
         let stats_b = outs.pop().unwrap();
         let v: Vec<PjRtBuffer> = outs.drain(2 * np..).collect();
         let m: Vec<PjRtBuffer> = outs.drain(np..).collect();
@@ -322,25 +322,14 @@ impl RewardOps {
         n_valid: &[i32],
     ) -> Result<Vec<f32>> {
         let g = self.g();
-        let c = chunk.len() / g;
-        ensure!(chunk.len() == g * c && start.len() == g && n_valid.len() == g);
-        let s_max = self.engine.manifest().shape.s_max;
-        for (lane, (&st, &nv)) in start.iter().zip(n_valid).enumerate() {
-            ensure!(
-                nv == 0 || (st as usize + c) <= s_max,
-                "lane {lane}: chunk [{st}, {st}+{c}) would clamp against s_max {s_max}"
-            );
-        }
-        let ch = self.engine.upload_i32(chunk, &[g, c])?;
-        let st = self.engine.upload_i32(start, &[g])?;
-        let nv = self.engine.upload_i32(n_valid, &[g])?;
+        let (ch, st, nv) = upload_stream_chunk(&self.engine, g, chunk, start, n_valid)?;
         let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.reward.len() + 3 + state.kv.len());
         args.extend(self.reward.bufs());
         args.push(&ch);
         args.push(&st);
         args.push(&nv);
         args.extend(state.kv.iter());
-        let mut outs = self.engine.execute(entry, &args)?;
+        let mut outs = self.engine.execute_scoped("reward", entry, &args)?;
         let scores_b = outs.pop().unwrap();
         state.kv = outs;
         self.engine.download_f32(&scores_b)
@@ -358,9 +347,103 @@ impl RewardOps {
         args.extend(self.reward.bufs());
         args.push(&toks);
         args.push(&idx);
-        let outs = self.engine.execute("reward_score_full", &args)?;
+        let outs = self.engine.execute_scoped("reward", "reward_score_full", &args)?;
         self.engine.download_f32(&outs[0])
     }
+}
+
+/// Reference-model streaming state: KV caches plus the `[G, V]` boundary
+/// log-softmax that carries "what does the ref model predict next" across
+/// the chunk seam (see `make_ref_prefill_chunk` in python/compile/model.py).
+pub struct RefStreamState {
+    pub kv: Vec<PjRtBuffer>,
+    pub boundary: PjRtBuffer,
+}
+
+/// Reference-model ops (owned by the ref stage worker thread).  The ref
+/// model is frozen, so one `ParamSet` loaded at spawn serves the whole run.
+pub struct RefOps {
+    engine: Arc<Engine>,
+    refm: ParamSet,
+}
+
+impl RefOps {
+    pub fn new(engine: Arc<Engine>) -> Result<Self> {
+        let refm = ParamSet::load(&engine, "ref")?;
+        Ok(Self { engine, refm })
+    }
+
+    fn g(&self) -> usize {
+        self.engine.manifest().shape.lanes
+    }
+
+    pub fn fresh_state(&self) -> Result<RefStreamState> {
+        let g = self.g();
+        let shape = self.engine.manifest().shape.kv_shape(g);
+        let n = 2 * self.engine.manifest().shape.n_layers;
+        let kv = (0..n).map(|_| self.engine.zeros_f32(&shape)).collect::<Result<Vec<_>>>()?;
+        let vocab = self.engine.manifest().shape.vocab;
+        let boundary = self.engine.zeros_f32(&[g, vocab])?;
+        Ok(RefStreamState { kv, boundary })
+    }
+
+    /// `ref_prefill_chunk_c{c}`: incremental reference log-probs of one
+    /// streamed chunk; returns `logp [G, C]` where `logp[g, j]` is
+    /// `log P(chunk[g, j] | prefix)` (garbage at `j >= n_valid`, same
+    /// contract as the reward flavour).
+    pub fn prefill_chunk(
+        &self,
+        state: &mut RefStreamState,
+        entry: &str,
+        chunk: &[i32],
+        start: &[i32],
+        n_valid: &[i32],
+    ) -> Result<Vec<f32>> {
+        let g = self.g();
+        let (ch, st, nv) = upload_stream_chunk(&self.engine, g, chunk, start, n_valid)?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(self.refm.len() + 4 + state.kv.len());
+        args.extend(self.refm.bufs());
+        args.push(&ch);
+        args.push(&st);
+        args.push(&nv);
+        args.push(&state.boundary);
+        args.extend(state.kv.iter());
+        let mut outs = self.engine.execute_scoped("ref", entry, &args)?;
+        let logp_b = outs.pop().unwrap();
+        let boundary = outs.pop().unwrap();
+        state.kv = outs;
+        state.boundary = boundary;
+        self.engine.download_f32(&logp_b)
+    }
+}
+
+/// Validate and upload one streamed `[G, C]` chunk's host arrays — shared by
+/// every chunk-consuming stage.  The config layer guarantees the final chunk
+/// window of a maximal sequence fits `s_max`; the per-lane check here is the
+/// defense-in-depth backstop, since a clamped scatter would silently
+/// overwrite earlier KV rows.
+fn upload_stream_chunk(
+    engine: &Engine,
+    g: usize,
+    chunk: &[i32],
+    start: &[i32],
+    n_valid: &[i32],
+) -> Result<(PjRtBuffer, PjRtBuffer, PjRtBuffer)> {
+    let c = chunk.len() / g.max(1);
+    ensure!(chunk.len() == g * c && start.len() == g && n_valid.len() == g);
+    let s_max = engine.manifest().shape.s_max;
+    for (lane, (&st, &nv)) in start.iter().zip(n_valid).enumerate() {
+        ensure!(
+            nv == 0 || (st as usize + c) <= s_max,
+            "lane {lane}: chunk [{st}, {st}+{c}) would clamp against s_max {s_max}"
+        );
+    }
+    Ok((
+        engine.upload_i32(chunk, &[g, c])?,
+        engine.upload_i32(start, &[g])?,
+        engine.upload_i32(n_valid, &[g])?,
+    ))
 }
 
 #[cfg(test)]
@@ -467,6 +550,70 @@ mod tests {
                 got[lane],
                 full[lane]
             );
+        }
+    }
+
+    #[test]
+    fn ref_streaming_matches_dense_logprobs() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().ref_prefill_supported() {
+            return; // older artifact set without the chunked ref entries
+        }
+        let m = e.manifest().shape.clone();
+        let (g, b, s) = (m.lanes, m.ppo_batch, m.s_max);
+        let c = m.chunk_sizes[0];
+
+        // ragged synthetic sequences on the first B lanes (dense ref_logprobs
+        // is a [B, S] entry); remaining lanes stay empty (n_valid = 0)
+        let mut gen_tokens = vec![0i32; g * s];
+        let mut dense_tokens = vec![0i32; b * s];
+        let mut lens = vec![0usize; g];
+        for lane in 0..b {
+            let len = 6 + (lane * 11) % (3 * c);
+            lens[lane] = len;
+            for t in 0..len {
+                let tok = 3 + ((lane * 5 + t * 17) % (m.vocab - 3)) as i32;
+                gen_tokens[lane * s + t] = tok;
+                dense_tokens[lane * s + t] = tok;
+            }
+        }
+        let ops = Ops::new(e.clone(), 0).unwrap();
+        let dense = ops.ref_logprobs(&dense_tokens).unwrap(); // [B, S]
+
+        let rops = RefOps::new(e.clone()).unwrap();
+        let mut state = rops.fresh_state().unwrap();
+        let entry = format!("ref_prefill_chunk_c{c}");
+        let mut got = vec![f32::NAN; g * s];
+        let max_len = *lens.iter().max().unwrap();
+        let mut startpos = 0usize;
+        while startpos < max_len {
+            let mut chunk = vec![0i32; g * c];
+            let mut starts = vec![0i32; g];
+            let mut nvalid = vec![0i32; g];
+            for lane in 0..g {
+                starts[lane] = startpos as i32;
+                let nv = lens[lane].saturating_sub(startpos).min(c);
+                nvalid[lane] = nv as i32;
+                for j in 0..nv {
+                    chunk[lane * c + j] = gen_tokens[lane * s + startpos + j];
+                }
+            }
+            let logp = rops.prefill_chunk(&mut state, &entry, &chunk, &starts, &nvalid).unwrap();
+            for lane in 0..g {
+                for j in 0..nvalid[lane] as usize {
+                    got[lane * s + startpos + j] = logp[lane * c + j];
+                }
+            }
+            startpos += c;
+        }
+        for lane in 0..b {
+            for t in 0..lens[lane] {
+                let (a, d) = (got[lane * s + t], dense[lane * s + t]);
+                assert!(
+                    (a - d).abs() < 2e-3,
+                    "lane {lane} pos {t}: streamed {a} vs dense {d}"
+                );
+            }
         }
     }
 

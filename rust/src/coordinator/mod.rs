@@ -1,13 +1,18 @@
-//! The OPPO coordinator — the paper's Layer-3 contribution.
+//! The OPPO coordinator — the paper's Layer-3 contribution, organized as a
+//! multi-stage pipeline runtime.
 //!
 //! * [`buffer`] — Algorithm 1's `B + Δ` FIFO sequence buffer;
 //! * [`delta`] — the dynamic Δ controller (Eq. 4 / Alg. 1 l.21-27);
 //! * [`chunkctl`] — the dynamic chunk-size controller (§3.1);
 //! * [`engine_ops`] — typed wrappers over the AOT entry points with
-//!   device-resident state;
-//! * [`worker`] — the reward-scoring thread (intra-step overlap);
-//! * [`scheduler`] — the training loop: OPPO, both ablations, the TRL-style
-//!   sequential baseline, and async staleness-k;
+//!   device-resident state (actor, reward, and reference flavours);
+//! * [`stage`] — the generic pipeline-stage worker: tagged requests,
+//!   bounded queue with backpressure, per-stage timing, join-on-drop;
+//! * [`worker`] — the concrete downstream stages (reward scoring,
+//!   reference log-probs) plus the fan-out facade the scheduler drives;
+//! * [`scheduler`] — the training loop: OPPO, the ablations (no-intra,
+//!   no-inter, no-ref-stream), the TRL-style sequential baseline, and
+//!   async staleness-k;
 //! * [`dpo`] — the DPO generalization (§4.3).
 
 pub mod buffer;
@@ -16,9 +21,11 @@ pub mod delta;
 pub mod dpo;
 pub mod engine_ops;
 pub mod scheduler;
+pub mod stage;
 pub mod worker;
 
 pub use buffer::SeqBuffer;
 pub use chunkctl::ChunkController;
 pub use delta::{DeltaController, Policy};
 pub use scheduler::OppoScheduler;
+pub use stage::{StageHandler, StageStats, StageWorker};

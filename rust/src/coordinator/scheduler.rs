@@ -2,26 +2,33 @@
 //! paper compares against, driven over real AOT-compiled compute.
 //!
 //! One [`OppoScheduler`] owns: the `B + Δ` sequence buffer, the actor-side
-//! device state, the reward worker thread (intra-step overlap), the dynamic
-//! Δ and chunk-size controllers, and the PPO update path
-//! (`ref_logprobs → gae → ppo_update`).  [`config::Mode`] selects between
-//! full OPPO, the two ablation arms, the TRL-style sequential baseline, and
-//! the async staleness-k baseline.
+//! device state, a set of downstream **stage sinks** fed by streamed chunks
+//! (intra-step overlap — reward prefill *and* reference-logprob prefill run
+//! concurrently with actor decoding), the dynamic Δ and chunk-size
+//! controllers, and the PPO update path (`gae → ppo_update`).
+//! [`config::Mode`] selects between full OPPO, the ablation arms
+//! (including `oppo-no-ref`, which streams reward but scores the reference
+//! model monolithically), the TRL-style sequential baseline, and the async
+//! staleness-k baseline.
 //!
 //! Step anatomy (mode = `Oppo`):
 //!
 //! ```text
 //! fill buffer to B+Δ ──► prefill new lanes                 (Alg.1 l.3-5)
 //! while |finished| < B:                                    (Alg.1 l.7)
-//!     submit chunk k-1 to reward worker   ┐ parallel       (Alg.1 l.12-15)
+//!     fan chunk k-1 out to every stage    ┐ parallel       (Alg.1 l.12-15)
+//!     {reward, ref} prefill chunk k-1     │
 //!     actor decodes chunk k               ┘
 //!     fold sampled tokens into sequences; mark EOS
-//! flush remaining reward streams
+//! flush: join all stage streams
 //! ppo_batch = first B finished; Δ’s unfinished stay        (Alg.1 l.17-20)
-//! ref logprobs → rewards (+KL) → GAE → ppo_update
+//! rewards (+KL from streamed ref logps) → GAE → ppo_update
 //! Δ controller observes the reward window                  (Alg.1 l.21-27)
 //! chunk controller observes the step latency               (§3.1)
 //! ```
+//!
+//! Adding a stage (critic, sharded reward replicas) means adding a
+//! [`StreamSink`] variant; this loop is stage-count agnostic.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -34,11 +41,13 @@ use crate::coordinator::buffer::SeqBuffer;
 use crate::coordinator::chunkctl::ChunkController;
 use crate::coordinator::delta::{DeltaController, Policy};
 use crate::coordinator::engine_ops::{ActorState, ChunkOut, Ops};
-use crate::coordinator::worker::{Pick, RewardReq, RewardResp, RewardWorker};
+use crate::coordinator::worker::{
+    Pick, RefSink, RewardReq, RewardResp, RewardWorker, StreamChunk, StreamSink,
+};
 use crate::data::tasks::{rule_reward, Task};
 use crate::data::tokenizer::{Tokenizer, EOS};
 use crate::data::PromptSampler;
-use crate::metrics::{RunLog, StepRecord};
+use crate::metrics::{RunLog, StageTiming, StepRecord};
 use crate::model::rollout::{PpoBatch, RolloutAssembler};
 use crate::model::sequence::{SeqPhase, Sequence};
 use crate::ppo::gae::masked_mean;
@@ -55,7 +64,10 @@ pub struct OppoScheduler {
     cfg: TrainConfig,
     engine: Arc<Engine>,
     ops: Ops,
-    worker: RewardWorker,
+    /// active streaming stages, fed every chunk during generation
+    sinks: Vec<StreamSink>,
+    /// monolithic reward scorer for the non-streamed modes
+    mono_reward: Option<RewardWorker>,
     sampler: PromptSampler,
     tokenizer: Tokenizer,
     buffer: SeqBuffer,
@@ -115,7 +127,32 @@ impl OppoScheduler {
         );
 
         let ops = Ops::new(engine.clone(), cfg.seed)?;
-        let worker = RewardWorker::spawn(engine.clone())?;
+
+        // ---- downstream stage set (the N-stage fan-out targets) ----
+        let mut sinks: Vec<StreamSink> = Vec::new();
+        let mut mono_reward = None;
+        if cfg.mode.intra_enabled() && cfg.stream_reward {
+            sinks.push(StreamSink::Reward(RewardWorker::spawn(
+                engine.clone(),
+                cfg.stage_queue_depth,
+            )?));
+        } else {
+            mono_reward = Some(RewardWorker::spawn(engine.clone(), cfg.stage_queue_depth)?);
+        }
+        if cfg.mode.ref_stream_enabled() && cfg.stream_ref {
+            if engine.manifest().ref_prefill_supported() {
+                sinks.push(StreamSink::Ref(RefSink::spawn(
+                    engine.clone(),
+                    cfg.stage_queue_depth,
+                )?));
+            } else {
+                log::warn!(
+                    "artifacts lack ref_prefill_chunk_c* entries; falling back to \
+                     monolithic ref logprobs (regenerate artifacts to stream the ref stage)"
+                );
+            }
+        }
+
         let actor_state = ops.fresh_actor_state(&vec![0i32; m.lanes * m.s_max])?;
         let assembler = RolloutAssembler::new(m.s_max, cfg.kl_beta as f32);
         let buffer = SeqBuffer::new(m.ppo_batch + delta_ctl.delta(), m.lanes);
@@ -125,7 +162,8 @@ impl OppoScheduler {
             cfg,
             engine,
             ops,
-            worker,
+            sinks,
+            mono_reward,
             sampler,
             tokenizer,
             buffer,
@@ -154,6 +192,21 @@ impl OppoScheduler {
 
     pub fn chunk(&self) -> usize {
         self.chunk_ctl.chunk()
+    }
+
+    /// Names of the active streaming stages (test / introspection hook).
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.sinks.iter().map(|s| s.name()).collect()
+    }
+
+    /// Is the reference model fed by streamed chunks (vs the monolithic
+    /// post-generation `ref_logprobs` call)?
+    pub fn ref_streamed(&self) -> bool {
+        self.sinks.iter().any(|s| matches!(s, StreamSink::Ref(_)))
+    }
+
+    fn reward_streamed(&self) -> bool {
+        self.sinks.iter().any(|s| matches!(s, StreamSink::Reward(_)))
     }
 
     /// Run the configured number of PPO steps; returns the run log.
@@ -189,13 +242,11 @@ impl OppoScheduler {
         }
         self.prefill_queued()?;
 
-        // ---- Stage 2: generation (+ intra-step streaming) ----
+        // ---- Stage 2: generation (+ intra-step streaming to N stages) ----
         let gen_tokens = self.generation_loop(chunk, b)?;
 
         // ---- Stage 3: PPO update with inter-step overlap (l.17-20) ----
-        if self.cfg.mode.intra_enabled() {
-            self.flush_streams(chunk)?;
-        }
+        self.flush_streams(chunk)?; // no-op when no sinks are active
         let selected = self.buffer.take_finished(b, step);
         ensure!(selected.len() == b, "only {} finished sequences (need {b})", selected.len());
         let deferred_left = self.buffer.len();
@@ -217,6 +268,15 @@ impl OppoScheduler {
         let wall = t0.elapsed().as_secs_f64();
         self.chunk_ctl.observe_step(wall);
 
+        // per-stage busy/idle attribution for this step
+        let mut stages: Vec<StageTiming> = Vec::with_capacity(self.sinks.len() + 1);
+        for sink in &mut self.sinks {
+            stages.push(sink.timing_delta());
+        }
+        if let Some(w) = &mut self.mono_reward {
+            stages.push(w.timing_delta());
+        }
+
         let rec = StepRecord {
             step,
             wall_s: wall,
@@ -229,6 +289,7 @@ impl OppoScheduler {
             gen_tokens,
             train_stats,
             util: 0.0,
+            stages,
         };
         self.log.push(rec.clone());
         Ok(rec)
@@ -277,7 +338,8 @@ impl OppoScheduler {
     }
 
     /// Alg. 1 l.7-16: decode chunks until `target` sequences finished,
-    /// streaming the previous chunk to the reward worker in parallel.
+    /// fanning the previous chunk out to every downstream stage so their
+    /// prefill overlaps the actor's next decode chunk.
     fn generation_loop(&mut self, chunk: usize, target: usize) -> Result<usize> {
         let m = self.engine.manifest().shape.clone();
         let mut gen_tokens = 0usize;
@@ -299,18 +361,24 @@ impl OppoScheduler {
                 break; // Alg. 1 l.9-11
             }
 
-            // parallel do (Alg. 1 l.12-15): reward prefill of the previous
-            // chunk's tokens overlaps the actor's next decode chunk.
-            let mut pending = false;
-            if self.cfg.mode.intra_enabled() {
-                if let Some(req) = self.build_stream_request(chunk)? {
-                    self.worker.submit(req)?;
-                    pending = true;
+            // parallel do (Alg. 1 l.12-15): every downstream stage prefills
+            // the previous chunk's tokens while the actor decodes the next
+            // chunk.  The bounded stage queues allow multiple chunks in
+            // flight; responses are drained opportunistically and joined at
+            // flush.
+            if !self.sinks.is_empty() {
+                if let Some(ck) = self.build_stream_chunk(chunk)? {
+                    for sink in &mut self.sinks {
+                        sink.submit_chunk(&ck)?;
+                    }
                 }
             }
             let out = self.ops.generate_chunk(&mut self.actor_state, chunk, &pos, &live)?;
-            if pending {
-                self.apply_stream_response()?;
+            {
+                let Self { sinks, buffer, .. } = self;
+                for sink in sinks.iter_mut() {
+                    sink.collect_ready(buffer)?;
+                }
             }
             gen_tokens += self.process_chunk(&out, chunk)?;
         }
@@ -345,11 +413,12 @@ impl OppoScheduler {
         Ok(accepted)
     }
 
-    /// Build the next incremental-prefill request: up to `chunk` unstreamed
-    /// tokens per lane, PAD-filled where idle.  Marks tokens as streamed.
-    fn build_stream_request(&mut self, chunk: usize) -> Result<Option<RewardReq>> {
+    /// Build the next streamed chunk: up to `chunk` unstreamed tokens per
+    /// lane, PAD-filled where idle.  Advances the shared stream cursor, so
+    /// call exactly once per fan-out round.
+    fn build_stream_chunk(&mut self, chunk: usize) -> Result<Option<StreamChunk>> {
         let m = self.engine.manifest().shape.clone();
-        let mut buf = vec![0i32; m.lanes * chunk];
+        let mut tokens = vec![0i32; m.lanes * chunk];
         let mut start = vec![0i32; m.lanes];
         let mut n_valid = vec![0i32; m.lanes];
         let mut picks = Vec::new();
@@ -360,7 +429,7 @@ impl OppoScheduler {
             }
             let lane = seq.lane;
             let total = seq.total_len();
-            let streamed = seq.reward_streamed;
+            let streamed = seq.streamed;
             start[lane] = streamed as i32;
             let nv = total.saturating_sub(streamed).min(chunk);
             if nv == 0 {
@@ -368,62 +437,53 @@ impl OppoScheduler {
             }
             let full = seq.full_tokens();
             for j in 0..nv {
-                buf[lane * chunk + j] = full[streamed + j];
+                tokens[lane * chunk + j] = full[streamed + j];
             }
             n_valid[lane] = nv as i32;
             if seq.is_finished() && streamed + nv == total {
                 picks.push(Pick { lane, idx_in_chunk: nv - 1 });
             }
-            seq.reward_streamed += nv;
+            seq.streamed += nv;
             any = true;
         }
         if !any {
             return Ok(None);
         }
-        Ok(Some(RewardReq::Stream {
-            entry: format!("reward_prefill_chunk_c{chunk}"),
-            chunk: buf,
-            start,
-            n_valid,
-            picks,
-        }))
+        Ok(Some(StreamChunk { c: chunk, tokens, start, n_valid, picks }))
     }
 
-    fn apply_stream_response(&mut self) -> Result<()> {
-        match self.worker.recv()? {
-            RewardResp::StreamScores(scores) => {
-                for (lane, score) in scores {
-                    if let Some(seq) = self.buffer.by_lane_mut(lane) {
-                        seq.rm_score = Some(score);
-                    }
-                }
-                Ok(())
-            }
-            other => bail!("unexpected reward response {other:?}"),
-        }
-    }
-
-    /// Drain any unstreamed tokens of finished sequences (end of Stage 2:
-    /// the reward model completes prefilling for the final chunk).
+    /// End of Stage 2: drain the remaining unstreamed tokens of finished
+    /// sequences and **join** every stage — afterwards each finished
+    /// sequence has its reward score and (when the ref stage is active) a
+    /// complete streamed ref-logprob row.
     fn flush_streams(&mut self, chunk: usize) -> Result<()> {
+        if self.sinks.is_empty() {
+            return Ok(());
+        }
         loop {
-            let outstanding = self
-                .buffer
-                .iter()
-                .any(|s| s.is_finished() && (s.unstreamed() > 0 || s.rm_score.is_none()));
+            {
+                let Self { sinks, buffer, .. } = self;
+                for sink in sinks.iter_mut() {
+                    sink.join(buffer)?;
+                }
+            }
+            let outstanding = self.buffer.iter().any(|s| {
+                s.is_finished()
+                    && (s.unstreamed() > 0 || self.sinks.iter().any(|k| !k.is_satisfied(s)))
+            });
             if !outstanding {
                 return Ok(());
             }
-            match self.build_stream_request(chunk)? {
-                Some(req) => {
-                    self.worker.submit(req)?;
-                    self.apply_stream_response()?;
+            match self.build_stream_chunk(chunk)? {
+                Some(ck) => {
+                    for sink in &mut self.sinks {
+                        sink.submit_chunk(&ck)?;
+                    }
                 }
                 None => {
-                    // nothing left to stream but a score is missing — the
-                    // final token's chunk was streamed without its pick
-                    // (can't happen with the contiguous schedule)
-                    bail!("finished sequence lost its reward score");
+                    // nothing left to stream but a stage is missing data —
+                    // cannot happen with the contiguous schedule
+                    bail!("finished sequence missing streamed stage data");
                 }
             }
         }
@@ -439,11 +499,13 @@ impl OppoScheduler {
         let w = self.cfg.reward_model_weight;
 
         // reward-model scores: streamed (intra modes) or monolithic
-        let rm_scores: Vec<f32> = if self.cfg.mode.intra_enabled() {
+        let rm_scores: Vec<f32> = if self.reward_streamed() {
             seqs.iter()
-                .map(|s| s.rm_score.context("missing streamed score").map(|x| x))
+                .map(|s| s.rm_score.context("missing streamed score"))
                 .collect::<Result<_>>()?
         } else if w > 0.0 {
+            let worker =
+                self.mono_reward.as_mut().context("monolithic reward worker missing")?;
             let mut tokens = vec![0i32; m.lanes * m.s_max];
             let mut last_idx = vec![0i32; m.lanes];
             for (i, seq) in seqs.iter().enumerate() {
@@ -451,8 +513,8 @@ impl OppoScheduler {
                 tokens[i * m.s_max..i * m.s_max + toks.len()].copy_from_slice(&toks);
                 last_idx[i] = (toks.len() - 1) as i32;
             }
-            self.worker.submit(RewardReq::ScoreFull { tokens, last_idx })?;
-            match self.worker.recv()? {
+            worker.submit(RewardReq::ScoreFull { tokens, last_idx })?;
+            match worker.recv()? {
                 RewardResp::FullScores(all) => all[..seqs.len()].to_vec(),
                 other => bail!("unexpected reward response {other:?}"),
             }
@@ -479,14 +541,31 @@ impl OppoScheduler {
 
     fn assemble(&mut self, seqs: &[Sequence], scores: &[f32]) -> Result<PpoBatch> {
         let refs: Vec<&Sequence> = seqs.iter().collect();
-        // reference log-probs over the dense batch tokens
         let m = self.engine.manifest().shape.clone();
-        let mut tokens = vec![0i32; m.ppo_batch * m.s_max];
-        for (i, seq) in seqs.iter().enumerate() {
-            let t = seq.full_tokens();
-            tokens[i * m.s_max..i * m.s_max + t.len()].copy_from_slice(&t);
-        }
-        let ref_logp = self.ops.ref_logprobs(&tokens)?;
+        // reference log-probs over the dense batch tokens: already streamed
+        // by the ref stage (no post-generation blocking call), or computed
+        // monolithically on the fallback / baseline paths
+        let ref_logp = if self.ref_streamed() {
+            let mut dense = vec![0f32; m.ppo_batch * m.s_max];
+            for (i, seq) in seqs.iter().enumerate() {
+                let n = seq.total_len();
+                ensure!(
+                    seq.ref_logp.len() >= n,
+                    "lane {}: streamed ref logprobs cover {} of {n} positions",
+                    seq.lane,
+                    seq.ref_logp.len()
+                );
+                dense[i * m.s_max..i * m.s_max + n].copy_from_slice(&seq.ref_logp[..n]);
+            }
+            dense
+        } else {
+            let mut tokens = vec![0i32; m.ppo_batch * m.s_max];
+            for (i, seq) in seqs.iter().enumerate() {
+                let t = seq.full_tokens();
+                tokens[i * m.s_max..i * m.s_max + t.len()].copy_from_slice(&t);
+            }
+            self.ops.ref_logprobs(&tokens)?
+        };
         self.assembler.assemble(&refs, scores, &ref_logp)
     }
 

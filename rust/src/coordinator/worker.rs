@@ -1,28 +1,56 @@
-//! The reward-scoring worker: its own OS thread, its own reward-model
-//! parameters and KV state, fed streamed chunks over a channel.
+//! The downstream stage workers — reward scoring and reference log-probs —
+//! built on the generic [`StageWorker`](crate::coordinator::stage)
+//! runtime, plus [`StreamSink`], the scheduler-side facade that fans one
+//! streamed `[G, C]` chunk out to every active stage.
 //!
 //! This is the concurrency that realizes §3.1's intra-step overlap: while
-//! the actor thread executes `actor_generate_chunk` for chunk *k*, this
-//! thread executes `reward_prefill_chunk` for chunk *k−1*.  PJRT executes
-//! both concurrently (thread-safe client), so reward prefill latency hides
-//! behind actor decoding exactly as in the paper's Figure 1b.
+//! the actor thread executes `actor_generate_chunk` for chunk *k*, the
+//! reward thread executes `reward_prefill_chunk` and the ref thread
+//! `ref_prefill_chunk` for chunk *k−1*.  PJRT executes all of them
+//! concurrently (thread-safe client), so downstream prefill latency hides
+//! behind actor decoding exactly as in the paper's Figure 1b — now for
+//! *every* downstream model, not just reward.  Each worker owns its own
+//! parameters and KV state, constructed on its own thread.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::engine_ops::RewardOps;
+use crate::coordinator::buffer::SeqBuffer;
+use crate::coordinator::engine_ops::{RefOps, RefStreamState, RewardOps, RewardState};
+use crate::coordinator::stage::{StageHandler, StageWorker};
+use crate::metrics::StageTiming;
+use crate::model::sequence::Sequence;
 use crate::runtime::Engine;
 
 /// Which lane positions hold a sequence's *final* token in this chunk —
-/// the worker returns the score read off at exactly those positions.
+/// the reward worker returns the score read off at exactly those positions.
 #[derive(Clone, Debug)]
 pub struct Pick {
     pub lane: usize,
     pub idx_in_chunk: usize,
 }
+
+/// One streamed `[G, C]` chunk of actor output, built once per decode
+/// iteration and fanned out to every active downstream stage.
+#[derive(Clone, Debug)]
+pub struct StreamChunk {
+    /// chunk size C
+    pub c: usize,
+    /// row-major [G, C] token chunk (PAD-filled for idle lanes)
+    pub tokens: Vec<i32>,
+    /// per-lane absolute start position
+    pub start: Vec<i32>,
+    /// per-lane number of valid tokens in the chunk
+    pub n_valid: Vec<i32>,
+    /// lanes whose final token lands in this chunk
+    pub picks: Vec<Pick>,
+}
+
+// ---------------------------------------------------------------------------
+// reward stage
+// ---------------------------------------------------------------------------
 
 /// Requests to the reward worker.
 pub enum RewardReq {
@@ -30,11 +58,8 @@ pub enum RewardReq {
     Stream {
         /// entry name (`reward_prefill_chunk_c{C}` or the pallas flavour)
         entry: String,
-        /// row-major [G, C] token chunk (PAD-filled for idle lanes)
         chunk: Vec<i32>,
-        /// per-lane absolute start position
         start: Vec<i32>,
-        /// per-lane number of valid tokens in the chunk
         n_valid: Vec<i32>,
         /// final-token positions to read scores from
         picks: Vec<Pick>,
@@ -43,10 +68,9 @@ pub enum RewardReq {
     ScoreFull { tokens: Vec<i32>, last_idx: Vec<i32> },
     /// Reset the reward KV state (new run / tests).
     Reset,
-    Shutdown,
 }
 
-/// Worker responses (one per request, in order).
+/// Worker responses (tagged and in submission order).
 #[derive(Debug)]
 pub enum RewardResp {
     /// (lane, score) for each pick in the stream request
@@ -55,106 +79,304 @@ pub enum RewardResp {
     FullScores(Vec<f32>),
     /// acknowledgement of Reset
     ResetDone,
-    Err(String),
 }
 
-/// Handle to the reward worker thread.
-pub struct RewardWorker {
-    tx: Sender<RewardReq>,
-    rx: Receiver<RewardResp>,
-    handle: Option<JoinHandle<()>>,
+struct RewardHandler {
+    ops: RewardOps,
+    state: RewardState,
 }
 
-impl RewardWorker {
-    pub fn spawn(engine: Arc<Engine>) -> Result<Self> {
-        let (tx, req_rx) = channel::<RewardReq>();
-        let (resp_tx, rx) = channel::<RewardResp>();
-        let handle = std::thread::Builder::new()
-            .name("reward-worker".into())
-            .spawn(move || worker_main(engine, req_rx, resp_tx))
-            .context("spawning reward worker")?;
-        Ok(Self { tx, rx, handle: Some(handle) })
-    }
+impl StageHandler for RewardHandler {
+    type Req = RewardReq;
+    type Resp = RewardResp;
 
-    /// Enqueue a request (non-blocking); pair with [`Self::recv`].
-    pub fn submit(&self, req: RewardReq) -> Result<()> {
-        self.tx.send(req).map_err(|_| anyhow::anyhow!("reward worker hung up"))
-    }
-
-    /// Block for the next response.
-    pub fn recv(&self) -> Result<RewardResp> {
-        let resp = self.rx.recv().map_err(|_| anyhow::anyhow!("reward worker hung up"))?;
-        if let RewardResp::Err(e) = &resp {
-            anyhow::bail!("reward worker error: {e}");
-        }
-        Ok(resp)
-    }
-
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(RewardReq::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for RewardWorker {
-    fn drop(&mut self) {
-        let _ = self.tx.send(RewardReq::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker_main(engine: Arc<Engine>, rx: Receiver<RewardReq>, tx: Sender<RewardResp>) {
-    let ops = match RewardOps::new(engine) {
-        Ok(o) => o,
-        Err(e) => {
-            let _ = tx.send(RewardResp::Err(format!("init: {e:#}")));
-            return;
-        }
-    };
-    let mut state = match ops.fresh_state() {
-        Ok(s) => s,
-        Err(e) => {
-            let _ = tx.send(RewardResp::Err(format!("state init: {e:#}")));
-            return;
-        }
-    };
-
-    while let Ok(req) = rx.recv() {
-        let resp = match req {
-            RewardReq::Shutdown => break,
-            RewardReq::Reset => match ops.fresh_state() {
-                Ok(s) => {
-                    state = s;
-                    RewardResp::ResetDone
-                }
-                Err(e) => RewardResp::Err(format!("{e:#}")),
-            },
+    fn handle(&mut self, req: RewardReq) -> Result<RewardResp> {
+        match req {
+            RewardReq::Reset => {
+                self.state = self.ops.fresh_state()?;
+                Ok(RewardResp::ResetDone)
+            }
             RewardReq::Stream { entry, chunk, start, n_valid, picks } => {
                 let g = start.len();
                 let c = chunk.len() / g;
-                match ops.prefill_chunk(&mut state, &entry, &chunk, &start, &n_valid) {
-                    Ok(scores) => RewardResp::StreamScores(
-                        picks
-                            .iter()
-                            .map(|p| (p.lane, scores[p.lane * c + p.idx_in_chunk]))
-                            .collect(),
-                    ),
-                    Err(e) => RewardResp::Err(format!("{e:#}")),
-                }
+                let scores =
+                    self.ops.prefill_chunk(&mut self.state, &entry, &chunk, &start, &n_valid)?;
+                Ok(RewardResp::StreamScores(
+                    picks
+                        .iter()
+                        .map(|p| (p.lane, scores[p.lane * c + p.idx_in_chunk]))
+                        .collect(),
+                ))
             }
             RewardReq::ScoreFull { tokens, last_idx } => {
-                match ops.score_full(&tokens, &last_idx) {
-                    Ok(scores) => RewardResp::FullScores(scores),
-                    Err(e) => RewardResp::Err(format!("{e:#}")),
+                Ok(RewardResp::FullScores(self.ops.score_full(&tokens, &last_idx)?))
+            }
+        }
+    }
+}
+
+/// Handle to the reward stage worker.
+pub struct RewardWorker {
+    inner: StageWorker<RewardReq, RewardResp>,
+}
+
+impl RewardWorker {
+    pub fn spawn(engine: Arc<Engine>, queue_depth: usize) -> Result<Self> {
+        let inner = StageWorker::spawn("reward", queue_depth, move || {
+            let ops = RewardOps::new(engine)?;
+            let state = ops.fresh_state()?;
+            Ok(RewardHandler { ops, state })
+        })?;
+        Ok(Self { inner })
+    }
+
+    /// Enqueue a request (bounded queue; blocks only under backpressure).
+    pub fn submit(&mut self, req: RewardReq) -> Result<()> {
+        self.inner.submit(req).map(|_| ())
+    }
+
+    /// Block for the next response.
+    pub fn recv(&mut self) -> Result<RewardResp> {
+        self.inner.recv().map(|(_, r)| r)
+    }
+
+    pub fn try_recv(&mut self) -> Result<Option<RewardResp>> {
+        Ok(self.inner.try_recv()?.map(|(_, r)| r))
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+
+    pub fn timing_delta(&mut self) -> StageTiming {
+        self.inner.timing_delta()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reference stage
+// ---------------------------------------------------------------------------
+
+/// Requests to the reference worker.
+pub enum RefReq {
+    /// Incremental ref-logprob prefill of one streamed chunk.
+    Stream { entry: String, chunk: Vec<i32>, start: Vec<i32>, n_valid: Vec<i32> },
+    /// Reset the ref KV/boundary state (new run / tests).
+    Reset,
+}
+
+#[derive(Debug)]
+pub enum RefResp {
+    /// raw [G, C] log-probs for a stream request (garbage at j >= n_valid)
+    StreamLogps(Vec<f32>),
+    ResetDone,
+}
+
+struct RefHandler {
+    ops: RefOps,
+    state: RefStreamState,
+}
+
+impl StageHandler for RefHandler {
+    type Req = RefReq;
+    type Resp = RefResp;
+
+    fn handle(&mut self, req: RefReq) -> Result<RefResp> {
+        match req {
+            RefReq::Reset => {
+                self.state = self.ops.fresh_state()?;
+                Ok(RefResp::ResetDone)
+            }
+            RefReq::Stream { entry, chunk, start, n_valid } => Ok(RefResp::StreamLogps(
+                self.ops.prefill_chunk(&mut self.state, &entry, &chunk, &start, &n_valid)?,
+            )),
+        }
+    }
+}
+
+/// Handle to the reference stage worker.
+pub struct RefWorker {
+    inner: StageWorker<RefReq, RefResp>,
+}
+
+impl RefWorker {
+    pub fn spawn(engine: Arc<Engine>, queue_depth: usize) -> Result<Self> {
+        let inner = StageWorker::spawn("ref", queue_depth, move || {
+            let ops = RefOps::new(engine)?;
+            let state = ops.fresh_state()?;
+            Ok(RefHandler { ops, state })
+        })?;
+        Ok(Self { inner })
+    }
+
+    pub fn submit(&mut self, req: RefReq) -> Result<()> {
+        self.inner.submit(req).map(|_| ())
+    }
+
+    pub fn recv(&mut self) -> Result<RefResp> {
+        self.inner.recv().map(|(_, r)| r)
+    }
+
+    pub fn try_recv(&mut self) -> Result<Option<RefResp>> {
+        Ok(self.inner.try_recv()?.map(|(_, r)| r))
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+
+    pub fn timing_delta(&mut self) -> StageTiming {
+        self.inner.timing_delta()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fan-out facade
+// ---------------------------------------------------------------------------
+
+/// Ref sink bookkeeping: responses are raw `[G, C]` log-prob grids, so the
+/// per-request `(start, n_valid, c)` metadata rides a FIFO alongside the
+/// in-flight requests (the worker answers strictly in submission order).
+pub struct RefSink {
+    worker: RefWorker,
+    meta: VecDeque<(Vec<i32>, Vec<i32>, usize)>,
+}
+
+impl RefSink {
+    pub fn spawn(engine: Arc<Engine>, queue_depth: usize) -> Result<Self> {
+        Ok(Self { worker: RefWorker::spawn(engine, queue_depth)?, meta: VecDeque::new() })
+    }
+
+    fn apply(&mut self, buf: &mut SeqBuffer, logps: Vec<f32>) -> Result<()> {
+        let (start, n_valid, c) = self
+            .meta
+            .pop_front()
+            .context("ref stage response without a matching request")?;
+        for lane in 0..start.len() {
+            let nv = n_valid[lane] as usize;
+            if nv == 0 {
+                continue;
+            }
+            let seq = buf
+                .by_lane_mut(lane)
+                .with_context(|| format!("ref response for vacated lane {lane}"))?;
+            let st = start[lane] as usize;
+            ensure!(
+                seq.ref_logp.len() == st,
+                "ref stream discontinuity on lane {lane}: have {} positions, chunk starts at {st}",
+                seq.ref_logp.len()
+            );
+            seq.ref_logp.extend_from_slice(&logps[lane * c..lane * c + nv]);
+        }
+        Ok(())
+    }
+}
+
+/// Scheduler-side handle to one active downstream stage.  The step loop
+/// fans every [`StreamChunk`] out to all sinks and joins them at flush;
+/// future stages (critic, sharded reward replicas) add a variant here and
+/// a worker above, and the scheduler loop stays untouched.
+pub enum StreamSink {
+    Reward(RewardWorker),
+    Ref(RefSink),
+}
+
+impl StreamSink {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamSink::Reward(_) => "reward",
+            StreamSink::Ref(_) => "ref",
+        }
+    }
+
+    /// Submit one streamed chunk to this stage (typed per-stage request).
+    pub fn submit_chunk(&mut self, ck: &StreamChunk) -> Result<()> {
+        match self {
+            StreamSink::Reward(w) => w.submit(RewardReq::Stream {
+                entry: format!("reward_prefill_chunk_c{}", ck.c),
+                chunk: ck.tokens.clone(),
+                start: ck.start.clone(),
+                n_valid: ck.n_valid.clone(),
+                picks: ck.picks.clone(),
+            }),
+            StreamSink::Ref(s) => {
+                s.meta.push_back((ck.start.clone(), ck.n_valid.clone(), ck.c));
+                s.worker.submit(RefReq::Stream {
+                    entry: format!("ref_prefill_chunk_c{}", ck.c),
+                    chunk: ck.tokens.clone(),
+                    start: ck.start.clone(),
+                    n_valid: ck.n_valid.clone(),
+                })
+            }
+        }
+    }
+
+    /// Apply any responses that are already available (non-blocking).
+    pub fn collect_ready(&mut self, buf: &mut SeqBuffer) -> Result<()> {
+        loop {
+            match self {
+                StreamSink::Reward(w) => match w.try_recv()? {
+                    Some(resp) => apply_reward(buf, resp)?,
+                    None => return Ok(()),
+                },
+                StreamSink::Ref(s) => match s.worker.try_recv()? {
+                    Some(RefResp::StreamLogps(lp)) => s.apply(buf, lp)?,
+                    Some(other) => bail!("unexpected ref response {other:?}"),
+                    None => return Ok(()),
+                },
+            }
+        }
+    }
+
+    /// Block until every in-flight response is applied (the flush join).
+    pub fn join(&mut self, buf: &mut SeqBuffer) -> Result<()> {
+        match self {
+            StreamSink::Reward(w) => {
+                while w.in_flight() > 0 {
+                    let resp = w.recv()?;
+                    apply_reward(buf, resp)?;
                 }
             }
-        };
-        if tx.send(resp).is_err() {
-            break;
+            StreamSink::Ref(s) => {
+                while s.worker.in_flight() > 0 {
+                    match s.worker.recv()? {
+                        RefResp::StreamLogps(lp) => s.apply(buf, lp)?,
+                        other => bail!("unexpected ref response {other:?}"),
+                    }
+                }
+            }
         }
+        Ok(())
+    }
+
+    /// Does this stage hold everything it needs for `seq`?  Checked for
+    /// finished sequences when deciding whether the flush loop must keep
+    /// streaming.
+    pub fn is_satisfied(&self, seq: &Sequence) -> bool {
+        match self {
+            StreamSink::Reward(_) => seq.rm_score.is_some(),
+            StreamSink::Ref(_) => seq.ref_logp.len() >= seq.total_len(),
+        }
+    }
+
+    pub fn timing_delta(&mut self) -> StageTiming {
+        match self {
+            StreamSink::Reward(w) => w.timing_delta(),
+            StreamSink::Ref(s) => s.worker.timing_delta(),
+        }
+    }
+}
+
+fn apply_reward(buf: &mut SeqBuffer, resp: RewardResp) -> Result<()> {
+    match resp {
+        RewardResp::StreamScores(scores) => {
+            for (lane, score) in scores {
+                if let Some(seq) = buf.by_lane_mut(lane) {
+                    seq.rm_score = Some(score);
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unexpected reward response {other:?}"),
     }
 }

@@ -9,6 +9,19 @@ use anyhow::{Context, Result};
 use crate::util::json::{self, Value};
 use crate::util::stats;
 
+/// One pipeline stage's share of a step (reward / ref / future stages).
+/// `busy_s` is time inside the stage's compute, `idle_s` time the stage
+/// worker spent waiting for work — the per-stage attribution behind the
+/// Fig. 5-style utilization analysis.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StageTiming {
+    pub name: String,
+    pub busy_s: f64,
+    pub idle_s: f64,
+    /// requests (streamed chunks / scoring calls) the stage processed
+    pub items: u64,
+}
+
 /// One PPO step's telemetry.
 #[derive(Clone, Debug, Default)]
 pub struct StepRecord {
@@ -32,6 +45,11 @@ pub struct StepRecord {
     pub train_stats: [f32; 6],
     /// pool-wide GPU utilization for the step (simulator runs; 0 = n/a)
     pub util: f64,
+    /// per-stage busy/idle attribution for the step: one row per streaming
+    /// sink, plus the monolithic reward scorer when that path is active
+    /// (so even the sequential baseline reports a "reward" row); empty when
+    /// no stage workers exist (e.g. DPO)
+    pub stages: Vec<StageTiming>,
 }
 
 /// Whole-run log for one pipeline mode.
@@ -132,6 +150,22 @@ impl RunLog {
                     (
                         "train_stats",
                         json::arr_f64(&r.train_stats.map(|x| x as f64)),
+                    ),
+                    (
+                        "stages",
+                        Value::Arr(
+                            r.stages
+                                .iter()
+                                .map(|st| {
+                                    json::obj(vec![
+                                        ("name", json::s(&st.name)),
+                                        ("busy_s", json::num(st.busy_s)),
+                                        ("idle_s", json::num(st.idle_s)),
+                                        ("items", json::num(st.items as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
                     ),
                 ])
             })

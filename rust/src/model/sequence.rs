@@ -33,10 +33,16 @@ pub struct Sequence {
     /// PPO step at which the prompt entered the buffer (deferral stats)
     pub enqueued_step: u64,
     /// how many tokens (prompt + response) have been streamed to the
-    /// reward model's incremental prefill so far
-    pub reward_streamed: usize,
+    /// downstream stages' incremental prefill so far — all stages consume
+    /// the same contiguous chunk schedule, so one cursor serves every stage
+    pub streamed: usize,
     /// reward-model score once scored
     pub rm_score: Option<f32>,
+    /// reference-model log-probs accumulated by the streamed ref stage,
+    /// indexed by absolute position (`ref_logp[p] = log P(tok_p | tok_<p)`,
+    /// with the position-0 convention of `ref_logprobs`); grows with
+    /// `streamed` and covers `total_len()` once the flush join completes
+    pub ref_logp: Vec<f32>,
     /// number of PPO steps this sequence was deferred past its first
     /// eligible step (Table 2's metric); filled at batch selection
     pub deferred_steps: u64,
@@ -54,8 +60,9 @@ impl Sequence {
             logps: Vec::new(),
             values: Vec::new(),
             enqueued_step: step,
-            reward_streamed: 0,
+            streamed: 0,
             rm_score: None,
+            ref_logp: Vec::new(),
             deferred_steps: 0,
         }
     }
@@ -93,9 +100,9 @@ impl Sequence {
         done
     }
 
-    /// Tokens not yet streamed to the reward model (prompt + response view).
+    /// Tokens not yet streamed to the downstream stages (prompt + response).
     pub fn unstreamed(&self) -> usize {
-        self.total_len().saturating_sub(self.reward_streamed)
+        self.total_len().saturating_sub(self.streamed)
     }
 
     /// Full token row (prompt + response) — used for monolithic scoring.
@@ -166,10 +173,10 @@ mod tests {
         let mut s = Sequence::new(prompt(4), 0, 0);
         s.phase = SeqPhase::Generating;
         assert_eq!(s.unstreamed(), 4);
-        s.reward_streamed = 4;
+        s.streamed = 4;
         s.push_token(10, 0.0, 0.0, 2, 8, 100);
         assert_eq!(s.unstreamed(), 1);
-        s.reward_streamed = 5;
+        s.streamed = 5;
         assert_eq!(s.unstreamed(), 0);
     }
 }

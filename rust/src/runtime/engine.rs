@@ -37,6 +37,9 @@ pub struct Engine {
     manifest: Manifest,
     executables: RwLock<HashMap<String, Arc<PjRtLoadedExecutable>>>,
     stats: Mutex<HashMap<String, Arc<EntryStats>>>,
+    /// per-stage aggregation ("actor" / "reward" / "ref" / "main") so the
+    /// utilization analysis can attribute device time to pipeline stages
+    scope_stats: Mutex<HashMap<String, Arc<EntryStats>>>,
 }
 
 impl Engine {
@@ -55,6 +58,7 @@ impl Engine {
             manifest,
             executables: RwLock::new(HashMap::new()),
             stats: Mutex::new(HashMap::new()),
+            scope_stats: Mutex::new(HashMap::new()),
         })
     }
 
@@ -101,7 +105,20 @@ impl Engine {
 
     /// Execute an entry with device-resident arguments; returns one buffer
     /// per output tuple element.  Validates arity against the manifest.
+    /// Time is attributed to the `"main"` scope — stage workers use
+    /// [`Self::execute_scoped`] so per-stage utilization can be read back.
     pub fn execute(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        self.execute_scoped("main", name, args)
+    }
+
+    /// [`Self::execute`] with the elapsed time also attributed to `scope`
+    /// (one scope per pipeline stage: "actor", "reward", "ref", ...).
+    pub fn execute_scoped(
+        &self,
+        scope: &str,
+        name: &str,
+        args: &[&PjRtBuffer],
+    ) -> Result<Vec<PjRtBuffer>> {
         let spec = self.manifest.entry(name)?;
         if args.len() != spec.inputs.len() {
             bail!("{name}: got {} args, manifest says {}", args.len(), spec.inputs.len());
@@ -116,6 +133,9 @@ impl Engine {
         let stats = self.entry_stats(name);
         stats.calls.fetch_add(1, Ordering::Relaxed);
         stats.nanos.fetch_add(elapsed, Ordering::Relaxed);
+        let sstats = self.scope_entry_stats(scope);
+        sstats.calls.fetch_add(1, Ordering::Relaxed);
+        sstats.nanos.fetch_add(elapsed, Ordering::Relaxed);
 
         if outs.len() != 1 {
             bail!("{name}: expected 1 replica, got {}", outs.len());
@@ -132,9 +152,23 @@ impl Engine {
         map.entry(name.to_string()).or_default().clone()
     }
 
+    fn scope_entry_stats(&self, scope: &str) -> Arc<EntryStats> {
+        let mut map = self.scope_stats.lock().unwrap();
+        map.entry(scope.to_string()).or_default().clone()
+    }
+
     /// Snapshot of (entry, calls, total_seconds), sorted by time desc.
     pub fn stats_snapshot(&self) -> Vec<(String, u64, f64)> {
-        let map = self.stats.lock().unwrap();
+        Self::snapshot(&self.stats)
+    }
+
+    /// Snapshot of (stage scope, calls, total_seconds), sorted by time desc.
+    pub fn scope_snapshot(&self) -> Vec<(String, u64, f64)> {
+        Self::snapshot(&self.scope_stats)
+    }
+
+    fn snapshot(stats: &Mutex<HashMap<String, Arc<EntryStats>>>) -> Vec<(String, u64, f64)> {
+        let map = stats.lock().unwrap();
         let mut rows: Vec<(String, u64, f64)> = map
             .iter()
             .map(|(k, v)| {

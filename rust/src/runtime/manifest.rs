@@ -219,6 +219,16 @@ impl Manifest {
                 self.entries.keys().collect::<Vec<_>>()))
     }
 
+    /// Do the artifacts ship chunked *reference* prefill for every compiled
+    /// chunk size?  Older artifact sets only have dense `ref_logprobs`; the
+    /// scheduler falls back to the monolithic path when this is false.
+    pub fn ref_prefill_supported(&self) -> bool {
+        self.shape
+            .chunk_sizes
+            .iter()
+            .all(|c| self.entries.contains_key(&format!("ref_prefill_chunk_c{c}")))
+    }
+
     /// The Pallas-flavoured reward-prefill entry name, if shipped.
     pub fn pallas_reward_entry(&self) -> Option<(&str, usize)> {
         self.entries.keys().find_map(|k| {

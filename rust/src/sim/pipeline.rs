@@ -21,7 +21,7 @@
 //! the tail-straggler effect inter-step overlap attacks.
 
 use crate::coordinator::delta::{DeltaController, Policy};
-use crate::metrics::{RunLog, StepRecord};
+use crate::metrics::{RunLog, StageTiming, StepRecord};
 use crate::sim::costmodel::CostModel;
 use crate::sim::presets::Setup;
 use crate::sim::rewardmodel::RewardProcess;
@@ -295,8 +295,12 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         // ---- scoring ----
         let reward_prefill =
             if su.use_reward_model { score_cm.prefill(total_tokens, mean_seq) } else { 0.0 };
-        let ref_value_prefill =
-            2.0 * train_cm.prefill(total_tokens, mean_seq) / su.cluster.n_gen as f64;
+        // third pipeline stage: reference-model prefill, costed separately
+        // from the actor-colocated value prefill (their sum equals the old
+        // combined ref+value term exactly)
+        let ref_prefill = train_cm.prefill(total_tokens, mean_seq) / su.cluster.n_gen as f64;
+        let value_prefill = ref_prefill;
+        let ref_value_prefill = ref_prefill + value_prefill;
         let (exposed_reward, hidden_reward) = if intra && su.use_reward_model {
             // streamed scoring drains during the generation window.  Exposed:
             // (a) the final chunk of the last straggler, and (b) sequences
@@ -389,6 +393,13 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         }
 
         elapsed += step_time;
+        let stage_row = |name: &str, busy: f64, items: u64| StageTiming {
+            name: name.to_string(),
+            busy_s: busy,
+            idle_s: (step_time - busy).max(0.0),
+            items,
+        };
+        let n_fin = finished.len() as u64;
         log.push(StepRecord {
             step,
             wall_s: step_time,
@@ -401,6 +412,13 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             gen_tokens: gen_tokens as usize,
             train_stats: [0.0; 6],
             util: util_val,
+            stages: vec![
+                stage_row("actor", gen_time, n_fin),
+                stage_row("reward", reward_prefill, n_fin),
+                stage_row("ref", ref_prefill, n_fin),
+                stage_row("value", value_prefill, n_fin),
+                stage_row("train", train_time, 1),
+            ],
         });
 
         // non-inter pipelines never carry work across steps (except AReaL,
@@ -522,6 +540,23 @@ mod tests {
         assert!(dp > dpsp, "DP {dp} !> DP+SP {dpsp}");
         assert!(dpsp > areal, "DP+SP {dpsp} !> AReaL {areal}");
         assert!(areal > oppo, "AReaL {areal} !> OPPO {oppo}");
+    }
+
+    #[test]
+    fn step_records_carry_per_stage_attribution() {
+        let log = quick(Pipeline::oppo(), 20, 11);
+        for r in &log.records {
+            let names: Vec<&str> = r.stages.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(names, vec!["actor", "reward", "ref", "value", "train"]);
+            for st in &r.stages {
+                assert!(st.busy_s >= 0.0 && st.idle_s >= 0.0, "{st:?}");
+                assert!(
+                    st.busy_s <= r.wall_s + 1e-9,
+                    "stage {} busy {} exceeds step {}",
+                    st.name, st.busy_s, r.wall_s
+                );
+            }
+        }
     }
 
     #[test]

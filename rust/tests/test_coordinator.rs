@@ -57,11 +57,41 @@ fn engine_batch() -> usize {
 #[test]
 fn sequential_and_ablations_run() {
     if ENGINE.is_none() { return }
-    for mode in [Mode::Sequential, Mode::OppoNoIntra, Mode::OppoNoInter] {
+    for mode in [Mode::Sequential, Mode::OppoNoIntra, Mode::OppoNoInter, Mode::OppoNoRef] {
         let log = run_mode(mode);
         assert_eq!(log.records.len(), 3, "{mode:?}");
         assert!(log.records.iter().all(|r| r.finished == engine_batch()));
     }
+}
+
+#[test]
+fn oppo_reports_per_stage_timings() {
+    if ENGINE.is_none() { return }
+    let engine = ENGINE.clone().unwrap();
+    let mut sched = OppoScheduler::with_engine(cfg(Mode::Oppo), engine.clone()).unwrap();
+    // reward always streams in Oppo mode; ref streams when artifacts ship
+    // the chunked ref entries
+    assert!(sched.stage_names().contains(&"reward"));
+    if engine.manifest().ref_prefill_supported() {
+        assert!(sched.ref_streamed(), "ref stage should stream with capable artifacts");
+        assert!(sched.stage_names().contains(&"ref"));
+    }
+    let rec = sched.run_step(0).unwrap();
+    assert!(!rec.stages.is_empty(), "Oppo steps must attribute stage time");
+    for st in &rec.stages {
+        assert!(st.items > 0, "stage {} processed no requests", st.name);
+        assert!(st.busy_s > 0.0, "stage {} recorded no busy time", st.name);
+        assert!(st.busy_s <= rec.wall_s * 2.0, "stage {} busy time implausible", st.name);
+    }
+}
+
+#[test]
+fn sequential_mode_has_no_streaming_stages() {
+    if ENGINE.is_none() { return }
+    let engine = ENGINE.clone().unwrap();
+    let sched = OppoScheduler::with_engine(cfg(Mode::Sequential), engine).unwrap();
+    assert!(sched.stage_names().is_empty());
+    assert!(!sched.ref_streamed());
 }
 
 #[test]

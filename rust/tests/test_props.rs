@@ -165,6 +165,98 @@ fn chunk_controller_always_emits_a_compiled_variant() {
 }
 
 #[test]
+fn chunk_controller_converges_to_argmin_latency() {
+    forall(
+        Config { cases: 40, ..Default::default() },
+        "chunk-converges",
+        |rng| {
+            let n = rng.range_usize(2, 5);
+            let cands: Vec<usize> = (0..n).map(|i| 8 << i).collect();
+            let best = *rng.choice(&cands);
+            let initial = *rng.choice(&cands);
+            let probes = 2usize;
+            let period = cands.len() * probes;
+            (cands, best, initial, probes, period)
+        },
+        |(cands, best, initial, probes, period)| {
+            let mut ctl =
+                ChunkController::new(cands.clone(), *initial, *period, *probes, true);
+            let mut noise = Rng::new(7);
+            // synthetic latency window: V-shaped in log2(chunk) with optimum
+            // at `best`; noise amplitude well under the candidate gap
+            let latency = |c: usize, n: f64| {
+                1.0 + 0.5 * ((c as f64).log2() - (*best as f64).log2()).abs() + 0.01 * n
+            };
+            for _ in 0..400 {
+                let c = ctl.chunk();
+                if !cands.contains(&c) {
+                    return Err(format!("emitted non-candidate chunk {c}"));
+                }
+                let n = noise.range_f64(0.0, 1.0);
+                ctl.observe_step(latency(c, n));
+            }
+            // finish any in-progress exploration round, then check the pick
+            while ctl.exploring() {
+                let c = ctl.chunk();
+                ctl.observe_step(latency(c, 0.0));
+            }
+            if ctl.chunk() != *best {
+                return Err(format!("settled on {} (optimum {best})", ctl.chunk()));
+            }
+            for (_, c) in &ctl.history {
+                if !cands.contains(c) {
+                    return Err(format!("history has non-candidate {c}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn delta_controller_converges_under_synthetic_reward_phases() {
+    forall(
+        Config { cases: 60, ..Default::default() },
+        "delta-converges",
+        |rng| {
+            let lo = rng.range_usize(0, 3);
+            let hi = lo + rng.range_usize(2, 9);
+            let init = lo + rng.range_usize(0, hi - lo + 1);
+            let w = rng.range_usize(1, 5);
+            (lo, hi, init, w)
+        },
+        |(lo, hi, init, w)| {
+            let mut c = DeltaController::new(*init, *lo, *hi, *w, Policy::Eq4);
+            let mut step = 0u64;
+            // improving phase: strictly rising reward => Δ climbs to Δ_max
+            for i in 0..(20 * *w) {
+                let d = c.observe(step, i as f64);
+                step += 1;
+                if d < *lo || d > *hi {
+                    return Err(format!("delta {d} escaped [{lo}, {hi}]"));
+                }
+            }
+            if c.delta() != *hi {
+                return Err(format!("improving phase ended at Δ={} (max {hi})", c.delta()));
+            }
+            // plateau: flat reward => Δ decays back to Δ_min (Eq. 4's
+            // "convergence pulls Δ toward Δ_min" behaviour)
+            for _ in 0..(30 * *w) {
+                let d = c.observe(step, 1e6);
+                step += 1;
+                if d < *lo || d > *hi {
+                    return Err(format!("delta {d} escaped [{lo}, {hi}]"));
+                }
+            }
+            if c.delta() != *lo {
+                return Err(format!("plateau ended at Δ={} (min {lo})", c.delta()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn sim_deferral_never_exceeds_buffer_depth() {
     forall(
         Config { cases: 30, ..Default::default() },

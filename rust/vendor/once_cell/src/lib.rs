@@ -1,0 +1,48 @@
+//! Vendored mini-`once_cell` for the offline build: just `sync::Lazy`,
+//! implemented over `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access.  `F` defaults to a function
+    /// pointer so `static L: Lazy<T> = Lazy::new(|| ...)` works with
+    /// capture-free closures, as with the real crate.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Lazy { cell: OnceLock::new(), init }
+        }
+
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        static N: Lazy<usize> = Lazy::new(|| 41 + 1);
+
+        #[test]
+        fn initializes_once() {
+            assert_eq!(*N, 42);
+            assert_eq!(*N, 42);
+            let local: Lazy<String> = Lazy::new(|| "hi".to_string());
+            assert_eq!(local.len(), 2);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Build-shim for the patched PJRT `xla` crate.
+//!
+//! The real runtime backend is the locally patched xla/xla_extension crate
+//! (with `execute_b_untupled`) described in `rust/src/runtime/mod.rs`; it is
+//! not redistributable through the offline crate set, so this shim provides
+//! the exact API surface the `oppo` crate compiles against.  Every
+//! constructor returns [`XlaError`] at runtime, and the engine-dependent
+//! tests gate themselves on `artifacts/manifest.json` being present, so the
+//! full suite builds and runs green without a PJRT backend.  To run real
+//! compute, point the `xla` path dependency in `rust/Cargo.toml` at the
+//! patched crate instead of this shim.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: the `xla` dependency is the build-shim \
+     (point rust/Cargo.toml's `xla` path at the patched crate to execute artifacts)";
+
+/// Error type mirroring the real crate's.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl XlaError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        XlaError(msg.into())
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// A PJRT client (stub: cannot be constructed).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// A device-resident buffer (stub: cannot be constructed).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// A compiled executable (stub: cannot be constructed).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Untupled execution: one `Vec<PjRtBuffer>` per replica, one buffer per
+    /// root-tuple element (the patched-crate extension the engine relies on).
+    pub fn execute_b_untupled(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A host-side literal (stub: cannot be constructed).
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_not_silently() {
+        let err = PjRtClient::cpu().err().expect("stub must not pretend to work");
+        assert!(err.to_string().contains("PJRT backend unavailable"));
+    }
+}
