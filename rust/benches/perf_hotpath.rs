@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use oppo::coordinator::buffer::SeqBuffer;
 use oppo::coordinator::engine_ops::Ops;
-use oppo::coordinator::stage::{StageHandler, StageWorker};
+use oppo::coordinator::stage::{StageHandler, StagePool, StageWorker};
 use oppo::coordinator::worker::{RefReq, RefWorker};
 use oppo::data::tasks::{Prompt, TaskKind};
 use oppo::eval::{print_table, save_rows, Row};
@@ -144,6 +144,62 @@ fn main() {
                 .cell("overlap_ms", 1e3 * overlap_secs)
                 .cell("speedup", sync_secs / overlap_secs),
         );
+    }
+
+    // Replica-pool scaling: streamed-chunk throughput through 1 vs 2 reward
+    // replicas, with per-chunk stage cost proportional to the lanes a
+    // replica owns (the lane % replicas split).  This models replicas on
+    // independent execution resources — separate devices/streams, or the
+    // future lane-sliced [G/N, C] entries (see ROADMAP) — where splitting a
+    // stage slower than the actor across 2 replicas roughly halves the
+    // per-replica prefill and pulls the pipeline back toward actor-bound.
+    {
+        struct LaneCost {
+            per_lane: Duration,
+        }
+        impl StageHandler for LaneCost {
+            type Req = usize; // lanes this replica owns in the sub-chunk
+            type Resp = ();
+            fn handle(&mut self, lanes: usize) -> Result<()> {
+                std::thread::sleep(self.per_lane * lanes as u32);
+                Ok(())
+            }
+        }
+        let lanes = 8usize;
+        let per_lane = Duration::from_micros(400); // full chunk: 3.2 ms of scoring
+        let decode = Duration::from_millis(1); // actor: 1 ms per chunk
+        let n_chunks = 30;
+        let mut row = Row::new("stage pool replicas (8 lanes)");
+        let mut thru = Vec::new();
+        for replicas in [1usize, 2] {
+            let mut pool: StagePool<usize, ()> =
+                StagePool::spawn("bench-pool", replicas, 2, |_r| {
+                    move || Ok(LaneCost { per_lane })
+                })
+                .expect("spawn");
+            let secs = time_it(|| {
+                for _ in 0..n_chunks {
+                    for r in 0..replicas {
+                        // lane % replicas ownership => lanes split evenly
+                        let owned = lanes / replicas + usize::from(r < lanes % replicas);
+                        pool.submit_to(r, owned).expect("submit");
+                    }
+                    std::thread::sleep(decode); // actor decodes while the pool prefills
+                    while pool.try_recv_any().expect("recv").is_some() {}
+                }
+                for r in 0..replicas {
+                    while pool.in_flight_on(r) > 0 {
+                        pool.recv_from(r).expect("recv");
+                    }
+                }
+            });
+            thru.push(n_chunks as f64 / secs);
+            row = row.cell(
+                if replicas == 1 { "chunks_per_sec_x1" } else { "chunks_per_sec_x2" },
+                n_chunks as f64 / secs,
+            );
+        }
+        rows.push(row.cell("speedup_x2", thru[1] / thru[0]));
     }
 
     // PJRT dispatch path (needs artifacts)

@@ -121,8 +121,15 @@ pub struct TrainConfig {
     pub stream_ref: bool,
     /// Bounded request-queue depth per stage worker: how many streamed
     /// chunks may be in flight before submission backpressures the actor
-    /// loop (>= 1).
+    /// loop (>= 1).  With replicated stages the depth applies per replica.
     pub stage_queue_depth: usize,
+    /// Worker replicas behind the streamed reward / reference stages
+    /// (>= 1).  Chunks are routed `lane % replicas` (sequence affinity: a
+    /// lane's KV/seam state lives on one replica for the whole run), so
+    /// raising these keeps streaming actor-bound once a single scorer can
+    /// no longer keep pace with actor decoding.
+    pub reward_replicas: usize,
+    pub ref_replicas: usize,
     pub artifacts_dir: String,
     pub log_every: usize,
     /// Where to drop JSON metrics (None = don't write).
@@ -153,6 +160,8 @@ impl Default for TrainConfig {
             stream_reward: true,
             stream_ref: true,
             stage_queue_depth: 2,
+            reward_replicas: 1,
+            ref_replicas: 1,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             out_dir: None,
@@ -198,6 +207,8 @@ impl TrainConfig {
         set!(stream_reward, as_bool);
         set!(stream_ref, as_bool);
         set!(stage_queue_depth, as_usize);
+        set!(reward_replicas, as_usize);
+        set!(ref_replicas, as_usize);
         set!(log_every, as_usize);
         if let Some(v) = get("task") {
             cfg.task = v.as_str()?.to_string();
@@ -253,6 +264,12 @@ impl TrainConfig {
         if self.stage_queue_depth == 0 {
             bail!("stage_queue_depth must be >= 1 (bounded stage queues need room)");
         }
+        if self.reward_replicas == 0 || self.ref_replicas == 0 {
+            bail!(
+                "stage replica counts must be >= 1 (reward_replicas {}, ref_replicas {})",
+                self.reward_replicas, self.ref_replicas
+            );
+        }
         match self.task.as_str() {
             "arith" | "copy" | "sort" | "mixed" => {}
             t => bail!("unknown task {t:?} (want arith|copy|sort|mixed)"),
@@ -282,6 +299,15 @@ impl TrainConfig {
             bail!(
                 "chunk_size {} has no compiled executable (manifest has {chunk_sizes:?})",
                 self.chunk_size
+            );
+        }
+        // lane % replicas routing: a replica beyond the lane count could
+        // never own a lane, yet would still allocate full params + KV state
+        if self.reward_replicas > lanes || self.ref_replicas > lanes {
+            bail!(
+                "stage replica counts exceed manifest lanes {lanes} \
+                 (reward_replicas {}, ref_replicas {}): surplus replicas can never own a lane",
+                self.reward_replicas, self.ref_replicas
             );
         }
         if prompt_max + self.max_new_tokens > s_max {
@@ -349,6 +375,13 @@ mod tests {
         assert!(cfg.validate_against_manifest(8, 10, &[8, 16, 32], 160, 24).is_err());
         assert!(cfg.validate_against_manifest(8, 12, &[64], 160, 24).is_err());
         assert!(cfg.validate_against_manifest(8, 12, &[8, 16, 32], 100, 24).is_err());
+        // more replicas than lanes: surplus replicas could never own a lane
+        let cfg = TrainConfig { reward_replicas: 13, ..Default::default() };
+        assert!(cfg.validate_against_manifest(8, 12, &[8, 16, 32], 160, 24).is_err());
+        let cfg = TrainConfig { ref_replicas: 13, ..Default::default() };
+        assert!(cfg.validate_against_manifest(8, 12, &[8, 16, 32], 160, 24).is_err());
+        let cfg = TrainConfig { reward_replicas: 12, ref_replicas: 12, ..Default::default() };
+        cfg.validate_against_manifest(8, 12, &[8, 16, 32], 160, 24).unwrap();
     }
 
     #[test]
@@ -388,6 +421,22 @@ mod tests {
         assert!(cfg.validate().is_err());
         let cfg = TrainConfig { stream_reward: false, stream_ref: false, ..Default::default() };
         cfg.validate().unwrap();
+        let cfg = TrainConfig { reward_replicas: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = TrainConfig { ref_replicas: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg =
+            TrainConfig { reward_replicas: 3, ref_replicas: 2, ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn replica_knobs_parse_from_doc() {
+        let doc =
+            parse::parse("[run]\nreward_replicas = 2\nref_replicas = 3").unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.reward_replicas, 2);
+        assert_eq!(cfg.ref_replicas, 3);
     }
 
     #[test]

@@ -174,8 +174,15 @@ impl SeqBuffer {
     /// (Alg. 1 never evicts); the capacity bound is an *admission* invariant,
     /// checked in `add`.
     pub fn check_invariants(&self) -> Result<()> {
+        if self.completed_at.len() != self.seqs.len() {
+            bail!(
+                "completion stamps out of sync: {} stamps vs {} sequences",
+                self.completed_at.len(),
+                self.seqs.len()
+            );
+        }
         let mut seen = vec![false; self.lanes];
-        for s in &self.seqs {
+        for (i, s) in self.seqs.iter().enumerate() {
             if s.lane >= self.lanes {
                 bail!("lane {} out of range", s.lane);
             }
@@ -185,6 +192,23 @@ impl SeqBuffer {
             seen[s.lane] = true;
             if self.lane_free[s.lane] {
                 bail!("occupied lane {} marked free", s.lane);
+            }
+            // finished ⇔ stamped: a stamp implies the sequence really
+            // finished, and every finished sequence carries its completion
+            // stamp (mark_finished ran) — the ordering take_finished sorts
+            // by is meaningless if either direction breaks
+            let stamped = self.completed_at[i] != u64::MAX;
+            if stamped && !s.is_finished() {
+                bail!("lane {}: stamped complete but sequence unfinished", s.lane);
+            }
+            if s.is_finished() && !stamped {
+                bail!("lane {}: finished but never stamped (mark_finished missed)", s.lane);
+            }
+            if stamped && self.completed_at[i] >= self.next_completion {
+                bail!(
+                    "lane {}: stamp {} not older than next stamp {}",
+                    s.lane, self.completed_at[i], self.next_completion
+                );
             }
         }
         let occupied = seen.iter().filter(|&&x| x).count();
@@ -282,6 +306,32 @@ mod tests {
         // invariant check tolerates the transient only via take; here we
         // simply verify nothing was dropped and no new adds are admitted
         assert!(buf.add(prompt(9), 0).is_err());
+    }
+
+    #[test]
+    fn invariants_catch_finished_without_stamp() {
+        let mut buf = SeqBuffer::new(2, 2);
+        buf.add(prompt(0), 0).unwrap();
+        let s = buf.by_lane_mut(0).unwrap();
+        s.phase = SeqPhase::Generating;
+        s.push_token(2, 0.0, 0.0, 2, 8, 100); // EOS => finished
+        assert!(buf.check_invariants().is_err(), "finished but unstamped must be caught");
+        buf.mark_finished(0);
+        buf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariants_catch_stamp_desync() {
+        let mut buf = SeqBuffer::new(2, 2);
+        buf.add(prompt(0), 0).unwrap();
+        buf.check_invariants().unwrap();
+        let stamp = buf.completed_at.pop().unwrap();
+        assert!(buf.check_invariants().is_err(), "stamp/seq length mismatch must be caught");
+        buf.completed_at.push(stamp);
+        // a stamp on an unfinished sequence is equally inconsistent
+        buf.completed_at[0] = 0;
+        buf.next_completion = 1;
+        assert!(buf.check_invariants().is_err(), "stamped-but-unfinished must be caught");
     }
 
     #[test]

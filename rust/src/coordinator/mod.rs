@@ -7,7 +7,9 @@
 //! * [`engine_ops`] — typed wrappers over the AOT entry points with
 //!   device-resident state (actor, reward, and reference flavours);
 //! * [`stage`] — the generic pipeline-stage worker: tagged requests,
-//!   bounded queue with backpressure, per-stage timing, join-on-drop;
+//!   bounded queue with backpressure, per-stage timing, join-on-drop —
+//!   plus [`StagePool`], N replicas behind one facade with
+//!   sequence-affinity routing;
 //! * [`worker`] — the concrete downstream stages (reward scoring,
 //!   reference log-probs) plus the fan-out facade the scheduler drives;
 //! * [`scheduler`] — the training loop: OPPO, the ablations (no-intra,
@@ -28,4 +30,4 @@ pub use buffer::SeqBuffer;
 pub use chunkctl::ChunkController;
 pub use delta::{DeltaController, Policy};
 pub use scheduler::OppoScheduler;
-pub use stage::{StageHandler, StageStats, StageWorker};
+pub use stage::{StageHandler, StagePool, StageStats, StageWorker};

@@ -27,8 +27,11 @@
 //! chunk controller observes the step latency               (§3.1)
 //! ```
 //!
-//! Adding a stage (critic, sharded reward replicas) means adding a
-//! [`StreamSink`] variant; this loop is stage-count agnostic.
+//! Adding a stage (critic, a remote-node consumer) means adding a
+//! [`StreamSink`] variant; this loop is stage-count agnostic.  Scaling a
+//! stage means raising its replica count (`reward_replicas` /
+//! `ref_replicas`): each sink is a [`StagePool`] that splits chunks
+//! lane-wise with sequence-affinity routing, invisible to this loop.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -57,6 +60,9 @@ use crate::runtime::Engine;
 /// used by the async staleness-k baseline.
 struct PendingUpdate {
     batch: PpoBatch,
+    /// mean sequence score at assembly time, recorded when the deferred
+    /// update finally applies (end-of-run drain included)
+    mean_score: f64,
 }
 
 /// The OPPO coordinator over real compute.
@@ -129,11 +135,15 @@ impl OppoScheduler {
         let ops = Ops::new(engine.clone(), cfg.seed)?;
 
         // ---- downstream stage set (the N-stage fan-out targets) ----
+        // each streaming stage is a replica pool: chunks split lane-wise
+        // (`lane % replicas`) so a slow scorer stops being the streaming
+        // bottleneck without breaking per-sequence KV affinity
         let mut sinks: Vec<StreamSink> = Vec::new();
         let mut mono_reward = None;
         if cfg.mode.intra_enabled() && cfg.stream_reward {
-            sinks.push(StreamSink::Reward(RewardWorker::spawn(
+            sinks.push(StreamSink::Reward(RewardWorker::spawn_replicated(
                 engine.clone(),
+                cfg.reward_replicas,
                 cfg.stage_queue_depth,
             )?));
         } else {
@@ -141,8 +151,9 @@ impl OppoScheduler {
         }
         if cfg.mode.ref_stream_enabled() && cfg.stream_ref {
             if engine.manifest().ref_prefill_supported() {
-                sinks.push(StreamSink::Ref(RefSink::spawn(
+                sinks.push(StreamSink::Ref(RefSink::spawn_replicated(
                     engine.clone(),
+                    cfg.ref_replicas,
                     cfg.stage_queue_depth,
                 )?));
             } else {
@@ -221,11 +232,49 @@ impl OppoScheduler {
                 );
             }
         }
+        self.drain_stale_queue()?;
         if let Some(dir) = &self.cfg.out_dir {
             let path = format!("{dir}/{}_{}.json", self.cfg.mode.name(), self.cfg.seed);
             self.log.write_json(&path)?;
         }
         Ok(self.log)
+    }
+
+    /// End of run: the staleness-k baseline's loop leaves up to k assembled
+    /// batches queued; silently dropping them would under-train short runs
+    /// vs the paper's staleness-k baseline.  Apply each and record it in
+    /// the log as a generation-free step.  Note the tradeoff this makes
+    /// explicit: an AsyncStale log carries up to k more records than
+    /// `cfg.steps`, and each drained row re-reports its batch's
+    /// assembly-time mean score (the update really applied; the score is
+    /// the best available label for it).
+    fn drain_stale_queue(&mut self) -> Result<()> {
+        let mut step = self.cfg.steps as u64;
+        while let Some(pending) = self.stale_queue.pop_front() {
+            let t0 = Instant::now();
+            let train_stats = self.apply_update(&pending.batch)?;
+            log::info!(
+                "end-of-run drain: applied queued stale update as step {step} \
+                 ({} still queued)",
+                self.stale_queue.len()
+            );
+            self.log.push(StepRecord {
+                step,
+                wall_s: t0.elapsed().as_secs_f64(),
+                elapsed_s: self.started.elapsed().as_secs_f64(),
+                mean_score: pending.mean_score,
+                delta: self.delta_ctl.delta(),
+                chunk: self.chunk_ctl.chunk(),
+                finished: 0,
+                deferred: self.buffer.len(),
+                gen_tokens: 0,
+                train_stats,
+                util: 0.0,
+                stages: Vec::new(),
+            });
+            step += 1;
+        }
+        Ok(())
     }
 
     /// One PPO step (Alg. 1's loop body) in the configured mode.
@@ -268,7 +317,8 @@ impl OppoScheduler {
         let wall = t0.elapsed().as_secs_f64();
         self.chunk_ctl.observe_step(wall);
 
-        // per-stage busy/idle attribution for this step
+        // per-stage busy/idle attribution for this step (pool rows sum
+        // their replicas' counters)
         let mut stages: Vec<StageTiming> = Vec::with_capacity(self.sinks.len() + 1);
         for sink in &mut self.sinks {
             stages.push(sink.timing_delta());
@@ -276,6 +326,12 @@ impl OppoScheduler {
         if let Some(w) = &mut self.mono_reward {
             stages.push(w.timing_delta());
         }
+        // stage-worker utilization: share of worker wall time spent inside
+        // stage compute, aggregated across stages — busy/(busy+idle) is in
+        // (0, 1] whenever any stage did work this step
+        let (busy, idle) =
+            stages.iter().fold((0.0, 0.0), |(b, i), st| (b + st.busy_s, i + st.idle_s));
+        let util = if busy > 0.0 { (busy / (busy + idle)).min(1.0) } else { 0.0 };
 
         let rec = StepRecord {
             step,
@@ -288,7 +344,7 @@ impl OppoScheduler {
             deferred: deferred_left,
             gen_tokens,
             train_stats,
-            util: 0.0,
+            util,
             stages,
         };
         self.log.push(rec.clone());
@@ -584,7 +640,9 @@ impl OppoScheduler {
     /// older actor — the convergence risk Figure 2c demonstrates).
     fn async_update(&mut self, seqs: &[Sequence], scores: &[f32]) -> Result<[f32; 6]> {
         let batch = self.assemble(seqs, scores)?;
-        self.stale_queue.push_back(PendingUpdate { batch });
+        let mean_score =
+            scores.iter().sum::<f32>() as f64 / scores.len().max(1) as f64;
+        self.stale_queue.push_back(PendingUpdate { batch, mean_score });
         if self.stale_queue.len() > self.cfg.staleness {
             let pending = self.stale_queue.pop_front().unwrap();
             self.apply_update(&pending.batch)
@@ -619,13 +677,18 @@ impl OppoScheduler {
         for group in prompts.chunks(m.lanes) {
             let mut tokens = vec![0i32; m.lanes * m.s_max];
             let mut prompt_len = vec![1i32; m.lanes];
+            // lanes beyond the eval group are dead from the start (reset 0):
+            // no garbage single-token prefill, no decode work on lanes that
+            // can never finish
+            let mut reset = vec![0i32; m.lanes];
             for (lane, p) in group.iter().enumerate() {
                 tokens[lane * m.s_max..lane * m.s_max + p.tokens.len()]
                     .copy_from_slice(&p.tokens);
                 prompt_len[lane] = p.tokens.len() as i32;
+                reset[lane] = 1;
             }
             let mut state = self.ops.fresh_actor_state(&tokens)?;
-            self.ops.actor_prefill(&mut state, &tokens, &prompt_len, &vec![1; m.lanes])?;
+            self.ops.actor_prefill(&mut state, &tokens, &prompt_len, &reset)?;
 
             let chunk = self.chunk_ctl.chunk();
             let mut responses: Vec<Vec<i32>> = vec![Vec::new(); group.len()];

@@ -18,6 +18,13 @@
 //! a [`StageWorker`] sends a shutdown, disconnects the queue, and joins the
 //! thread, so a scheduler dropped mid-test (e.g. on an error path) never
 //! leaks the worker or deadlocks on channel teardown.
+//!
+//! [`StagePool`] replicates a stage: N workers behind one facade, with
+//! **sequence-affinity routing** (`lane % replicas`) so every chunk of one
+//! sequence lands on the replica that holds its KV/seam state.  Once a
+//! single reward or ref worker can no longer keep pace with the actor's
+//! streamed chunks, replicas are the scaling lever that keeps §3.1's
+//! overlap actor-bound instead of downstream-bound.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
@@ -126,6 +133,29 @@ impl<Req: Send + 'static, Resp: Send + 'static> StageWorker<Req, Resp> {
         Ok(tag)
     }
 
+    /// Non-blocking submit: `Ok(Ok(tag))` when enqueued, `Ok(Err(req))` —
+    /// handing the request back — when the queue is full.  Lets a producer
+    /// feed other workers before blocking on a busy one.
+    pub fn try_submit(&mut self, req: Req) -> Result<std::result::Result<u64, Req>> {
+        let tag = self.next_tag;
+        let tx = self.tx.as_ref().context("stage worker already shut down")?;
+        match tx.try_send(Msg::Job(tag, req)) {
+            Ok(()) => {
+                self.next_tag += 1;
+                self.in_flight += 1;
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Ok(tag))
+            }
+            Err(std::sync::mpsc::TrySendError::Full(Msg::Job(_, req))) => Ok(Err(req)),
+            Err(std::sync::mpsc::TrySendError::Full(Msg::Shutdown)) => {
+                unreachable!("try_submit only sends jobs")
+            }
+            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                bail!("stage {} worker hung up", self.name)
+            }
+        }
+    }
+
     /// Block for the next response (submission order).
     pub fn recv(&mut self) -> Result<(u64, Resp)> {
         ensure!(self.in_flight > 0, "stage {}: recv with nothing in flight", self.name);
@@ -171,6 +201,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> StageWorker<Req, Resp> {
         let items = self.stats.completed.load(Ordering::Relaxed);
         let out = StageTiming {
             name: self.name.to_string(),
+            replicas: 1,
             busy_s: (busy - self.last_busy) as f64 * 1e-9,
             idle_s: (idle - self.last_idle) as f64 * 1e-9,
             items: items - self.last_items,
@@ -205,6 +236,173 @@ impl<Req, Resp> StageWorker<Req, Resp> {
 impl<Req, Resp> Drop for StageWorker<Req, Resp> {
     fn drop(&mut self) {
         self.shutdown_impl();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replicated stage pool
+// ---------------------------------------------------------------------------
+
+/// N [`StageWorker`] replicas behind one submit/recv facade.
+///
+/// * **Sequence-affinity routing** — [`replica_for_lane`](Self::replica_for_lane)
+///   is `lane % replicas` and static for the whole run, so every chunk of a
+///   sequence reaches the replica that holds its KV/seam state; no two
+///   chunks of one sequence can ever land on different replicas.
+/// * **Per-replica bounded queues** — each replica keeps its own
+///   `queue_depth`-bounded request queue; [`submit_to`](Self::submit_to)
+///   blocks when that replica's queue is full.  A fan-out producer should
+///   use [`try_submit_to`](Self::try_submit_to) first so a busy replica
+///   delays only its own feeding, then block on the stragglers — the
+///   producer still cannot outrun the slowest replica by more than its
+///   queue depth (that *is* the backpressure), but fast replicas receive
+///   their work before the producer parks.
+/// * **Per-replica stats** — every replica keeps its own [`StageStats`];
+///   [`timing_delta`](Self::timing_delta) sums them into one pool-level
+///   [`StageTiming`] row (`replicas` records the pool size).
+pub struct StagePool<Req, Resp> {
+    workers: Vec<StageWorker<Req, Resp>>,
+}
+
+impl<Req: Send + 'static, Resp: Send + 'static> StagePool<Req, Resp> {
+    /// Spawn `replicas` workers.  `factory(r)` builds replica `r`'s init
+    /// closure; each init runs on its own worker thread and constructs an
+    /// **independent** handler (own parameters, own device state) — replicas
+    /// share nothing except whatever handle the factory clones into them.
+    pub fn spawn<H, F, M>(
+        name: &'static str,
+        replicas: usize,
+        queue_depth: usize,
+        mut factory: M,
+    ) -> Result<Self>
+    where
+        H: StageHandler<Req = Req, Resp = Resp> + 'static,
+        F: FnOnce() -> Result<H> + Send + 'static,
+        M: FnMut(usize) -> F,
+    {
+        ensure!(replicas >= 1, "stage {name}: a pool needs at least one replica");
+        let workers = (0..replicas)
+            .map(|r| StageWorker::spawn(name, queue_depth, factory(r)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { workers })
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.workers[0].name()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The routing rule: which replica owns `lane`'s KV/seam state.
+    pub fn replica_for_lane(&self, lane: usize) -> usize {
+        lane % self.workers.len()
+    }
+
+    /// Enqueue on one replica; blocks only when that replica's bounded
+    /// queue is full (per-replica backpressure).
+    pub fn submit_to(&mut self, replica: usize, req: Req) -> Result<u64> {
+        ensure!(
+            replica < self.workers.len(),
+            "replica {replica} out of range (pool has {})",
+            self.workers.len()
+        );
+        self.workers[replica].submit(req)
+    }
+
+    /// Non-blocking enqueue: `Ok(Err(req))` hands the request back when the
+    /// replica's queue is full, so the caller can feed the other replicas
+    /// first and come back to block on this one.
+    pub fn try_submit_to(
+        &mut self,
+        replica: usize,
+        req: Req,
+    ) -> Result<std::result::Result<u64, Req>> {
+        ensure!(
+            replica < self.workers.len(),
+            "replica {replica} out of range (pool has {})",
+            self.workers.len()
+        );
+        self.workers[replica].try_submit(req)
+    }
+
+    /// Two-phase fan-out of `(replica, request)` parts: try-submit each,
+    /// then block on the ones whose bounded queue was full.  A busy replica
+    /// delays only its own feeding; the caller still parks until every part
+    /// is enqueued — that is the pool's backpressure onto the producer.
+    /// Per-replica submission order always matches `parts` order: once a
+    /// replica has a blocked part, its later parts queue behind it even if
+    /// space frees up mid-loop (order-matched bookkeeping like the ref
+    /// sink's meta FIFO depends on this).
+    pub fn fan_out(&mut self, parts: Vec<(usize, Req)>) -> Result<()> {
+        let mut blocked: Vec<(usize, Req)> = Vec::new();
+        for (r, req) in parts {
+            if blocked.iter().any(|(br, _)| *br == r) {
+                blocked.push((r, req));
+                continue;
+            }
+            if let Err(req) = self.try_submit_to(r, req)? {
+                blocked.push((r, req));
+            }
+        }
+        for (r, req) in blocked {
+            self.submit_to(r, req)?;
+        }
+        Ok(())
+    }
+
+    /// Requests in flight across all replicas.
+    pub fn in_flight(&self) -> usize {
+        self.workers.iter().map(|w| w.in_flight()).sum()
+    }
+
+    pub fn in_flight_on(&self, replica: usize) -> usize {
+        self.workers[replica].in_flight()
+    }
+
+    /// Non-blocking: the first ready response from any replica, tagged with
+    /// the replica index.  Responses stay in submission order *per replica*.
+    pub fn try_recv_any(&mut self) -> Result<Option<(usize, u64, Resp)>> {
+        for (r, w) in self.workers.iter_mut().enumerate() {
+            if let Some((tag, resp)) = w.try_recv()? {
+                return Ok(Some((r, tag, resp)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Blocking receive from one replica (the flush join drains each
+    /// replica in turn).
+    pub fn recv_from(&mut self, replica: usize) -> Result<(u64, Resp)> {
+        ensure!(
+            replica < self.workers.len(),
+            "replica {replica} out of range (pool has {})",
+            self.workers.len()
+        );
+        self.workers[replica].recv()
+    }
+
+    /// One replica's cumulative stats handle.
+    pub fn replica_stats(&self, replica: usize) -> &Arc<StageStats> {
+        self.workers[replica].stats()
+    }
+
+    /// Pool-level timing since the previous call: per-replica busy/idle/item
+    /// deltas summed into a single row.
+    pub fn timing_delta(&mut self) -> StageTiming {
+        let mut out = StageTiming {
+            name: self.name().to_string(),
+            replicas: self.workers.len(),
+            ..Default::default()
+        };
+        for w in &mut self.workers {
+            let t = w.timing_delta();
+            out.busy_s += t.busy_s;
+            out.idle_s += t.idle_s;
+            out.items += t.items;
+        }
+        out
     }
 }
 
@@ -396,6 +594,119 @@ mod tests {
         w.recv().unwrap();
         let t2 = w.timing_delta();
         assert_eq!(t2.items, 1, "delta must cover only the new interval");
+    }
+
+    #[test]
+    fn try_submit_hands_back_the_request_when_the_queue_is_full() {
+        // handler blocks on a gate, so the bounded queue fills deterministically
+        struct Gated(std::sync::mpsc::Receiver<()>);
+        impl StageHandler for Gated {
+            type Req = i32;
+            type Resp = i32;
+            fn handle(&mut self, x: i32) -> Result<i32> {
+                let _ = self.0.recv();
+                Ok(x)
+            }
+        }
+        let (gate_tx, gate_rx) = channel();
+        let mut w: StageWorker<i32, i32> =
+            StageWorker::spawn("gated", 1, move || Ok(Gated(gate_rx))).unwrap();
+        let mut accepted: i32 = 0;
+        loop {
+            match w.try_submit(accepted).unwrap() {
+                Ok(_) => accepted += 1,
+                Err(req) => {
+                    assert_eq!(req, accepted, "the rejected request comes back intact");
+                    break;
+                }
+            }
+            assert!(accepted <= 3, "depth-1 queue must report Full quickly");
+        }
+        assert!(accepted >= 1, "an empty queue must accept");
+        assert_eq!(w.in_flight(), accepted as usize);
+        for _ in 0..accepted {
+            gate_tx.send(()).unwrap();
+        }
+        for i in 0..accepted {
+            assert_eq!(w.recv().unwrap().1, i);
+        }
+        assert_eq!(w.in_flight(), 0);
+    }
+
+    #[test]
+    fn pool_requires_at_least_one_replica() {
+        let r: Result<StagePool<i32, i32>> =
+            StagePool::spawn("empty", 0, 2, |_| || Ok(Echo { fail_on: None, dropped: None }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn pool_routes_lanes_stably_and_aggregates_timing() {
+        let mut pool: StagePool<i32, i32> =
+            StagePool::spawn("pool", 3, 2, |_| || Ok(Echo { fail_on: None, dropped: None }))
+                .unwrap();
+        assert_eq!(pool.replicas(), 3);
+        // affinity: the mapping is a pure function of the lane
+        for lane in 0..24 {
+            assert_eq!(pool.replica_for_lane(lane), lane % 3);
+            assert_eq!(pool.replica_for_lane(lane), pool.replica_for_lane(lane));
+        }
+        // fan a batch out by lane and drain each replica in turn
+        for lane in 0..9i32 {
+            let r = pool.replica_for_lane(lane as usize);
+            pool.submit_to(r, lane).unwrap();
+        }
+        assert_eq!(pool.in_flight(), 9);
+        let mut got = Vec::new();
+        for r in 0..pool.replicas() {
+            assert_eq!(pool.in_flight_on(r), 3);
+            while pool.in_flight_on(r) > 0 {
+                let (_, resp) = pool.recv_from(r).unwrap();
+                got.push(resp);
+            }
+        }
+        got.sort();
+        assert_eq!(got, (0..9).map(|x| x * 2).collect::<Vec<_>>());
+        // per-replica stats roll up into one pool-level row
+        let t = pool.timing_delta();
+        assert_eq!(t.name, "pool");
+        assert_eq!(t.replicas, 3);
+        assert_eq!(t.items, 9);
+        for r in 0..pool.replicas() {
+            assert_eq!(pool.replica_stats(r).completed.load(Ordering::Relaxed), 3);
+        }
+    }
+
+    #[test]
+    fn pool_try_recv_any_tags_the_replica() {
+        let mut pool: StagePool<i32, i32> =
+            StagePool::spawn("tagged", 2, 2, |_| || Ok(Echo { fail_on: None, dropped: None }))
+                .unwrap();
+        pool.submit_to(0, 10).unwrap();
+        pool.submit_to(1, 20).unwrap();
+        let mut seen = Vec::new();
+        while seen.len() < 2 {
+            match pool.try_recv_any().unwrap() {
+                Some((r, _, resp)) => seen.push((r, resp)),
+                None => std::thread::yield_now(),
+            }
+        }
+        seen.sort();
+        assert_eq!(seen, vec![(0, 20), (1, 40)]);
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn pool_replicas_own_independent_handlers() {
+        // each factory call builds a distinct handler: poison replica 0 only
+        let mut pool: StagePool<i32, i32> = StagePool::spawn("mixed", 2, 2, |r| {
+            move || Ok(Echo { fail_on: (r == 0).then_some(7), dropped: None })
+        })
+        .unwrap();
+        pool.submit_to(0, 7).unwrap();
+        assert!(pool.recv_from(0).is_err(), "replica 0 is poisoned on 7");
+        pool.submit_to(1, 7).unwrap();
+        assert_eq!(pool.recv_from(1).unwrap().1, 14, "replica 1 must not share state");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The downstream stage workers — reward scoring and reference log-probs —
-//! built on the generic [`StageWorker`](crate::coordinator::stage)
-//! runtime, plus [`StreamSink`], the scheduler-side facade that fans one
-//! streamed `[G, C]` chunk out to every active stage.
+//! built on the generic [`StagePool`](crate::coordinator::stage) runtime,
+//! plus [`StreamSink`], the scheduler-side facade that fans one streamed
+//! `[G, C]` chunk out to every active stage.
 //!
 //! This is the concurrency that realizes §3.1's intra-step overlap: while
 //! the actor thread executes `actor_generate_chunk` for chunk *k*, the
@@ -9,8 +9,20 @@
 //! `ref_prefill_chunk` for chunk *k−1*.  PJRT executes all of them
 //! concurrently (thread-safe client), so downstream prefill latency hides
 //! behind actor decoding exactly as in the paper's Figure 1b — now for
-//! *every* downstream model, not just reward.  Each worker owns its own
-//! parameters and KV state, constructed on its own thread.
+//! *every* downstream model, not just reward.
+//!
+//! Each stage is a **pool of replicas**: the spawn path hands the pool a
+//! handler *factory*, so every replica constructs its own ops + device
+//! state on its own thread (independent parameter buffers, independent KV
+//! caches).  Chunks are split lane-wise across the pool with
+//! sequence-affinity routing (`lane % replicas`): the replica that prefixed
+//! a sequence's earlier chunks holds its KV/seam state, so all later chunks
+//! of that sequence must — and do — land on the same replica.  Replicas pay
+//! off through *concurrency* — independent worker threads whose kernels
+//! PJRT can execute on separate streams/devices — not by shrinking each
+//! replica's per-chunk FLOPs (the fixed-shape entries compute all `[G, C]`
+//! positions; see `StreamChunk::for_replica`).  With one replica the split
+//! is the identity and the behaviour is exactly the old single-worker path.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -19,7 +31,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::buffer::SeqBuffer;
 use crate::coordinator::engine_ops::{RefOps, RefStreamState, RewardOps, RewardState};
-use crate::coordinator::stage::{StageHandler, StageWorker};
+use crate::coordinator::stage::{StageHandler, StagePool};
 use crate::metrics::StageTiming;
 use crate::model::sequence::Sequence;
 use crate::runtime::Engine;
@@ -46,6 +58,40 @@ pub struct StreamChunk {
     pub n_valid: Vec<i32>,
     /// lanes whose final token lands in this chunk
     pub picks: Vec<Pick>,
+}
+
+impl StreamChunk {
+    /// The sub-chunk replica `r` of `n` must process.  Lanes the replica
+    /// does not own (`lane % n != r`) are masked dead (`n_valid = 0`, picks
+    /// dropped): the stage kernels read results and advance seam state only
+    /// for `n_valid > 0` lanes, so unowned lanes cannot corrupt the
+    /// replica's per-lane KV/seam data.  Note the current AOT entries still
+    /// *compute* the full `[G, C]` grid regardless of the mask — replicas
+    /// win by executing concurrently on independent resources (threads /
+    /// PJRT streams / devices), not by doing fewer FLOPs each; lane-sliced
+    /// `[G/n, C]` entries that skip the dead lanes are a ROADMAP item.
+    /// Returns `None` when no owned lane carries valid tokens.  With
+    /// `n == 1` this is the identity, which keeps a one-replica pool
+    /// bit-compatible with the old single-worker path.
+    pub fn for_replica(&self, r: usize, n: usize) -> Option<StreamChunk> {
+        if n <= 1 {
+            return Some(self.clone());
+        }
+        let mut part = self.clone();
+        let mut any = false;
+        for (lane, nv) in part.n_valid.iter_mut().enumerate() {
+            if lane % n == r {
+                any = any || *nv > 0;
+            } else {
+                *nv = 0;
+            }
+        }
+        if !any {
+            return None;
+        }
+        part.picks.retain(|p| p.lane % n == r);
+        Some(part)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -115,41 +161,88 @@ impl StageHandler for RewardHandler {
     }
 }
 
-/// Handle to the reward stage worker.
+/// Handle to the reward stage — a pool of one or more replicas, each
+/// owning an independent `RewardOps` (own parameter buffers, own KV state,
+/// built on its own thread by the handler factory).
 pub struct RewardWorker {
-    inner: StageWorker<RewardReq, RewardResp>,
+    pool: StagePool<RewardReq, RewardResp>,
 }
 
 impl RewardWorker {
+    /// Single-replica spawn (the monolithic scorer and simple callers).
     pub fn spawn(engine: Arc<Engine>, queue_depth: usize) -> Result<Self> {
-        let inner = StageWorker::spawn("reward", queue_depth, move || {
-            let ops = RewardOps::new(engine)?;
-            let state = ops.fresh_state()?;
-            Ok(RewardHandler { ops, state })
+        Self::spawn_replicated(engine, 1, queue_depth)
+    }
+
+    /// Spawn `replicas` reward workers.  Streamed chunks are routed
+    /// `lane % replicas`, so each replica prefills a disjoint lane subset
+    /// against its own KV cache.
+    pub fn spawn_replicated(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        let pool = StagePool::spawn("reward", replicas, queue_depth, |_replica| {
+            let engine = engine.clone();
+            move || {
+                let ops = RewardOps::new(engine)?;
+                let state = ops.fresh_state()?;
+                Ok(RewardHandler { ops, state })
+            }
         })?;
-        Ok(Self { inner })
+        Ok(Self { pool })
     }
 
-    /// Enqueue a request (bounded queue; blocks only under backpressure).
+    pub fn replicas(&self) -> usize {
+        self.pool.replicas()
+    }
+
+    /// The replica owning `lane`'s KV state.
+    pub fn replica_for_lane(&self, lane: usize) -> usize {
+        self.pool.replica_for_lane(lane)
+    }
+
+    /// Enqueue on replica 0 (single-replica / monolithic path).
     pub fn submit(&mut self, req: RewardReq) -> Result<()> {
-        self.inner.submit(req).map(|_| ())
+        self.pool.submit_to(0, req).map(|_| ())
     }
 
-    /// Block for the next response.
+    /// Enqueue on one replica (bounded queue; blocks only under that
+    /// replica's backpressure).
+    pub fn submit_to(&mut self, replica: usize, req: RewardReq) -> Result<()> {
+        self.pool.submit_to(replica, req).map(|_| ())
+    }
+
+    /// Two-phase fan-out of per-replica parts (see [`StagePool::fan_out`]).
+    pub fn fan_out(&mut self, parts: Vec<(usize, RewardReq)>) -> Result<()> {
+        self.pool.fan_out(parts)
+    }
+
+    /// Block for the next response from replica 0.
     pub fn recv(&mut self) -> Result<RewardResp> {
-        self.inner.recv().map(|(_, r)| r)
+        self.pool.recv_from(0).map(|(_, r)| r)
     }
 
-    pub fn try_recv(&mut self) -> Result<Option<RewardResp>> {
-        Ok(self.inner.try_recv()?.map(|(_, r)| r))
+    /// Block for the next response from one replica.
+    pub fn recv_from(&mut self, replica: usize) -> Result<RewardResp> {
+        self.pool.recv_from(replica).map(|(_, r)| r)
+    }
+
+    /// Non-blocking: first ready response from any replica.
+    pub fn try_recv_any(&mut self) -> Result<Option<(usize, RewardResp)>> {
+        Ok(self.pool.try_recv_any()?.map(|(r, _, resp)| (r, resp)))
     }
 
     pub fn in_flight(&self) -> usize {
-        self.inner.in_flight()
+        self.pool.in_flight()
+    }
+
+    pub fn in_flight_on(&self, replica: usize) -> usize {
+        self.pool.in_flight_on(replica)
     }
 
     pub fn timing_delta(&mut self) -> StageTiming {
-        self.inner.timing_delta()
+        self.pool.timing_delta()
     }
 }
 
@@ -194,39 +287,81 @@ impl StageHandler for RefHandler {
     }
 }
 
-/// Handle to the reference stage worker.
+/// Handle to the reference stage — a pool of one or more replicas, each
+/// owning an independent `RefOps` plus its own KV + boundary seam state.
 pub struct RefWorker {
-    inner: StageWorker<RefReq, RefResp>,
+    pool: StagePool<RefReq, RefResp>,
 }
 
 impl RefWorker {
     pub fn spawn(engine: Arc<Engine>, queue_depth: usize) -> Result<Self> {
-        let inner = StageWorker::spawn("ref", queue_depth, move || {
-            let ops = RefOps::new(engine)?;
-            let state = ops.fresh_state()?;
-            Ok(RefHandler { ops, state })
+        Self::spawn_replicated(engine, 1, queue_depth)
+    }
+
+    /// Spawn `replicas` reference workers with sequence-affinity routing
+    /// (`lane % replicas` — the boundary log-softmax seam is per-lane state
+    /// that must stay on one replica).
+    pub fn spawn_replicated(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        let pool = StagePool::spawn("ref", replicas, queue_depth, |_replica| {
+            let engine = engine.clone();
+            move || {
+                let ops = RefOps::new(engine)?;
+                let state = ops.fresh_state()?;
+                Ok(RefHandler { ops, state })
+            }
         })?;
-        Ok(Self { inner })
+        Ok(Self { pool })
     }
 
+    pub fn replicas(&self) -> usize {
+        self.pool.replicas()
+    }
+
+    pub fn replica_for_lane(&self, lane: usize) -> usize {
+        self.pool.replica_for_lane(lane)
+    }
+
+    /// Enqueue on replica 0 (single-replica callers).
     pub fn submit(&mut self, req: RefReq) -> Result<()> {
-        self.inner.submit(req).map(|_| ())
+        self.pool.submit_to(0, req).map(|_| ())
     }
 
+    pub fn submit_to(&mut self, replica: usize, req: RefReq) -> Result<()> {
+        self.pool.submit_to(replica, req).map(|_| ())
+    }
+
+    /// Two-phase fan-out of per-replica parts (see [`StagePool::fan_out`]).
+    pub fn fan_out(&mut self, parts: Vec<(usize, RefReq)>) -> Result<()> {
+        self.pool.fan_out(parts)
+    }
+
+    /// Block for the next response from replica 0.
     pub fn recv(&mut self) -> Result<RefResp> {
-        self.inner.recv().map(|(_, r)| r)
+        self.pool.recv_from(0).map(|(_, r)| r)
     }
 
-    pub fn try_recv(&mut self) -> Result<Option<RefResp>> {
-        Ok(self.inner.try_recv()?.map(|(_, r)| r))
+    pub fn recv_from(&mut self, replica: usize) -> Result<RefResp> {
+        self.pool.recv_from(replica).map(|(_, r)| r)
+    }
+
+    pub fn try_recv_any(&mut self) -> Result<Option<(usize, RefResp)>> {
+        Ok(self.pool.try_recv_any()?.map(|(r, _, resp)| (r, resp)))
     }
 
     pub fn in_flight(&self) -> usize {
-        self.inner.in_flight()
+        self.pool.in_flight()
+    }
+
+    pub fn in_flight_on(&self, replica: usize) -> usize {
+        self.pool.in_flight_on(replica)
     }
 
     pub fn timing_delta(&mut self) -> StageTiming {
-        self.inner.timing_delta()
+        self.pool.timing_delta()
     }
 }
 
@@ -236,20 +371,31 @@ impl RefWorker {
 
 /// Ref sink bookkeeping: responses are raw `[G, C]` log-prob grids, so the
 /// per-request `(start, n_valid, c)` metadata rides a FIFO alongside the
-/// in-flight requests (the worker answers strictly in submission order).
+/// in-flight requests — one FIFO **per replica**, because each replica
+/// answers strictly in its own submission order while responses from
+/// different replicas may interleave (they touch disjoint lane sets).
 pub struct RefSink {
     worker: RefWorker,
-    meta: VecDeque<(Vec<i32>, Vec<i32>, usize)>,
+    meta: Vec<VecDeque<(Vec<i32>, Vec<i32>, usize)>>,
 }
 
 impl RefSink {
     pub fn spawn(engine: Arc<Engine>, queue_depth: usize) -> Result<Self> {
-        Ok(Self { worker: RefWorker::spawn(engine, queue_depth)?, meta: VecDeque::new() })
+        Self::spawn_replicated(engine, 1, queue_depth)
     }
 
-    fn apply(&mut self, buf: &mut SeqBuffer, logps: Vec<f32>) -> Result<()> {
-        let (start, n_valid, c) = self
-            .meta
+    pub fn spawn_replicated(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        let worker = RefWorker::spawn_replicated(engine, replicas, queue_depth)?;
+        let meta = (0..worker.replicas()).map(|_| VecDeque::new()).collect();
+        Ok(Self { worker, meta })
+    }
+
+    fn apply(&mut self, replica: usize, buf: &mut SeqBuffer, logps: Vec<f32>) -> Result<()> {
+        let (start, n_valid, c) = self.meta[replica]
             .pop_front()
             .context("ref stage response without a matching request")?;
         for lane in 0..start.len() {
@@ -274,8 +420,10 @@ impl RefSink {
 
 /// Scheduler-side handle to one active downstream stage.  The step loop
 /// fans every [`StreamChunk`] out to all sinks and joins them at flush;
-/// future stages (critic, sharded reward replicas) add a variant here and
-/// a worker above, and the scheduler loop stays untouched.
+/// each sink splits the chunk lane-wise across its replica pool
+/// (sequence-affinity routing).  Future stages (critic, remote-node
+/// consumers) add a variant here and a worker above, and the scheduler
+/// loop stays untouched.
 pub enum StreamSink {
     Reward(RewardWorker),
     Ref(RefSink),
@@ -289,59 +437,102 @@ impl StreamSink {
         }
     }
 
-    /// Submit one streamed chunk to this stage (typed per-stage request).
+    /// Worker replicas behind this stage.
+    pub fn replicas(&self) -> usize {
+        match self {
+            StreamSink::Reward(w) => w.replicas(),
+            StreamSink::Ref(s) => s.worker.replicas(),
+        }
+    }
+
+    /// Submit one streamed chunk to this stage: one sub-request per replica
+    /// that owns any valid lane in the chunk (typed per-stage request),
+    /// delivered through the pool's two-phase fan-out — a busy replica
+    /// delays only its own feeding (see [`StagePool::fan_out`]).
     pub fn submit_chunk(&mut self, ck: &StreamChunk) -> Result<()> {
         match self {
-            StreamSink::Reward(w) => w.submit(RewardReq::Stream {
-                entry: format!("reward_prefill_chunk_c{}", ck.c),
-                chunk: ck.tokens.clone(),
-                start: ck.start.clone(),
-                n_valid: ck.n_valid.clone(),
-                picks: ck.picks.clone(),
-            }),
+            StreamSink::Reward(w) => {
+                let n = w.replicas();
+                let mut parts = Vec::new();
+                for r in 0..n {
+                    let Some(part) = ck.for_replica(r, n) else { continue };
+                    parts.push((
+                        r,
+                        RewardReq::Stream {
+                            entry: format!("reward_prefill_chunk_c{}", part.c),
+                            chunk: part.tokens,
+                            start: part.start,
+                            n_valid: part.n_valid,
+                            picks: part.picks,
+                        },
+                    ));
+                }
+                w.fan_out(parts)
+            }
             StreamSink::Ref(s) => {
-                s.meta.push_back((ck.start.clone(), ck.n_valid.clone(), ck.c));
-                s.worker.submit(RefReq::Stream {
-                    entry: format!("ref_prefill_chunk_c{}", ck.c),
-                    chunk: ck.tokens.clone(),
-                    start: ck.start.clone(),
-                    n_valid: ck.n_valid.clone(),
-                })
+                let n = s.worker.replicas();
+                let mut parts = Vec::new();
+                for r in 0..n {
+                    let Some(part) = ck.for_replica(r, n) else { continue };
+                    // meta rides in per-replica submission order; each
+                    // replica gets at most one part per chunk, so pushing at
+                    // build time keeps the FIFO aligned whichever fan-out
+                    // phase actually enqueues the part
+                    s.meta[r].push_back((part.start.clone(), part.n_valid.clone(), part.c));
+                    parts.push((
+                        r,
+                        RefReq::Stream {
+                            entry: format!("ref_prefill_chunk_c{}", part.c),
+                            chunk: part.tokens,
+                            start: part.start,
+                            n_valid: part.n_valid,
+                        },
+                    ));
+                }
+                s.worker.fan_out(parts)
             }
         }
     }
 
     /// Apply any responses that are already available (non-blocking).
     pub fn collect_ready(&mut self, buf: &mut SeqBuffer) -> Result<()> {
-        loop {
-            match self {
-                StreamSink::Reward(w) => match w.try_recv()? {
-                    Some(resp) => apply_reward(buf, resp)?,
-                    None => return Ok(()),
-                },
-                StreamSink::Ref(s) => match s.worker.try_recv()? {
-                    Some(RefResp::StreamLogps(lp)) => s.apply(buf, lp)?,
-                    Some(other) => bail!("unexpected ref response {other:?}"),
-                    None => return Ok(()),
-                },
-            }
-        }
-    }
-
-    /// Block until every in-flight response is applied (the flush join).
-    pub fn join(&mut self, buf: &mut SeqBuffer) -> Result<()> {
         match self {
             StreamSink::Reward(w) => {
-                while w.in_flight() > 0 {
-                    let resp = w.recv()?;
+                while let Some((_replica, resp)) = w.try_recv_any()? {
                     apply_reward(buf, resp)?;
                 }
             }
             StreamSink::Ref(s) => {
-                while s.worker.in_flight() > 0 {
-                    match s.worker.recv()? {
-                        RefResp::StreamLogps(lp) => s.apply(buf, lp)?,
+                while let Some((replica, resp)) = s.worker.try_recv_any()? {
+                    match resp {
+                        RefResp::StreamLogps(lp) => s.apply(replica, buf, lp)?,
                         other => bail!("unexpected ref response {other:?}"),
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until every in-flight response is applied (the flush join),
+    /// draining each replica in turn — responses are ordered per replica.
+    pub fn join(&mut self, buf: &mut SeqBuffer) -> Result<()> {
+        match self {
+            StreamSink::Reward(w) => {
+                for r in 0..w.replicas() {
+                    while w.in_flight_on(r) > 0 {
+                        let resp = w.recv_from(r)?;
+                        apply_reward(buf, resp)?;
+                    }
+                }
+            }
+            StreamSink::Ref(s) => {
+                for r in 0..s.worker.replicas() {
+                    while s.worker.in_flight_on(r) > 0 {
+                        match s.worker.recv_from(r)? {
+                            RefResp::StreamLogps(lp) => s.apply(r, buf, lp)?,
+                            other => bail!("unexpected ref response {other:?}"),
+                        }
                     }
                 }
             }
@@ -378,5 +569,53 @@ fn apply_reward(buf: &mut SeqBuffer, resp: RewardResp) -> Result<()> {
             Ok(())
         }
         other => bail!("unexpected reward response {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk() -> StreamChunk {
+        StreamChunk {
+            c: 4,
+            tokens: (0..6 * 4).map(|x| x as i32).collect(),
+            start: vec![0; 6],
+            n_valid: vec![4, 0, 2, 4, 1, 3],
+            picks: vec![Pick { lane: 0, idx_in_chunk: 3 }, Pick { lane: 4, idx_in_chunk: 0 }],
+        }
+    }
+
+    #[test]
+    fn for_replica_is_the_identity_with_one_replica() {
+        let ck = chunk();
+        let part = ck.for_replica(0, 1).unwrap();
+        assert_eq!(part.n_valid, ck.n_valid);
+        assert_eq!(part.tokens, ck.tokens);
+        assert_eq!(part.picks.len(), ck.picks.len());
+    }
+
+    #[test]
+    fn for_replica_masks_unowned_lanes_and_filters_picks() {
+        let ck = chunk();
+        let even = ck.for_replica(0, 2).unwrap();
+        assert_eq!(even.n_valid, vec![4, 0, 2, 0, 1, 0]);
+        assert_eq!(even.picks.len(), 2, "picks on lanes 0 and 4 are owned");
+        assert!(even.picks.iter().all(|p| p.lane % 2 == 0));
+        let odd = ck.for_replica(1, 2).unwrap();
+        assert_eq!(odd.n_valid, vec![0, 0, 0, 4, 0, 3]);
+        assert!(odd.picks.is_empty());
+        // the split is a partition: every valid token owned exactly once
+        for lane in 0..6 {
+            assert_eq!(even.n_valid[lane] + odd.n_valid[lane], ck.n_valid[lane]);
+        }
+    }
+
+    #[test]
+    fn for_replica_elides_replicas_with_nothing_to_do() {
+        let mut ck = chunk();
+        ck.n_valid = vec![4, 0, 2, 0, 1, 0]; // odd lanes all idle
+        assert!(ck.for_replica(1, 2).is_none(), "no owned valid lane => no request");
+        assert!(ck.for_replica(0, 2).is_some());
     }
 }

@@ -16,6 +16,10 @@ use crate::util::stats;
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StageTiming {
     pub name: String,
+    /// worker replicas behind this stage (pool size; 1 for a single
+    /// worker).  `busy_s`/`idle_s`/`items` are summed across replicas, so
+    /// `busy_s` may legitimately exceed the step's wall time when > 1.
+    pub replicas: usize,
     pub busy_s: f64,
     pub idle_s: f64,
     /// requests (streamed chunks / scoring calls) the stage processed
@@ -43,7 +47,10 @@ pub struct StepRecord {
     pub gen_tokens: usize,
     /// ppo_update stats: [loss, pg, v_loss, entropy, approx_kl, clip_frac]
     pub train_stats: [f32; 6],
-    /// pool-wide GPU utilization for the step (simulator runs; 0 = n/a)
+    /// utilization for the step, in (0, 1] when stages ran.  Real runs
+    /// report stage-worker utilization — busy/(busy+idle) aggregated over
+    /// `stages`; simulator runs report the cluster-level activity model.
+    /// 0 = no stage workers (e.g. DPO).
     pub util: f64,
     /// per-stage busy/idle attribution for the step: one row per streaming
     /// sink, plus the monolithic reward scorer when that path is active
@@ -159,6 +166,7 @@ impl RunLog {
                                 .map(|st| {
                                     json::obj(vec![
                                         ("name", json::s(&st.name)),
+                                        ("replicas", json::num(st.replicas as f64)),
                                         ("busy_s", json::num(st.busy_s)),
                                         ("idle_s", json::num(st.idle_s)),
                                         ("items", json::num(st.items as f64)),

@@ -78,6 +78,13 @@ pub struct SimConfig {
     /// Δ-update direction convention (the paper specifies both; see
     /// `coordinator::delta` module docs — Eq4 is the default)
     pub delta_policy: Policy,
+    /// Replicated reward stage (the coordinator's `reward_replicas`):
+    /// sequence-affine replicas prefill disjoint lane subsets concurrently,
+    /// dividing the reward-prefill *wall* time (total work is conserved).
+    /// Assumes replicas run on independent execution resources — separate
+    /// devices/streams or lane-sliced entries; the current fixed-shape
+    /// kernels on one shared device would not deliver this division.
+    pub reward_replicas: usize,
 }
 
 impl SimConfig {
@@ -89,6 +96,7 @@ impl SimConfig {
             delta_max,
             window: 8,
             delta_policy: Policy::Eq4,
+            reward_replicas: 1,
         }
     }
 }
@@ -293,8 +301,14 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         }
 
         // ---- scoring ----
-        let reward_prefill =
+        // N sequence-affine replicas prefill disjoint lane subsets
+        // concurrently: wall time divides by the pool size, work does not.
+        // Only the *streamed* reward stage is pooled in the coordinator, so
+        // non-intra schedules (monolithic scoring) keep a single worker.
+        let replicas = if intra { cfg.reward_replicas.max(1) as f64 } else { 1.0 };
+        let reward_prefill_work =
             if su.use_reward_model { score_cm.prefill(total_tokens, mean_seq) } else { 0.0 };
+        let reward_prefill = reward_prefill_work / replicas;
         // third pipeline stage: reference-model prefill, costed separately
         // from the actor-colocated value prefill (their sum equals the old
         // combined ref+value term exactly)
@@ -369,8 +383,10 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         let n_score = su.cluster.n_score as f64;
         let total_gpus = su.cluster.total_gpus() as f64;
         let mut busy = gen_time * n_gen * decode_act;
-        busy += hidden_reward * n_score.max(1.0) * 0.85; // streamed scoring inside gen window
-        busy += exposed_reward * n_score.max(1.0) * 0.85;
+        // hidden/exposed are wall-time; × replicas recovers the conserved
+        // total scoring work the pool performed
+        busy += hidden_reward * replicas * n_score.max(1.0) * 0.85; // streamed scoring inside gen window
+        busy += exposed_reward * replicas * n_score.max(1.0) * 0.85;
         busy += (exposed_rv + hidden_rv) * n_gen * 0.75;
         busy += train_time * n_gen * 0.70;
         busy += const_s * total_gpus * 0.05;
@@ -393,10 +409,14 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         }
 
         elapsed += step_time;
-        let stage_row = |name: &str, busy: f64, items: u64| StageTiming {
+        // busy/idle follow the StageTiming contract: both are summed across
+        // a pool's replicas, so a pooled row's wall budget is
+        // replicas × step_time (keeps busy/(busy+idle) a true utilization)
+        let stage_row = |name: &str, replicas: usize, busy: f64, items: u64| StageTiming {
             name: name.to_string(),
+            replicas,
             busy_s: busy,
-            idle_s: (step_time - busy).max(0.0),
+            idle_s: (replicas as f64 * step_time - busy).max(0.0),
             items,
         };
         let n_fin = finished.len() as u64;
@@ -413,11 +433,11 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             train_stats: [0.0; 6],
             util: util_val,
             stages: vec![
-                stage_row("actor", gen_time, n_fin),
-                stage_row("reward", reward_prefill, n_fin),
-                stage_row("ref", ref_prefill, n_fin),
-                stage_row("value", value_prefill, n_fin),
-                stage_row("train", train_time, 1),
+                stage_row("actor", 1, gen_time, n_fin),
+                stage_row("reward", replicas as usize, reward_prefill_work, n_fin),
+                stage_row("ref", 1, ref_prefill, n_fin),
+                stage_row("value", 1, value_prefill, n_fin),
+                stage_row("train", 1, train_time, 1),
             ],
         });
 
@@ -438,6 +458,29 @@ fn pipeline_gen_eff_factor(p: Pipeline) -> f64 {
         Pipeline::VerlDp | Pipeline::VerlDpSp | Pipeline::VerlAsyncSp | Pipeline::AReal => 1.35,
         _ => 1.0,
     }
+}
+
+/// Sweep reward-replica counts and return the smallest pool size at which
+/// streamed scoring is **actor-bound**: adding one more replica improves
+/// OPPO's steady-state step latency by less than `tol` (relative).  This is
+/// the planning question the replica pool answers — "how many scorer
+/// replicas until the actor is the bottleneck again?"  Returns
+/// `max_replicas` if the knee is never reached within the sweep.
+pub fn min_replicas_actor_bound(cfg: &SimConfig, max_replicas: usize, tol: f64) -> usize {
+    let lat = |n: usize| {
+        let mut c = cfg.clone();
+        c.reward_replicas = n;
+        steady_state_latency(&simulate(Pipeline::oppo(), &c))
+    };
+    let mut prev = lat(1);
+    for r in 2..=max_replicas {
+        let cur = lat(r);
+        if (prev - cur) / prev.max(1e-12) < tol {
+            return r - 1;
+        }
+        prev = cur;
+    }
+    max_replicas.max(1)
 }
 
 /// Mean per-step latency over the last half of a run (warm steady state).
@@ -556,6 +599,64 @@ mod tests {
                     st.name, st.busy_s, r.wall_s
                 );
             }
+        }
+    }
+
+    #[test]
+    fn reward_replicas_cut_exposed_scoring_until_actor_bound() {
+        let base = SimConfig::new(presets::stackex_7b_h200(), 60, 13);
+        let lat = |n: usize| {
+            let mut c = base.clone();
+            c.reward_replicas = n;
+            steady_state_latency(&simulate(Pipeline::oppo(), &c))
+        };
+        let l1 = lat(1);
+        let l2 = lat(2);
+        let l16 = lat(16);
+        assert!(l2 < l1, "2 replicas must beat 1: {l1} -> {l2}");
+        assert!(l16 <= l2, "more replicas never slow the step: {l2} -> {l16}");
+        // the knee exists and marks where streaming goes actor-bound: the
+        // next replica past it buys less than the tolerance
+        let knee = min_replicas_actor_bound(&base, 16, 0.01);
+        assert!((1..=16).contains(&knee), "knee {knee}");
+        let (lk, lk1) = (lat(knee), lat(knee + 1));
+        assert!(
+            (lk - lk1) / lk < 0.01,
+            "one replica past the knee ({knee}) still bought {:.3}%",
+            100.0 * (lk - lk1) / lk
+        );
+    }
+
+    #[test]
+    fn replicas_do_not_speed_up_non_streamed_baselines() {
+        // only the streamed reward stage is pooled; monolithic baselines
+        // keep their single scorer whatever the knob says
+        let mut cfg = SimConfig::new(presets::stackex_7b_h200(), 30, 17);
+        let base = steady_state_latency(&simulate(Pipeline::TrlSequential, &cfg));
+        cfg.reward_replicas = 8;
+        let pooled = steady_state_latency(&simulate(Pipeline::TrlSequential, &cfg));
+        assert_eq!(base, pooled, "baseline latency must ignore reward_replicas");
+    }
+
+    #[test]
+    fn replica_pool_conserves_scoring_work_in_step_records() {
+        let mut cfg = SimConfig::new(presets::stackex_7b_h200(), 20, 11);
+        cfg.reward_replicas = 4;
+        let pooled = simulate(Pipeline::oppo(), &cfg);
+        cfg.reward_replicas = 1;
+        let single = simulate(Pipeline::oppo(), &cfg);
+        for (p, s) in pooled.records.iter().zip(&single.records) {
+            let find = |log: &StepRecord, name: &str| -> StageTiming {
+                log.stages.iter().find(|st| st.name == name).unwrap().clone()
+            };
+            let rp = find(p, "reward");
+            let rs = find(s, "reward");
+            assert_eq!(rp.replicas, 4);
+            assert_eq!(rs.replicas, 1);
+            // busy records total pool work, which replication must conserve
+            assert!((rp.busy_s - rs.busy_s).abs() < 1e-9, "{} vs {}", rp.busy_s, rs.busy_s);
+            // and the pooled step is never slower
+            assert!(p.wall_s <= s.wall_s + 1e-9);
         }
     }
 

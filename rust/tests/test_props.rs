@@ -1,9 +1,13 @@
 //! Property tests over the coordinator invariants (DESIGN.md §5/§6), using
 //! the in-repo randomized harness (`oppo::util::proptest`).
 
+use std::sync::{Arc, Mutex};
+
 use oppo::coordinator::buffer::SeqBuffer;
 use oppo::coordinator::chunkctl::ChunkController;
 use oppo::coordinator::delta::{DeltaController, Policy};
+use oppo::coordinator::stage::{StageHandler, StagePool};
+use oppo::coordinator::worker::{Pick, StreamChunk};
 use oppo::data::tasks::{Prompt, TaskKind};
 use oppo::model::sequence::SeqPhase;
 use oppo::util::proptest::{forall, forall_vec, Config};
@@ -100,6 +104,111 @@ fn buffer_invariants_hold_under_random_schedules() {
                     "conservation violated: took {taken_total} + {} buffered != {added_total} added",
                     buf.len()
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Replica-pool routing property: across an arbitrary streamed-chunk
+/// schedule, no two chunks of one sequence (lane) may ever reach different
+/// replicas — the replica holds that lane's KV/seam state.  Exercises the
+/// real [`StagePool`] + [`StreamChunk::for_replica`] path with recording
+/// handlers on live worker threads.
+#[test]
+fn pool_routing_never_splits_a_sequence_across_replicas() {
+    struct Recorder {
+        replica: usize,
+        /// (replica, lanes-with-valid-tokens) per handled request
+        log: Arc<Mutex<Vec<(usize, Vec<usize>)>>>,
+    }
+    impl StageHandler for Recorder {
+        type Req = StreamChunk;
+        type Resp = ();
+        fn handle(&mut self, ck: StreamChunk) -> anyhow::Result<()> {
+            let lanes: Vec<usize> = ck
+                .n_valid
+                .iter()
+                .enumerate()
+                .filter(|(_, &nv)| nv > 0)
+                .map(|(l, _)| l)
+                .collect();
+            self.log.lock().unwrap().push((self.replica, lanes));
+            Ok(())
+        }
+    }
+
+    forall(
+        Config { cases: 40, ..Default::default() },
+        "pool-affinity",
+        |rng| {
+            let replicas = rng.range_usize(1, 5);
+            let lanes = rng.range_usize(1, 13);
+            let c = 4 << rng.range_usize(0, 3);
+            // per-chunk, per-lane count of valid tokens (0 = idle lane)
+            let valid: Vec<Vec<usize>> = (0..rng.range_usize(1, 9))
+                .map(|_| (0..lanes).map(|_| rng.range_usize(0, c + 1)).collect())
+                .collect();
+            (replicas, lanes, c, valid)
+        },
+        |(replicas, lanes, c, valid)| {
+            let (replicas, lanes, c) = (*replicas, *lanes, *c);
+            let log: Arc<Mutex<Vec<(usize, Vec<usize>)>>> = Arc::new(Mutex::new(Vec::new()));
+            let mut pool: StagePool<StreamChunk, ()> =
+                StagePool::spawn("affinity", replicas, 2, |r| {
+                    let log = log.clone();
+                    move || Ok(Recorder { replica: r, log })
+                })
+                .map_err(|e| e.to_string())?;
+            for pattern in valid {
+                let ck = StreamChunk {
+                    c,
+                    tokens: vec![0; lanes * c],
+                    start: vec![0; lanes],
+                    n_valid: pattern.iter().map(|&v| v as i32).collect(),
+                    picks: pattern
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &v)| v > 0)
+                        .map(|(l, &v)| Pick { lane: l, idx_in_chunk: v - 1 })
+                        .collect(),
+                };
+                for r in 0..pool.replicas() {
+                    let Some(part) = ck.for_replica(r, pool.replicas()) else { continue };
+                    for p in &part.picks {
+                        if pool.replica_for_lane(p.lane) != r {
+                            return Err(format!(
+                                "pick for lane {} routed to replica {r}",
+                                p.lane
+                            ));
+                        }
+                    }
+                    pool.submit_to(r, part).map_err(|e| e.to_string())?;
+                }
+            }
+            for r in 0..pool.replicas() {
+                while pool.in_flight_on(r) > 0 {
+                    pool.recv_from(r).map_err(|e| e.to_string())?;
+                }
+            }
+            // every lane's chunks observed on exactly one replica — and on
+            // the replica the routing rule names
+            let mut owner: Vec<Option<usize>> = vec![None; lanes];
+            for (rep, ls) in log.lock().unwrap().iter() {
+                for &l in ls {
+                    if l % replicas != *rep {
+                        return Err(format!("lane {l} handled by replica {rep}"));
+                    }
+                    match owner[l] {
+                        None => owner[l] = Some(*rep),
+                        Some(prev) if prev != *rep => {
+                            return Err(format!(
+                                "lane {l} split across replicas {prev} and {rep}"
+                            ));
+                        }
+                        _ => {}
+                    }
+                }
             }
             Ok(())
         },
