@@ -24,6 +24,14 @@ controller (§3.1) selects among pre-compiled executables
 ``ref_prefill_chunk_c{C}``, C ∈ ``cfg.chunk_sizes`` — "one compiled
 executable per model variant".
 
+Lane-sliced variants: an N-replica stage pool compacts its owned lanes into
+a dense ``[G/N, C]`` grid (host-side, see rust worker.rs) and runs
+``reward_prefill_chunk_g{G/N}_c{C}`` / ``ref_prefill_chunk_g{G/N}_c{C}``
+so each replica pays only its share of the chunk FLOPs instead of a masked
+full-shape kernel.  The builders are lane-polymorphic, so the sliced
+flavours differ from the full-shape ones only in their input specs.
+Emitted for every replica count N > 1 that divides G.
+
 Kernel flavours: the default artifact set lowers with ``kernel_impl="jnp"``
 (XLA-fused oracles — the throughput flavour; see EXPERIMENTS.md §Perf).  The
 Pallas L1 kernels additionally ship as ``*_pallas`` artifacts for the middle
@@ -90,6 +98,16 @@ def kv_specs(cfg: M.ModelConfig, batch: int) -> list[jax.ShapeDtypeStruct]:
     return [_sds(kv_shape) for _ in range(2 * cfg.n_layers)]
 
 
+def sliced_row_counts(cfg: M.ModelConfig) -> list[int]:
+    """Compacted row counts G/N for every replica count N > 1 dividing G.
+
+    Non-divisor replica counts have no sliced entry; the Rust pool falls
+    back to the masked full-shape path for those.
+    """
+    g = cfg.lanes
+    return sorted({g // n for n in range(2, g + 1) if g % n == 0}, reverse=True)
+
+
 def entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
     """name -> (builder fn, [input ShapeDtypeStructs])."""
     g, b, s = cfg.lanes, cfg.ppo_batch, cfg.s_max
@@ -116,6 +134,19 @@ def entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
             [*p, _sds((g, c), i32), _sds((g,), i32), _sds((g,), i32),
              _sds((g, cfg.vocab), f32), *kv_specs(cfg, g)],
         )
+    # lane-sliced replica variants: same builders, [G/N]-row input specs
+    for rows in sliced_row_counts(cfg):
+        for c in cfg.chunk_sizes:
+            sigs[f"reward_prefill_chunk_g{rows}_c{c}"] = (
+                M.make_reward_prefill_chunk(cfg, c),
+                [*p, _sds((rows, c), i32), _sds((rows,), i32), _sds((rows,), i32),
+                 *kv_specs(cfg, rows)],
+            )
+            sigs[f"ref_prefill_chunk_g{rows}_c{c}"] = (
+                M.make_ref_prefill_chunk(cfg, c),
+                [*p, _sds((rows, c), i32), _sds((rows,), i32), _sds((rows,), i32),
+                 _sds((rows, cfg.vocab), f32), *kv_specs(cfg, rows)],
+            )
     sigs["reward_score_full"] = (
         M.make_reward_score_full(cfg),
         [*p, _sds((g, s), i32), _sds((g,), i32)],
@@ -152,7 +183,7 @@ def pallas_entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
     g, b, s = pcfg.lanes, pcfg.ppo_batch, pcfg.s_max
     p = param_specs(pcfg)
     i32, f32 = jnp.int32, jnp.float32
-    return {
+    sigs = {
         f"reward_prefill_chunk_pallas_c{mid_c}": (
             M.make_reward_prefill_chunk(pcfg, mid_c),
             [*p, _sds((g, mid_c), i32), _sds((g,), i32), _sds((g,), i32),
@@ -163,6 +194,15 @@ def pallas_entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
             [_sds((b, s), f32), _sds((b, s), f32), _sds((b, s), f32)],
         ),
     }
+    # sliced pallas flavour: the attention kernel grids over b*h at runtime
+    # shape, so the same builder lowers at any compacted row count
+    for rows in sliced_row_counts(pcfg):
+        sigs[f"reward_prefill_chunk_pallas_g{rows}_c{mid_c}"] = (
+            M.make_reward_prefill_chunk(pcfg, mid_c),
+            [*p, _sds((rows, mid_c), i32), _sds((rows,), i32), _sds((rows,), i32),
+             *kv_specs(pcfg, rows)],
+        )
+    return sigs
 
 
 # --------------------------------------------------------------------------

@@ -70,6 +70,37 @@ def test_expected_entries_present(manifest):
     assert any(n.startswith("reward_prefill_chunk_pallas_c") for n in names)
 
 
+def test_sliced_entries_cover_divisor_replica_counts(manifest):
+    cfg = manifest["config"]
+    names = set(manifest["entries"])
+    g = cfg["lanes"]
+    rows_set = {g // n for n in range(2, g + 1) if g % n == 0}
+    for rows in rows_set:
+        for c in cfg["chunk_sizes"]:
+            assert f"reward_prefill_chunk_g{rows}_c{c}" in names
+            assert f"ref_prefill_chunk_g{rows}_c{c}" in names
+        # sliced pallas flavour at the mid chunk size
+        assert any(
+            n.startswith(f"reward_prefill_chunk_pallas_g{rows}_c") for n in names
+        )
+
+
+def test_sliced_entry_shapes_are_row_sized(manifest):
+    cfg = manifest["config"]
+    g, c0 = cfg["lanes"], cfg["chunk_sizes"][0]
+    rows = max(g // n for n in range(2, g + 1) if g % n == 0)
+    e = manifest["entries"][f"reward_prefill_chunk_g{rows}_c{c0}"]
+    np_ = manifest["n_params"]
+    assert e["inputs"][np_]["shape"] == [rows, c0]       # chunk
+    assert e["inputs"][np_ + 1]["shape"] == [rows]       # start
+    assert e["inputs"][np_ + 3]["shape"][0] == rows      # kv batch dim
+    assert e["outputs"][-1]["shape"] == [rows, c0]       # scores
+    ref = manifest["entries"][f"ref_prefill_chunk_g{rows}_c{c0}"]
+    assert ref["inputs"][np_ + 3]["shape"] == [rows, cfg["vocab"]]  # boundary
+    assert ref["outputs"][-2]["shape"] == [rows, cfg["vocab"]]
+    assert ref["outputs"][-1]["shape"] == [rows, c0]
+
+
 def test_param_table_contiguous_and_sized(manifest, art_dir):
     table = manifest["param_table"]
     offset = 0

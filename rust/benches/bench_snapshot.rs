@@ -1,0 +1,141 @@
+//! Pinned-seed performance snapshot → `BENCH_6.json`.
+//!
+//! Runs the deterministic simulator on the paper's main preset at a fixed
+//! seed and emits a machine-readable snapshot of the metrics this repo's
+//! perf work is judged by: per-stage busy/idle attribution, steady-state
+//! step wall time, streamed-chunk throughput, and the lane-slicing knee
+//! (`min_replicas_actor_bound`).  The sim sections are bit-reproducible on
+//! any machine — same seed, same numbers — so the committed snapshot diffs
+//! cleanly against a re-run; the `host` section (peak RSS, runner wall
+//! time) is machine-dependent and refreshed by each local run.
+//!
+//! Usage:
+//!   cargo bench --bench bench_snapshot              # writes ../BENCH_6.json
+//!   cargo bench --bench bench_snapshot -- --out /tmp/snap.json
+
+use std::time::Instant;
+
+use oppo::eval::{print_table, Row};
+use oppo::metrics::RunLog;
+use oppo::sim::pipeline::{min_replicas_actor_bound, simulate, Pipeline, SimConfig};
+use oppo::sim::presets;
+use oppo::util::json::{self, Value};
+
+const SEED: u64 = 600;
+const STEPS: usize = 60;
+const KNEE_MAX: usize = 8;
+const KNEE_TOL: f64 = 0.02;
+
+fn cfg(reward_replicas: usize, ref_replicas: usize) -> SimConfig {
+    let mut c = SimConfig::new(presets::stackex_7b_h200(), STEPS, SEED);
+    c.reward_replicas = reward_replicas;
+    c.ref_replicas = ref_replicas;
+    c
+}
+
+/// Steady-state (last-half) aggregates for one run, as a JSON scenario
+/// block plus a human table row.
+fn scenario(name: &str, log: &RunLog) -> (Value, Row) {
+    let tail = &log.records[log.records.len() / 2..];
+    let n = tail.len() as f64;
+    let (mut wall, mut util, mut chunks, mut gen_tokens) = (0.0, 0.0, 0.0, 0.0);
+    for r in tail {
+        wall += r.wall_s;
+        util += r.util;
+        chunks += r.gen_tokens as f64 / r.chunk.max(1) as f64;
+        gen_tokens += r.gen_tokens as f64;
+    }
+    let mut stages = Vec::new();
+    for (i, st0) in tail[0].stages.iter().enumerate() {
+        let (mut busy, mut idle) = (0.0, 0.0);
+        let mut items = 0u64;
+        for r in tail {
+            busy += r.stages[i].busy_s;
+            idle += r.stages[i].idle_s;
+            items += r.stages[i].items;
+        }
+        stages.push(json::obj(vec![
+            ("name", json::s(&st0.name)),
+            ("replicas", json::num(st0.replicas as f64)),
+            ("busy_s_mean", json::num(busy / n)),
+            ("idle_s_mean", json::num(idle / n)),
+            ("util", json::num(busy / (busy + idle).max(1e-12))),
+            ("items", json::num(items as f64)),
+        ]));
+    }
+    let v = json::obj(vec![
+        ("mode", json::s(&log.mode)),
+        ("step_wall_s_mean", json::num(wall / n)),
+        ("util_mean", json::num(util / n)),
+        ("streamed_chunks_per_s", json::num(chunks / wall)),
+        ("gen_tokens_per_s", json::num(gen_tokens / wall)),
+        ("stages", Value::Arr(stages)),
+    ]);
+    let row = Row::new(name)
+        .cell("step_s", wall / n)
+        .cell("util", util / n)
+        .cell("chunks_ps", chunks / wall)
+        .cell("tok_ps", gen_tokens / wall);
+    (v, row)
+}
+
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn main() {
+    let mut out_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--out" {
+            out_path = args.next();
+        }
+        // anything else (--bench, harness flags) is cargo's — ignore
+    }
+    let out_path = out_path
+        .unwrap_or_else(|| format!("{}/../BENCH_6.json", env!("CARGO_MANIFEST_DIR")));
+
+    let t0 = Instant::now();
+    let scenarios: [(&str, Pipeline, usize, usize); 3] = [
+        ("trl", Pipeline::TrlSequential, 1, 1),
+        ("oppo_x1", Pipeline::oppo(), 1, 1),
+        ("oppo_reward4_ref2", Pipeline::oppo(), 4, 2),
+    ];
+    let mut rows = Vec::new();
+    let mut svals = Vec::new();
+    for (name, p, rr, fr) in scenarios {
+        let log = simulate(p, &cfg(rr, fr));
+        let (v, row) = scenario(name, &log);
+        svals.push((name, v));
+        rows.push(row);
+    }
+    let knee = min_replicas_actor_bound(&cfg(1, 1), KNEE_MAX, KNEE_TOL);
+
+    let host = json::obj(vec![
+        ("note", json::s("machine-dependent; refreshed by each local run")),
+        (
+            "peak_rss_kb",
+            peak_rss_kb().map(|k| json::num(k as f64)).unwrap_or(Value::Null),
+        ),
+        ("snapshot_wall_ms", json::num(t0.elapsed().as_secs_f64() * 1e3)),
+    ]);
+    let doc = json::obj(vec![
+        ("bench", json::s("bench_snapshot")),
+        ("preset", json::s("stackex-7b-h200")),
+        ("seed", json::num(SEED as f64)),
+        ("steps", json::num(STEPS as f64)),
+        ("tail_steps", json::num((STEPS - STEPS / 2) as f64)),
+        ("chunk_tokens", json::num(cfg(1, 1).chunk_tokens)),
+        ("scenarios", json::obj(svals)),
+        ("sliced_knee_reward_replicas", json::num(knee as f64)),
+        ("host", host),
+    ]);
+    let text = json::to_string(&doc) + "\n";
+    std::fs::write(&out_path, &text).expect("write snapshot");
+
+    print_table("BENCH_6 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
+    println!("sliced knee: {knee} reward replicas (tol {KNEE_TOL})");
+    println!("wrote {out_path}");
+}

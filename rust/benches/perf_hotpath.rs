@@ -4,14 +4,14 @@
 //! L3 coordinator structures (buffer, controllers, GAE, simulator) and, when
 //! artifacts are present, the PJRT dispatch path (per-chunk decode latency,
 //! per-token cost, dispatch overhead vs execute time).
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use oppo::coordinator::buffer::SeqBuffer;
-use oppo::coordinator::engine_ops::Ops;
+use oppo::coordinator::engine_ops::{Ops, RewardOps};
 use oppo::coordinator::stage::{StageHandler, StagePool, StageWorker};
-use oppo::coordinator::worker::{RefReq, RefWorker};
+use oppo::coordinator::worker::{RefReq, RefWorker, StreamChunk};
 use oppo::data::tasks::{Prompt, TaskKind};
 use oppo::eval::{print_table, save_rows, Row};
 use oppo::ppo::gae::gae;
@@ -150,9 +150,9 @@ fn main() {
     // replicas, with per-chunk stage cost proportional to the lanes a
     // replica owns (the lane % replicas split).  This models replicas on
     // independent execution resources — separate devices/streams, or the
-    // future lane-sliced [G/N, C] entries (see ROADMAP) — where splitting a
-    // stage slower than the actor across 2 replicas roughly halves the
-    // per-replica prefill and pulls the pipeline back toward actor-bound.
+    // lane-sliced [G/N, C] entries — where splitting a stage slower than
+    // the actor across 2 replicas roughly halves the per-replica prefill
+    // and pulls the pipeline back toward actor-bound.
     {
         struct LaneCost {
             per_lane: Duration,
@@ -202,6 +202,77 @@ fn main() {
         rows.push(row.cell("speedup_x2", thru[1] / thru[0]));
     }
 
+    // Sliced vs masked replica pools on ONE shared device.  A device mutex
+    // serializes every grid: masked replicas each execute the full [G, C]
+    // grid (pool compute multiplies by N), sliced replicas execute the
+    // compacted [G/N, C] grids that the real `StreamChunk::for_replica`
+    // produces (pool compute stays at G rows whatever N is).  The
+    // crossover this demonstrates: on a single device, masked pools lose
+    // throughput linearly with N while sliced pools hold it — per-replica
+    // grid rows (reported below) scale as G/N.
+    {
+        struct GridCost {
+            device: Arc<Mutex<()>>,
+            per_row: Duration,
+        }
+        impl StageHandler for GridCost {
+            type Req = usize; // grid rows this replica's entry executes
+            type Resp = ();
+            fn handle(&mut self, rows: usize) -> Result<()> {
+                let _dev = self.device.lock().unwrap(); // one shared device
+                std::thread::sleep(self.per_row * rows as u32);
+                Ok(())
+            }
+        }
+        let lanes = 8usize;
+        let c = 16usize;
+        let per_row = Duration::from_micros(400); // full [8, C] grid: 3.2 ms
+        let decode = Duration::from_millis(1); // actor: 1 ms per chunk
+        let n_chunks = 24;
+        let ck = StreamChunk {
+            c,
+            tokens: vec![0i32; lanes * c],
+            start: vec![0; lanes],
+            n_valid: vec![c as i32; lanes],
+            picks: vec![],
+        };
+        for &sliced in &[false, true] {
+            let mode = if sliced { "sliced" } else { "masked" };
+            let mut row = Row::new(format!("{mode} grids (8 lanes, 1 device)"));
+            for replicas in [1usize, 2, 4] {
+                let device = Arc::new(Mutex::new(()));
+                let mut pool: StagePool<usize, ()> =
+                    StagePool::spawn("bench-slice", replicas, 2, |_r| {
+                        let device = device.clone();
+                        move || Ok(GridCost { device, per_row })
+                    })
+                    .expect("spawn");
+                let mut grid_rows = 0usize;
+                let secs = time_it(|| {
+                    for _ in 0..n_chunks {
+                        for r in 0..replicas {
+                            if let Some(part) = ck.for_replica(r, replicas, sliced) {
+                                grid_rows = part.chunk.lanes();
+                                pool.submit_to(r, grid_rows).expect("submit");
+                            }
+                        }
+                        std::thread::sleep(decode); // actor decodes meanwhile
+                        while pool.try_recv_any().expect("recv").is_some() {}
+                    }
+                    for r in 0..replicas {
+                        while pool.in_flight_on(r) > 0 {
+                            pool.recv_from(r).expect("recv");
+                        }
+                    }
+                });
+                row = row
+                    .cell(&format!("chunks_per_sec_x{replicas}"), n_chunks as f64 / secs)
+                    .cell(&format!("grid_rows_x{replicas}"), grid_rows as f64);
+            }
+            rows.push(row);
+        }
+    }
+
     // PJRT dispatch path (needs artifacts)
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let engine = Arc::new(Engine::load("artifacts").unwrap());
@@ -248,6 +319,48 @@ fn main() {
             }
         });
         rows.push(Row::new("pjrt dispatch (gae)").cell("ms_per_call", 1e3 * secs / reps as f64));
+
+        // sliced entry latency on real compute: a [G/N, C] grid should
+        // cost ~G/N of the full [G, C] call — the FLOP division that lets
+        // replica pools pay off on one shared device
+        {
+            let rops = RewardOps::new(engine.clone()).unwrap();
+            let c = shape.chunk_sizes[0];
+            let bench = |entry: String, grid_rows: usize| -> f64 {
+                let chunk = vec![1i32; grid_rows * c];
+                let starts = vec![0i32; grid_rows];
+                let nv = vec![c as i32; grid_rows];
+                let mut state = rops.fresh_state_rows(grid_rows).unwrap();
+                rops.prefill_chunk(&mut state, &entry, &chunk, &starts, &nv).unwrap();
+                let reps = 8;
+                let secs = time_it(|| {
+                    for _ in 0..reps {
+                        rops.prefill_chunk(&mut state, &entry, &chunk, &starts, &nv).unwrap();
+                    }
+                });
+                secs / reps as f64
+            };
+            let full_ms = 1e3 * bench(format!("reward_prefill_chunk_c{c}"), g);
+            let mut row =
+                Row::new(format!("reward prefill sliced c={c}")).cell("full_ms", full_ms);
+            let mut any = false;
+            for n in [2usize, 4] {
+                if g % n != 0 || !engine.manifest().sliced_prefill_supported("reward", g / n) {
+                    continue;
+                }
+                let r = g / n;
+                let ms = 1e3 * bench(format!("reward_prefill_chunk_g{r}_c{c}"), r);
+                row = row
+                    .cell(&format!("g{r}_ms"), ms)
+                    .cell(&format!("g{r}_frac_of_full"), ms / full_ms.max(1e-9));
+                any = true;
+            }
+            if any {
+                rows.push(row);
+            } else {
+                println!("(artifacts lack sliced reward entries — sliced bench skipped)");
+            }
+        }
 
         // streamed vs synchronous reference scoring — the third-stage
         // overlap win, measured over real compute.  Dense `ref_logprobs`

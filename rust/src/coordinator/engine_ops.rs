@@ -304,15 +304,24 @@ impl RewardOps {
     }
 
     pub fn fresh_state(&self) -> Result<RewardState> {
-        let g = self.g();
-        let shape = self.engine.manifest().shape.kv_shape(g);
+        self.fresh_state_rows(self.g())
+    }
+
+    /// Fresh KV state sized to `rows` lanes — `G` for the full-shape
+    /// entries, `G/N` for a sliced pool replica that only ever sees its
+    /// compacted rows.
+    pub fn fresh_state_rows(&self, rows: usize) -> Result<RewardState> {
+        let shape = self.engine.manifest().shape.kv_shape(rows);
         let n = 2 * self.engine.manifest().shape.n_layers;
         let kv = (0..n).map(|_| self.engine.zeros_f32(&shape)).collect::<Result<Vec<_>>>()?;
         Ok(RewardState { kv })
     }
 
-    /// `reward_prefill_chunk_c{c}` (or its `_pallas_` flavour): incremental
-    /// prefill of one streamed chunk; returns the per-position scores [G, C].
+    /// `reward_prefill_chunk_c{c}` / the sliced `..._g{rows}_c{c}` (or a
+    /// `_pallas_` flavour): incremental prefill of one streamed chunk;
+    /// returns the per-position scores, row-major over the request's grid.
+    /// The grid's row count comes from `start.len()` and must match the
+    /// entry's compiled shape and the state's KV rows.
     pub fn prefill_chunk(
         &self,
         state: &mut RewardState,
@@ -321,7 +330,7 @@ impl RewardOps {
         start: &[i32],
         n_valid: &[i32],
     ) -> Result<Vec<f32>> {
-        let g = self.g();
+        let g = start.len();
         let (ch, st, nv) = upload_stream_chunk(&self.engine, g, chunk, start, n_valid)?;
         let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.reward.len() + 3 + state.kv.len());
         args.extend(self.reward.bufs());
@@ -378,19 +387,26 @@ impl RefOps {
     }
 
     pub fn fresh_state(&self) -> Result<RefStreamState> {
-        let g = self.g();
-        let shape = self.engine.manifest().shape.kv_shape(g);
+        self.fresh_state_rows(self.g())
+    }
+
+    /// Fresh KV + boundary state sized to `rows` lanes (`G` full-shape,
+    /// `G/N` for a sliced pool replica).
+    pub fn fresh_state_rows(&self, rows: usize) -> Result<RefStreamState> {
+        let shape = self.engine.manifest().shape.kv_shape(rows);
         let n = 2 * self.engine.manifest().shape.n_layers;
         let kv = (0..n).map(|_| self.engine.zeros_f32(&shape)).collect::<Result<Vec<_>>>()?;
         let vocab = self.engine.manifest().shape.vocab;
-        let boundary = self.engine.zeros_f32(&[g, vocab])?;
+        let boundary = self.engine.zeros_f32(&[rows, vocab])?;
         Ok(RefStreamState { kv, boundary })
     }
 
-    /// `ref_prefill_chunk_c{c}`: incremental reference log-probs of one
-    /// streamed chunk; returns `logp [G, C]` where `logp[g, j]` is
-    /// `log P(chunk[g, j] | prefix)` (garbage at `j >= n_valid`, same
-    /// contract as the reward flavour).
+    /// `ref_prefill_chunk_c{c}` / the sliced `..._g{rows}_c{c}`:
+    /// incremental reference log-probs of one streamed chunk; returns
+    /// `logp`, row-major over the request's grid, where `logp[r, j]` is
+    /// `log P(chunk[r, j] | prefix)` (garbage at `j >= n_valid`, same
+    /// contract as the reward flavour).  The row count comes from
+    /// `start.len()`.
     pub fn prefill_chunk(
         &self,
         state: &mut RefStreamState,
@@ -399,7 +415,7 @@ impl RefOps {
         start: &[i32],
         n_valid: &[i32],
     ) -> Result<Vec<f32>> {
-        let g = self.g();
+        let g = start.len();
         let (ch, st, nv) = upload_stream_chunk(&self.engine, g, chunk, start, n_valid)?;
         let mut args: Vec<&PjRtBuffer> =
             Vec::with_capacity(self.refm.len() + 4 + state.kv.len());
@@ -550,6 +566,65 @@ mod tests {
                 got[lane],
                 full[lane]
             );
+        }
+    }
+
+    #[test]
+    fn sliced_prefill_matches_full_shape_rows() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest().shape.clone();
+        let g = m.lanes;
+        if g % 2 != 0 {
+            return;
+        }
+        let rows = g / 2;
+        if !e.manifest().sliced_prefill_supported("reward", rows) {
+            return; // older artifact set without sliced entries
+        }
+        let c = m.chunk_sizes[0];
+        let rops = RewardOps::new(e.clone()).unwrap();
+
+        let mut chunk = vec![0i32; g * c];
+        for (i, t) in chunk.iter_mut().enumerate() {
+            *t = 3 + ((i * 13) % (m.vocab - 3)) as i32;
+        }
+        let starts = vec![0i32; g];
+        let nvalid = vec![c as i32; g];
+        let mut full_state = rops.fresh_state().unwrap();
+        let full = rops
+            .prefill_chunk(
+                &mut full_state,
+                &format!("reward_prefill_chunk_c{c}"),
+                &chunk,
+                &starts,
+                &nvalid,
+            )
+            .unwrap();
+
+        // compact the even lanes into [rows, c] and run the sliced entry
+        let lane_map: Vec<usize> = (0..g).step_by(2).collect();
+        let mut sc = vec![0i32; rows * c];
+        for (row, &lane) in lane_map.iter().enumerate() {
+            sc[row * c..(row + 1) * c].copy_from_slice(&chunk[lane * c..(lane + 1) * c]);
+        }
+        let mut state = rops.fresh_state_rows(rows).unwrap();
+        let sliced = rops
+            .prefill_chunk(
+                &mut state,
+                &format!("reward_prefill_chunk_g{rows}_c{c}"),
+                &sc,
+                &vec![0i32; rows],
+                &vec![c as i32; rows],
+            )
+            .unwrap();
+        for (row, &lane) in lane_map.iter().enumerate() {
+            for j in 0..c {
+                let (a, b) = (sliced[row * c + j], full[lane * c + j]);
+                assert!(
+                    (a - b).abs() < 2e-3,
+                    "row {row} (lane {lane}) pos {j}: sliced {a} vs full {b}"
+                );
+            }
         }
     }
 

@@ -17,12 +17,20 @@
 //! caches).  Chunks are split lane-wise across the pool with
 //! sequence-affinity routing (`lane % replicas`): the replica that prefixed
 //! a sequence's earlier chunks holds its KV/seam state, so all later chunks
-//! of that sequence must — and do — land on the same replica.  Replicas pay
-//! off through *concurrency* — independent worker threads whose kernels
-//! PJRT can execute on separate streams/devices — not by shrinking each
-//! replica's per-chunk FLOPs (the fixed-shape entries compute all `[G, C]`
-//! positions; see `StreamChunk::for_replica`).  With one replica the split
-//! is the identity and the behaviour is exactly the old single-worker path.
+//! of that sequence must — and do — land on the same replica.
+//!
+//! Replicas pay off two ways.  They always execute *concurrently* —
+//! independent worker threads whose kernels PJRT can run on separate
+//! streams/devices.  And when the artifacts ship lane-sliced
+//! `{stage}_prefill_chunk_g{G/N}_c{C}` entries for the pool's replica
+//! count, each replica also does proportionally *fewer FLOPs*: the pool
+//! compacts its owned lanes into a dense `[G/N, C]` grid host-side
+//! (see [`StreamChunk::compacted_for_replica`]) and scatters results back
+//! through the part's lane-map, so N replicas divide the chunk compute
+//! instead of each paying the full masked `[G, C]` kernel.  Non-divisor
+//! replica counts (or artifact sets without sliced entries) fall back to
+//! the masked full-shape path.  With one replica the split is the identity
+//! and the behaviour is exactly the old single-worker path.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -60,22 +68,48 @@ pub struct StreamChunk {
     pub picks: Vec<Pick>,
 }
 
+/// One replica's share of a streamed chunk: a token grid in the replica's
+/// own coordinate space plus the row → absolute-lane map the sinks use to
+/// scatter scores/log-probs back.  `chunk.picks[*].lane` is a **row index**
+/// into `lane_map` — identity on the masked path, the owned-lane list on
+/// the compacted path.
+#[derive(Clone, Debug)]
+pub struct ReplicaPart {
+    pub chunk: StreamChunk,
+    pub lane_map: Vec<usize>,
+}
+
 impl StreamChunk {
-    /// The sub-chunk replica `r` of `n` must process.  Lanes the replica
-    /// does not own (`lane % n != r`) are masked dead (`n_valid = 0`, picks
-    /// dropped): the stage kernels read results and advance seam state only
-    /// for `n_valid > 0` lanes, so unowned lanes cannot corrupt the
-    /// replica's per-lane KV/seam data.  Note the current AOT entries still
-    /// *compute* the full `[G, C]` grid regardless of the mask — replicas
-    /// win by executing concurrently on independent resources (threads /
-    /// PJRT streams / devices), not by doing fewer FLOPs each; lane-sliced
-    /// `[G/n, C]` entries that skip the dead lanes are a ROADMAP item.
-    /// Returns `None` when no owned lane carries valid tokens.  With
-    /// `n == 1` this is the identity, which keeps a one-replica pool
-    /// bit-compatible with the old single-worker path.
-    pub fn for_replica(&self, r: usize, n: usize) -> Option<StreamChunk> {
+    /// Lane count G of this chunk.
+    pub fn lanes(&self) -> usize {
+        self.start.len()
+    }
+
+    /// The sub-chunk replica `r` of `n` must process.  `sliced` picks the
+    /// compacted `[G/n, C]` grid (requires the pool's sliced AOT entries);
+    /// otherwise the masked full-shape fallback.  Returns `None` when no
+    /// owned lane carries valid tokens.
+    pub fn for_replica(&self, r: usize, n: usize, sliced: bool) -> Option<ReplicaPart> {
+        if sliced && n > 1 {
+            self.compacted_for_replica(r, n)
+        } else {
+            self.masked_for_replica(r, n)
+        }
+    }
+
+    /// Masked full-shape split: lanes the replica does not own
+    /// (`lane % n != r`) are masked dead (`n_valid = 0`, picks dropped).
+    /// The stage kernels read results and advance seam state only for
+    /// `n_valid > 0` lanes, so unowned lanes cannot corrupt the replica's
+    /// per-lane KV/seam data — but the kernel still *computes* the full
+    /// `[G, C]` grid, so this path wins only through concurrency.  It is
+    /// the fallback when no sliced entry ships (e.g. non-divisor replica
+    /// counts).  With `n == 1` this is the identity, which keeps a
+    /// one-replica pool bit-compatible with the old single-worker path.
+    pub fn masked_for_replica(&self, r: usize, n: usize) -> Option<ReplicaPart> {
+        let lane_map: Vec<usize> = (0..self.lanes()).collect();
         if n <= 1 {
-            return Some(self.clone());
+            return Some(ReplicaPart { chunk: self.clone(), lane_map });
         }
         let mut part = self.clone();
         let mut any = false;
@@ -90,7 +124,43 @@ impl StreamChunk {
             return None;
         }
         part.picks.retain(|p| p.lane % n == r);
-        Some(part)
+        Some(ReplicaPart { chunk: part, lane_map })
+    }
+
+    /// Host-side lane compaction: the replica's owned lanes packed into a
+    /// dense `[G/n, C]` grid for the lane-sliced AOT entries, copying only
+    /// owned-lane data (no full-chunk clone).  Row `k` is always absolute
+    /// lane `r + k·n` — the map is fixed for the whole run, so the
+    /// replica's per-row KV/seam state tracks one lane for its lifetime,
+    /// and rows whose lane is idle this chunk ride along with
+    /// `n_valid = 0` rather than shifting later rows.  Picks are rewritten
+    /// into row coordinates; `lane_map` carries the inverse for the
+    /// scatter back to absolute lanes.  Requires `G % n == 0` (sliced
+    /// entries are only emitted for divisor replica counts).
+    pub fn compacted_for_replica(&self, r: usize, n: usize) -> Option<ReplicaPart> {
+        let g = self.lanes();
+        debug_assert!(n > 1 && g % n == 0, "compaction needs a divisor replica count");
+        let lane_map: Vec<usize> = (r..g).step_by(n).collect();
+        if !lane_map.iter().any(|&l| self.n_valid[l] > 0) {
+            return None;
+        }
+        let c = self.c;
+        let rows = lane_map.len();
+        let mut tokens = Vec::with_capacity(rows * c);
+        let mut start = Vec::with_capacity(rows);
+        let mut n_valid = Vec::with_capacity(rows);
+        for &lane in &lane_map {
+            tokens.extend_from_slice(&self.tokens[lane * c..(lane + 1) * c]);
+            start.push(self.start[lane]);
+            n_valid.push(self.n_valid[lane]);
+        }
+        let picks = self
+            .picks
+            .iter()
+            .filter(|p| p.lane % n == r)
+            .map(|p| Pick { lane: p.lane / n, idx_in_chunk: p.idx_in_chunk })
+            .collect();
+        Some(ReplicaPart { chunk: StreamChunk { c, tokens, start, n_valid, picks }, lane_map })
     }
 }
 
@@ -101,14 +171,20 @@ impl StreamChunk {
 /// Requests to the reward worker.
 pub enum RewardReq {
     /// Incremental prefill of one streamed chunk (intra-step overlap).
+    /// The grid may be lane-compacted: `picks[*].lane` indexes rows of
+    /// `chunk`, and `lane_map` maps rows back to absolute lanes for the
+    /// response (identity when the grid is full-shape).
     Stream {
-        /// entry name (`reward_prefill_chunk_c{C}` or the pallas flavour)
+        /// entry name (`reward_prefill_chunk_c{C}`, the sliced
+        /// `reward_prefill_chunk_g{R}_c{C}`, or a pallas flavour)
         entry: String,
         chunk: Vec<i32>,
         start: Vec<i32>,
         n_valid: Vec<i32>,
-        /// final-token positions to read scores from
+        /// final-token positions (row coordinates) to read scores from
         picks: Vec<Pick>,
+        /// row → absolute lane
+        lane_map: Vec<usize>,
     },
     /// Monolithic scoring (baselines / ablation w/o intra).
     ScoreFull { tokens: Vec<i32>, last_idx: Vec<i32> },
@@ -130,6 +206,8 @@ pub enum RewardResp {
 struct RewardHandler {
     ops: RewardOps,
     state: RewardState,
+    /// KV rows this replica's state holds (G full-shape, G/N sliced)
+    rows: usize,
 }
 
 impl StageHandler for RewardHandler {
@@ -139,18 +217,18 @@ impl StageHandler for RewardHandler {
     fn handle(&mut self, req: RewardReq) -> Result<RewardResp> {
         match req {
             RewardReq::Reset => {
-                self.state = self.ops.fresh_state()?;
+                self.state = self.ops.fresh_state_rows(self.rows)?;
                 Ok(RewardResp::ResetDone)
             }
-            RewardReq::Stream { entry, chunk, start, n_valid, picks } => {
-                let g = start.len();
-                let c = chunk.len() / g;
+            RewardReq::Stream { entry, chunk, start, n_valid, picks, lane_map } => {
+                let rows = start.len();
+                let c = chunk.len() / rows;
                 let scores =
                     self.ops.prefill_chunk(&mut self.state, &entry, &chunk, &start, &n_valid)?;
                 Ok(RewardResp::StreamScores(
                     picks
                         .iter()
-                        .map(|p| (p.lane, scores[p.lane * c + p.idx_in_chunk]))
+                        .map(|p| (lane_map[p.lane], scores[p.lane * c + p.idx_in_chunk]))
                         .collect(),
                 ))
             }
@@ -166,6 +244,10 @@ impl StageHandler for RewardHandler {
 /// built on its own thread by the handler factory).
 pub struct RewardWorker {
     pool: StagePool<RewardReq, RewardResp>,
+    /// `Some(G/N)` when this pool runs the lane-sliced entries (each
+    /// replica's state holds only its compacted rows); `None` → masked
+    /// full-shape fallback.
+    sliced_rows: Option<usize>,
 }
 
 impl RewardWorker {
@@ -176,25 +258,38 @@ impl RewardWorker {
 
     /// Spawn `replicas` reward workers.  Streamed chunks are routed
     /// `lane % replicas`, so each replica prefills a disjoint lane subset
-    /// against its own KV cache.
+    /// against its own KV cache.  When the manifest ships lane-sliced
+    /// entries for this replica count, each replica sizes its KV state to
+    /// its `G/replicas` compacted rows and the pool runs the sliced
+    /// kernels; otherwise it falls back to masked full-shape.
     pub fn spawn_replicated(
         engine: Arc<Engine>,
         replicas: usize,
         queue_depth: usize,
     ) -> Result<Self> {
+        let g = engine.manifest().shape.lanes;
+        let sliced_rows = (replicas > 1 && g % replicas == 0)
+            .then(|| g / replicas)
+            .filter(|&rows| engine.manifest().sliced_prefill_supported("reward", rows));
         let pool = StagePool::spawn("reward", replicas, queue_depth, |_replica| {
             let engine = engine.clone();
+            let rows = sliced_rows.unwrap_or(g);
             move || {
                 let ops = RewardOps::new(engine)?;
-                let state = ops.fresh_state()?;
-                Ok(RewardHandler { ops, state })
+                let state = ops.fresh_state_rows(rows)?;
+                Ok(RewardHandler { ops, state, rows })
             }
         })?;
-        Ok(Self { pool })
+        Ok(Self { pool, sliced_rows })
     }
 
     pub fn replicas(&self) -> usize {
         self.pool.replicas()
+    }
+
+    /// Compacted rows per replica when the pool runs sliced entries.
+    pub fn sliced_rows(&self) -> Option<usize> {
+        self.sliced_rows
     }
 
     /// The replica owning `lane`'s KV state.
@@ -268,6 +363,8 @@ pub enum RefResp {
 struct RefHandler {
     ops: RefOps,
     state: RefStreamState,
+    /// KV/boundary rows this replica's state holds (G or G/N)
+    rows: usize,
 }
 
 impl StageHandler for RefHandler {
@@ -277,7 +374,7 @@ impl StageHandler for RefHandler {
     fn handle(&mut self, req: RefReq) -> Result<RefResp> {
         match req {
             RefReq::Reset => {
-                self.state = self.ops.fresh_state()?;
+                self.state = self.ops.fresh_state_rows(self.rows)?;
                 Ok(RefResp::ResetDone)
             }
             RefReq::Stream { entry, chunk, start, n_valid } => Ok(RefResp::StreamLogps(
@@ -291,6 +388,8 @@ impl StageHandler for RefHandler {
 /// owning an independent `RefOps` plus its own KV + boundary seam state.
 pub struct RefWorker {
     pool: StagePool<RefReq, RefResp>,
+    /// `Some(G/N)` when this pool runs the lane-sliced entries.
+    sliced_rows: Option<usize>,
 }
 
 impl RefWorker {
@@ -300,25 +399,36 @@ impl RefWorker {
 
     /// Spawn `replicas` reference workers with sequence-affinity routing
     /// (`lane % replicas` — the boundary log-softmax seam is per-lane state
-    /// that must stay on one replica).
+    /// that must stay on one replica).  Sliced entries are selected exactly
+    /// as in [`RewardWorker::spawn_replicated`].
     pub fn spawn_replicated(
         engine: Arc<Engine>,
         replicas: usize,
         queue_depth: usize,
     ) -> Result<Self> {
+        let g = engine.manifest().shape.lanes;
+        let sliced_rows = (replicas > 1 && g % replicas == 0)
+            .then(|| g / replicas)
+            .filter(|&rows| engine.manifest().sliced_prefill_supported("ref", rows));
         let pool = StagePool::spawn("ref", replicas, queue_depth, |_replica| {
             let engine = engine.clone();
+            let rows = sliced_rows.unwrap_or(g);
             move || {
                 let ops = RefOps::new(engine)?;
-                let state = ops.fresh_state()?;
-                Ok(RefHandler { ops, state })
+                let state = ops.fresh_state_rows(rows)?;
+                Ok(RefHandler { ops, state, rows })
             }
         })?;
-        Ok(Self { pool })
+        Ok(Self { pool, sliced_rows })
     }
 
     pub fn replicas(&self) -> usize {
         self.pool.replicas()
+    }
+
+    /// Compacted rows per replica when the pool runs sliced entries.
+    pub fn sliced_rows(&self) -> Option<usize> {
+        self.sliced_rows
     }
 
     pub fn replica_for_lane(&self, lane: usize) -> usize {
@@ -369,14 +479,26 @@ impl RefWorker {
 // fan-out facade
 // ---------------------------------------------------------------------------
 
-/// Ref sink bookkeeping: responses are raw `[G, C]` log-prob grids, so the
-/// per-request `(start, n_valid, c)` metadata rides a FIFO alongside the
-/// in-flight requests — one FIFO **per replica**, because each replica
-/// answers strictly in its own submission order while responses from
-/// different replicas may interleave (they touch disjoint lane sets).
+/// Per-request bookkeeping for the ref sink's scatter-back: the response
+/// is a raw row-major log-prob grid, so the request's row metadata — and
+/// the row → absolute-lane map when the grid is compacted — must ride
+/// alongside.
+struct RefMeta {
+    start: Vec<i32>,
+    n_valid: Vec<i32>,
+    c: usize,
+    /// row → absolute lane (identity on the masked full-shape path)
+    lane_map: Vec<usize>,
+}
+
+/// Ref sink bookkeeping: responses are raw `[rows, C]` log-prob grids, so
+/// the per-request [`RefMeta`] rides a FIFO alongside the in-flight
+/// requests — one FIFO **per replica**, because each replica answers
+/// strictly in its own submission order while responses from different
+/// replicas may interleave (they touch disjoint lane sets).
 pub struct RefSink {
     worker: RefWorker,
-    meta: Vec<VecDeque<(Vec<i32>, Vec<i32>, usize)>>,
+    meta: Vec<VecDeque<RefMeta>>,
 }
 
 impl RefSink {
@@ -395,24 +517,25 @@ impl RefSink {
     }
 
     fn apply(&mut self, replica: usize, buf: &mut SeqBuffer, logps: Vec<f32>) -> Result<()> {
-        let (start, n_valid, c) = self.meta[replica]
+        let meta = self.meta[replica]
             .pop_front()
             .context("ref stage response without a matching request")?;
-        for lane in 0..start.len() {
-            let nv = n_valid[lane] as usize;
+        let c = meta.c;
+        for (row, &lane) in meta.lane_map.iter().enumerate() {
+            let nv = meta.n_valid[row] as usize;
             if nv == 0 {
                 continue;
             }
             let seq = buf
                 .by_lane_mut(lane)
                 .with_context(|| format!("ref response for vacated lane {lane}"))?;
-            let st = start[lane] as usize;
+            let st = meta.start[row] as usize;
             ensure!(
                 seq.ref_logp.len() == st,
                 "ref stream discontinuity on lane {lane}: have {} positions, chunk starts at {st}",
                 seq.ref_logp.len()
             );
-            seq.ref_logp.extend_from_slice(&logps[lane * c..lane * c + nv]);
+            seq.ref_logp.extend_from_slice(&logps[row * c..row * c + nv]);
         }
         Ok(())
     }
@@ -448,22 +571,32 @@ impl StreamSink {
     /// Submit one streamed chunk to this stage: one sub-request per replica
     /// that owns any valid lane in the chunk (typed per-stage request),
     /// delivered through the pool's two-phase fan-out — a busy replica
-    /// delays only its own feeding (see [`StagePool::fan_out`]).
+    /// delays only its own feeding (see [`StagePool::fan_out`]).  Pools
+    /// whose artifacts ship lane-sliced entries get the compacted
+    /// `[G/N, C]` grid + sliced entry name; otherwise the masked
+    /// full-shape fallback.
     pub fn submit_chunk(&mut self, ck: &StreamChunk) -> Result<()> {
         match self {
             StreamSink::Reward(w) => {
                 let n = w.replicas();
+                let sliced = w.sliced_rows().is_some();
                 let mut parts = Vec::new();
                 for r in 0..n {
-                    let Some(part) = ck.for_replica(r, n) else { continue };
+                    let Some(part) = ck.for_replica(r, n, sliced) else { continue };
+                    let entry = if sliced {
+                        format!("reward_prefill_chunk_g{}_c{}", part.lane_map.len(), part.chunk.c)
+                    } else {
+                        format!("reward_prefill_chunk_c{}", part.chunk.c)
+                    };
                     parts.push((
                         r,
                         RewardReq::Stream {
-                            entry: format!("reward_prefill_chunk_c{}", part.c),
-                            chunk: part.tokens,
-                            start: part.start,
-                            n_valid: part.n_valid,
-                            picks: part.picks,
+                            entry,
+                            chunk: part.chunk.tokens,
+                            start: part.chunk.start,
+                            n_valid: part.chunk.n_valid,
+                            picks: part.chunk.picks,
+                            lane_map: part.lane_map,
                         },
                     ));
                 }
@@ -471,21 +604,32 @@ impl StreamSink {
             }
             StreamSink::Ref(s) => {
                 let n = s.worker.replicas();
+                let sliced = s.worker.sliced_rows().is_some();
                 let mut parts = Vec::new();
                 for r in 0..n {
-                    let Some(part) = ck.for_replica(r, n) else { continue };
+                    let Some(part) = ck.for_replica(r, n, sliced) else { continue };
+                    let entry = if sliced {
+                        format!("ref_prefill_chunk_g{}_c{}", part.lane_map.len(), part.chunk.c)
+                    } else {
+                        format!("ref_prefill_chunk_c{}", part.chunk.c)
+                    };
                     // meta rides in per-replica submission order; each
                     // replica gets at most one part per chunk, so pushing at
                     // build time keeps the FIFO aligned whichever fan-out
                     // phase actually enqueues the part
-                    s.meta[r].push_back((part.start.clone(), part.n_valid.clone(), part.c));
+                    s.meta[r].push_back(RefMeta {
+                        start: part.chunk.start.clone(),
+                        n_valid: part.chunk.n_valid.clone(),
+                        c: part.chunk.c,
+                        lane_map: part.lane_map,
+                    });
                     parts.push((
                         r,
                         RefReq::Stream {
-                            entry: format!("ref_prefill_chunk_c{}", part.c),
-                            chunk: part.tokens,
-                            start: part.start,
-                            n_valid: part.n_valid,
+                            entry,
+                            chunk: part.chunk.tokens,
+                            start: part.chunk.start,
+                            n_valid: part.chunk.n_valid,
                         },
                     ));
                 }
@@ -589,25 +733,27 @@ mod tests {
     #[test]
     fn for_replica_is_the_identity_with_one_replica() {
         let ck = chunk();
-        let part = ck.for_replica(0, 1).unwrap();
-        assert_eq!(part.n_valid, ck.n_valid);
-        assert_eq!(part.tokens, ck.tokens);
-        assert_eq!(part.picks.len(), ck.picks.len());
+        let part = ck.for_replica(0, 1, false).unwrap();
+        assert_eq!(part.chunk.n_valid, ck.n_valid);
+        assert_eq!(part.chunk.tokens, ck.tokens);
+        assert_eq!(part.chunk.picks.len(), ck.picks.len());
+        assert_eq!(part.lane_map, vec![0, 1, 2, 3, 4, 5]);
     }
 
     #[test]
-    fn for_replica_masks_unowned_lanes_and_filters_picks() {
+    fn masked_split_masks_unowned_lanes_and_filters_picks() {
         let ck = chunk();
-        let even = ck.for_replica(0, 2).unwrap();
-        assert_eq!(even.n_valid, vec![4, 0, 2, 0, 1, 0]);
-        assert_eq!(even.picks.len(), 2, "picks on lanes 0 and 4 are owned");
-        assert!(even.picks.iter().all(|p| p.lane % 2 == 0));
-        let odd = ck.for_replica(1, 2).unwrap();
-        assert_eq!(odd.n_valid, vec![0, 0, 0, 4, 0, 3]);
-        assert!(odd.picks.is_empty());
+        let even = ck.for_replica(0, 2, false).unwrap();
+        assert_eq!(even.chunk.n_valid, vec![4, 0, 2, 0, 1, 0]);
+        assert_eq!(even.chunk.picks.len(), 2, "picks on lanes 0 and 4 are owned");
+        assert!(even.chunk.picks.iter().all(|p| p.lane % 2 == 0));
+        assert_eq!(even.lane_map, vec![0, 1, 2, 3, 4, 5], "masked lane map is identity");
+        let odd = ck.for_replica(1, 2, false).unwrap();
+        assert_eq!(odd.chunk.n_valid, vec![0, 0, 0, 4, 0, 3]);
+        assert!(odd.chunk.picks.is_empty());
         // the split is a partition: every valid token owned exactly once
         for lane in 0..6 {
-            assert_eq!(even.n_valid[lane] + odd.n_valid[lane], ck.n_valid[lane]);
+            assert_eq!(even.chunk.n_valid[lane] + odd.chunk.n_valid[lane], ck.n_valid[lane]);
         }
     }
 
@@ -615,7 +761,66 @@ mod tests {
     fn for_replica_elides_replicas_with_nothing_to_do() {
         let mut ck = chunk();
         ck.n_valid = vec![4, 0, 2, 0, 1, 0]; // odd lanes all idle
-        assert!(ck.for_replica(1, 2).is_none(), "no owned valid lane => no request");
-        assert!(ck.for_replica(0, 2).is_some());
+        assert!(ck.for_replica(1, 2, false).is_none(), "no owned valid lane => no request");
+        assert!(ck.for_replica(0, 2, false).is_some());
+        assert!(ck.for_replica(1, 2, true).is_none(), "compacted path elides too");
+        assert!(ck.for_replica(0, 2, true).is_some());
+    }
+
+    #[test]
+    fn compaction_packs_owned_lanes_and_rewrites_picks() {
+        let ck = chunk();
+        let even = ck.for_replica(0, 2, true).unwrap();
+        assert_eq!(even.lane_map, vec![0, 2, 4], "rows are the owned lanes in order");
+        assert_eq!(even.chunk.lanes(), 3);
+        assert_eq!(even.chunk.n_valid, vec![4, 2, 1]);
+        // tokens copied row-wise from the absolute lanes
+        for (row, &lane) in even.lane_map.iter().enumerate() {
+            assert_eq!(
+                even.chunk.tokens[row * 4..(row + 1) * 4],
+                ck.tokens[lane * 4..(lane + 1) * 4]
+            );
+        }
+        // picks rewritten into row coordinates: abs lanes 0, 4 → rows 0, 2
+        let rows: Vec<usize> = even.chunk.picks.iter().map(|p| p.lane).collect();
+        assert_eq!(rows, vec![0, 2]);
+        // the lane map inverts the rewrite
+        for (p, orig) in even.chunk.picks.iter().zip(&ck.picks) {
+            assert_eq!(even.lane_map[p.lane], orig.lane);
+            assert_eq!(p.idx_in_chunk, orig.idx_in_chunk);
+        }
+        let odd = ck.for_replica(1, 2, true).unwrap();
+        assert_eq!(odd.lane_map, vec![1, 3, 5]);
+        assert_eq!(odd.chunk.n_valid, vec![0, 4, 3], "idle owned lanes keep their row");
+        assert!(odd.chunk.picks.is_empty());
+    }
+
+    #[test]
+    fn compaction_partitions_every_valid_token() {
+        let ck = chunk();
+        for n in [2, 3, 6] {
+            let mut seen = vec![0i32; 6];
+            for r in 0..n {
+                let Some(part) = ck.for_replica(r, n, true) else { continue };
+                for (row, &lane) in part.lane_map.iter().enumerate() {
+                    assert_eq!(lane % n, r, "row owned by the routing rule");
+                    seen[lane] += part.chunk.n_valid[row];
+                }
+            }
+            assert_eq!(seen, ck.n_valid, "n={n}");
+        }
+    }
+
+    #[test]
+    fn compaction_row_binding_is_stable_across_chunks() {
+        // the same lane must land on the same row every chunk — the
+        // replica's KV/seam state is indexed by row
+        let mut ck = chunk();
+        let first = ck.for_replica(1, 3, true).unwrap();
+        ck.n_valid = vec![0, 2, 0, 0, 4, 0]; // different activity pattern
+        ck.picks.clear();
+        let second = ck.for_replica(1, 3, true).unwrap();
+        assert_eq!(first.lane_map, second.lane_map);
+        assert_eq!(first.lane_map, vec![1, 4]);
     }
 }

@@ -204,6 +204,37 @@ impl Manifest {
                 }
             }
         }
+        // lane-sliced variants must be internally consistent: rows divides
+        // lanes, the chunk size is compiled, and each (stage, rows) pair
+        // covers every chunk size — a pool commits to the sliced path at
+        // spawn time, so partial coverage would strand it mid-run.
+        let mut sliced: BTreeMap<(&str, usize), Vec<usize>> = BTreeMap::new();
+        for name in self.entries.keys() {
+            let Some((stage, rows, c)) = parse_sliced_entry(name) else { continue };
+            if rows == 0 || self.shape.lanes % rows != 0 {
+                bail!(
+                    "sliced entry {name:?}: {rows} rows does not divide lanes {}",
+                    self.shape.lanes
+                );
+            }
+            if !self.shape.chunk_sizes.contains(&c) {
+                bail!("sliced entry {name:?}: chunk size {c} not in chunk_sizes");
+            }
+            if !name.contains("_pallas_") {
+                sliced.entry((stage, rows)).or_default().push(c);
+            }
+        }
+        let mut want = self.shape.chunk_sizes.clone();
+        want.sort_unstable();
+        for ((stage, rows), mut cs) in sliced {
+            cs.sort_unstable();
+            if cs != want {
+                bail!(
+                    "sliced {stage} prefill at {rows} rows covers chunk sizes \
+                     {cs:?}, expected all of {want:?}"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -237,6 +268,50 @@ impl Manifest {
                 .map(|c| (k.as_str(), c))
         })
     }
+
+    /// The lane-sliced prefill entry for `stage` ("reward" | "ref") at
+    /// `rows` compacted lanes and chunk size `c`, if shipped.
+    pub fn sliced_prefill_entry(&self, stage: &str, rows: usize, c: usize) -> Option<String> {
+        let name = format!("{stage}_prefill_chunk_g{rows}_c{c}");
+        self.entries.contains_key(&name).then_some(name)
+    }
+
+    /// Do the artifacts ship sliced `stage` prefill at `rows` for EVERY
+    /// compiled chunk size?  Replica pools decide masked-vs-sliced once at
+    /// spawn, so the sliced path needs full chunk-size coverage.
+    pub fn sliced_prefill_supported(&self, stage: &str, rows: usize) -> bool {
+        rows > 0
+            && self.shape.chunk_sizes.iter().all(|c| {
+                self.entries.contains_key(&format!("{stage}_prefill_chunk_g{rows}_c{c}"))
+            })
+    }
+
+    /// The sliced Pallas reward entry at `rows`, if shipped.
+    pub fn pallas_sliced_reward_entry(&self, rows: usize) -> Option<(&str, usize)> {
+        let prefix = format!("reward_prefill_chunk_pallas_g{rows}_c");
+        self.entries.keys().find_map(|k| {
+            k.strip_prefix(prefix.as_str())
+                .and_then(|c| c.parse::<usize>().ok())
+                .map(|c| (k.as_str(), c))
+        })
+    }
+}
+
+/// Parse `{stage}_prefill_chunk[_pallas]_g{rows}_c{c}` entry names.
+fn parse_sliced_entry(name: &str) -> Option<(&'static str, usize, usize)> {
+    for stage in ["reward", "ref"] {
+        let Some(rest) = name.strip_prefix(stage) else { continue };
+        let rest = rest
+            .strip_prefix("_prefill_chunk")
+            .map(|r| r.strip_prefix("_pallas").unwrap_or(r));
+        let Some(rest) = rest.and_then(|r| r.strip_prefix("_g")) else { continue };
+        let (rows, c) = rest.split_once("_c")?;
+        return match (rows.parse(), c.parse()) {
+            (Ok(rows), Ok(c)) => Some((stage, rows, c)),
+            _ => None,
+        };
+    }
+    None
 }
 
 #[cfg(test)]
@@ -274,5 +349,42 @@ mod tests {
     fn missing_dir_is_helpful() {
         let err = Manifest::load("/nonexistent/path").unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn sliced_entry_names_parse() {
+        assert_eq!(parse_sliced_entry("reward_prefill_chunk_g6_c16"), Some(("reward", 6, 16)));
+        assert_eq!(parse_sliced_entry("ref_prefill_chunk_g3_c8"), Some(("ref", 3, 8)));
+        assert_eq!(
+            parse_sliced_entry("reward_prefill_chunk_pallas_g4_c16"),
+            Some(("reward", 4, 16))
+        );
+        assert_eq!(parse_sliced_entry("reward_prefill_chunk_c16"), None);
+        assert_eq!(parse_sliced_entry("reward_prefill_chunk_pallas_c16"), None);
+        assert_eq!(parse_sliced_entry("actor_generate_chunk_c8"), None);
+        assert_eq!(parse_sliced_entry("reward_prefill_chunk_g_cx"), None);
+    }
+
+    #[test]
+    fn sliced_entries_ship_for_divisor_replica_counts() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let g = m.shape.lanes;
+        for n in 2..=g {
+            if g % n != 0 {
+                continue;
+            }
+            let rows = g / n;
+            assert!(m.sliced_prefill_supported("reward", rows), "reward rows={rows}");
+            assert!(m.sliced_prefill_supported("ref", rows), "ref rows={rows}");
+            for c in &m.shape.chunk_sizes {
+                let e = m.sliced_prefill_entry("reward", rows, *c).unwrap();
+                assert_eq!(m.entry(&e).unwrap().inputs[m.n_params].shape, vec![rows, *c]);
+            }
+            assert!(m.pallas_sliced_reward_entry(rows).is_some(), "pallas rows={rows}");
+        }
+        // non-divisor row counts are absent → masked fallback
+        assert!(!m.sliced_prefill_supported("reward", g + 1));
+        assert!(!m.sliced_prefill_supported("reward", 0));
     }
 }

@@ -92,6 +92,29 @@ impl CostModel {
             + 4.0 * self.model.n_layers * self.model.hidden * tokens * mean_ctx
     }
 
+    /// Per-replica seconds for one member of an N-way **lane-sliced**
+    /// prefill pool.  Sliced `[G/N, C]` entry variants hand each replica
+    /// only its owned lanes, so the compute term divides by the pool size —
+    /// but every replica still streams the full weight set, so the
+    /// bandwidth floor of [`CostModel::prefill`] does not divide.  That
+    /// floor is the slicing knee: once `compute / N` sinks under it, a
+    /// bigger pool buys nothing even on independent devices.
+    /// (`min_replicas_actor_bound` reports whichever knee binds first,
+    /// this one or the actor.)
+    pub fn sliced_prefill(&self, tokens: f64, mean_ctx: f64, replicas: f64) -> f64 {
+        self.prefill(tokens / replicas.max(1.0), mean_ctx)
+    }
+
+    /// Per-replica seconds when the pool falls back to **masked**
+    /// full-shape `[G, C]` entries (non-divisor replica count, or
+    /// artifacts predating the sliced variants): each replica executes the
+    /// whole grid and discards unowned lanes, so pool FLOPs multiply by N
+    /// instead of dividing — replication then pays off only through
+    /// overlap on independent execution resources.
+    pub fn masked_prefill(&self, tokens: f64, mean_ctx: f64) -> f64 {
+        self.prefill(tokens, mean_ctx)
+    }
+
     fn hidden_sq(&self) -> f64 {
         self.model.hidden * self.model.hidden
     }
@@ -170,6 +193,23 @@ mod tests {
         let local = m.train_step(10_000.0, 8.0, 0.0);
         let cross = m.train_step(10_000.0, 8.0, 100.0); // 100 Gb/s IB
         assert!(cross > local * 1.5, "local {local}, cross {cross}");
+    }
+
+    #[test]
+    fn sliced_prefill_divides_compute_until_the_bandwidth_floor() {
+        let m = cm();
+        let (tokens, ctx) = (16_384.0, 512.0);
+        let t1 = m.sliced_prefill(tokens, ctx, 1.0);
+        assert_eq!(t1, m.prefill(tokens, ctx), "1-replica slice is the full grid");
+        assert_eq!(m.masked_prefill(tokens, ctx), t1, "masked replicas pay the full grid");
+        let t4 = m.sliced_prefill(tokens, ctx, 4.0);
+        assert!(t4 < t1 / 2.0, "4-way slice {t4} vs full {t1}");
+        // the weight-streaming floor does not divide: huge pools converge
+        // to it instead of scaling compute down forever
+        let floor = m.model.weight_bytes() / (m.gpu.hbm_gbps * 1e9 * m.tp);
+        let t_big = m.sliced_prefill(tokens, ctx, 4096.0);
+        assert!((t_big - floor).abs() <= 1e-12 * floor, "t_big {t_big} vs floor {floor}");
+        assert!(t_big > t1 / 4096.0, "the floor must bind before perfect scaling");
     }
 
     #[test]

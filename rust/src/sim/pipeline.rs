@@ -79,12 +79,17 @@ pub struct SimConfig {
     /// `coordinator::delta` module docs — Eq4 is the default)
     pub delta_policy: Policy,
     /// Replicated reward stage (the coordinator's `reward_replicas`):
-    /// sequence-affine replicas prefill disjoint lane subsets concurrently,
-    /// dividing the reward-prefill *wall* time (total work is conserved).
-    /// Assumes replicas run on independent execution resources — separate
-    /// devices/streams or lane-sliced entries; the current fixed-shape
-    /// kernels on one shared device would not deliver this division.
+    /// sequence-affine replicas prefill disjoint lane subsets concurrently
+    /// via lane-sliced `[G/N, C]` entries, dividing the prefill *compute*
+    /// by the pool size (total useful work is conserved).  The division is
+    /// priced through [`CostModel::sliced_prefill`], so the non-dividing
+    /// weight-streaming floor caps how far replication scales.
     pub reward_replicas: usize,
+    /// Replicated reference stage (the coordinator's `ref_replicas`),
+    /// modeled exactly like [`SimConfig::reward_replicas`]: sliced entries
+    /// divide the ref-prefill compute while the actor-colocated value
+    /// prefill keeps its single worker.
+    pub ref_replicas: usize,
 }
 
 impl SimConfig {
@@ -97,6 +102,7 @@ impl SimConfig {
             window: 8,
             delta_policy: Policy::Eq4,
             reward_replicas: 1,
+            ref_replicas: 1,
         }
     }
 }
@@ -302,18 +308,30 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
 
         // ---- scoring ----
         // N sequence-affine replicas prefill disjoint lane subsets
-        // concurrently: wall time divides by the pool size, work does not.
-        // Only the *streamed* reward stage is pooled in the coordinator, so
-        // non-intra schedules (monolithic scoring) keep a single worker.
+        // concurrently through sliced [G/N, C] entries: compute divides by
+        // the pool size, useful work does not, and the weight-streaming
+        // floor inside `sliced_prefill` caps the division.  Only the
+        // *streamed* stages are pooled in the coordinator, so non-intra
+        // schedules (monolithic scoring) keep a single worker.
         let replicas = if intra { cfg.reward_replicas.max(1) as f64 } else { 1.0 };
         let reward_prefill_work =
             if su.use_reward_model { score_cm.prefill(total_tokens, mean_seq) } else { 0.0 };
-        let reward_prefill = reward_prefill_work / replicas;
+        let reward_prefill = if su.use_reward_model {
+            score_cm.sliced_prefill(total_tokens, mean_seq, replicas)
+        } else {
+            0.0
+        };
         // third pipeline stage: reference-model prefill, costed separately
         // from the actor-colocated value prefill (their sum equals the old
-        // combined ref+value term exactly)
-        let ref_prefill = train_cm.prefill(total_tokens, mean_seq) / su.cluster.n_gen as f64;
-        let value_prefill = ref_prefill;
+        // combined ref+value term exactly).  The ref pool divides the same
+        // way the reward pool does; value keeps its single actor-colocated
+        // worker.
+        let ref_replicas = if intra { cfg.ref_replicas.max(1) as f64 } else { 1.0 };
+        let ref_prefill_work =
+            train_cm.prefill(total_tokens, mean_seq) / su.cluster.n_gen as f64;
+        let ref_prefill = train_cm.sliced_prefill(total_tokens, mean_seq, ref_replicas)
+            / su.cluster.n_gen as f64;
+        let value_prefill = ref_prefill_work;
         let ref_value_prefill = ref_prefill + value_prefill;
         let (exposed_reward, hidden_reward) = if intra && su.use_reward_model {
             // streamed scoring drains during the generation window.  Exposed:
@@ -328,7 +346,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         } else {
             (reward_prefill, 0.0)
         };
-        let (exposed_rv, hidden_rv) = if intra {
+        let (exposed_rv, _hidden_rv) = if intra {
             let hidden = (0.85 * ref_value_prefill).min((gen_time - hidden_reward).max(0.0));
             (ref_value_prefill - hidden, hidden)
         } else {
@@ -387,7 +405,9 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         // total scoring work the pool performed
         busy += hidden_reward * replicas * n_score.max(1.0) * 0.85; // streamed scoring inside gen window
         busy += exposed_reward * replicas * n_score.max(1.0) * 0.85;
-        busy += (exposed_rv + hidden_rv) * n_gen * 0.75;
+        // ref+value busy from conserved work (not wall): the ref pool's
+        // replicas jointly perform ref_prefill_work whatever the pool size
+        busy += (ref_prefill_work + value_prefill) * n_gen * 0.75;
         busy += train_time * n_gen * 0.70;
         busy += const_s * total_gpus * 0.05;
         let util_val = (busy / (step_time * total_gpus)).min(1.0);
@@ -435,7 +455,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             stages: vec![
                 stage_row("actor", 1, gen_time, n_fin),
                 stage_row("reward", replicas as usize, reward_prefill_work, n_fin),
-                stage_row("ref", 1, ref_prefill, n_fin),
+                stage_row("ref", ref_replicas as usize, ref_prefill_work, n_fin),
                 stage_row("value", 1, value_prefill, n_fin),
                 stage_row("train", 1, train_time, 1),
             ],
@@ -464,7 +484,11 @@ fn pipeline_gen_eff_factor(p: Pipeline) -> f64 {
 /// streamed scoring is **actor-bound**: adding one more replica improves
 /// OPPO's steady-state step latency by less than `tol` (relative).  This is
 /// the planning question the replica pool answers — "how many scorer
-/// replicas until the actor is the bottleneck again?"  Returns
+/// replicas until the actor is the bottleneck again?"  With lane-sliced
+/// entries the sweep prices per-replica compute as `G/N` through
+/// [`CostModel::sliced_prefill`], so the returned knee also reflects the
+/// weight-streaming floor that slicing cannot divide — whichever bound
+/// (actor window or bandwidth floor) binds first ends the sweep.  Returns
 /// `max_replicas` if the knee is never reached within the sweep.
 pub fn min_replicas_actor_bound(cfg: &SimConfig, max_replicas: usize, tol: f64) -> usize {
     let lat = |n: usize| {
@@ -656,6 +680,51 @@ mod tests {
             // busy records total pool work, which replication must conserve
             assert!((rp.busy_s - rs.busy_s).abs() < 1e-9, "{} vs {}", rp.busy_s, rs.busy_s);
             // and the pooled step is never slower
+            assert!(p.wall_s <= s.wall_s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn ref_replicas_divide_ref_prefill_like_the_reward_pool() {
+        let base = SimConfig::new(presets::stackex_7b_h200(), 60, 19);
+        let lat = |n: usize| {
+            let mut c = base.clone();
+            c.ref_replicas = n;
+            steady_state_latency(&simulate(Pipeline::oppo(), &c))
+        };
+        let l1 = lat(1);
+        let l4 = lat(4);
+        assert!(l4 < l1, "4 ref replicas must beat 1: {l1} -> {l4}");
+        let l16 = lat(16);
+        assert!(l16 <= l4, "more ref replicas never slow the step: {l4} -> {l16}");
+    }
+
+    #[test]
+    fn ref_replicas_do_not_speed_up_non_streamed_baselines() {
+        let mut cfg = SimConfig::new(presets::stackex_7b_h200(), 30, 17);
+        let base = steady_state_latency(&simulate(Pipeline::TrlSequential, &cfg));
+        cfg.ref_replicas = 6;
+        let pooled = steady_state_latency(&simulate(Pipeline::TrlSequential, &cfg));
+        assert_eq!(base, pooled, "baseline latency must ignore ref_replicas");
+    }
+
+    #[test]
+    fn ref_pool_conserves_prefill_work_and_records_replicas() {
+        let mut cfg = SimConfig::new(presets::stackex_7b_h200(), 20, 23);
+        cfg.ref_replicas = 3;
+        let pooled = simulate(Pipeline::oppo(), &cfg);
+        cfg.ref_replicas = 1;
+        let single = simulate(Pipeline::oppo(), &cfg);
+        for (p, s) in pooled.records.iter().zip(&single.records) {
+            let find = |r: &StepRecord, name: &str| -> StageTiming {
+                r.stages.iter().find(|st| st.name == name).unwrap().clone()
+            };
+            let rp = find(p, "ref");
+            let rs = find(s, "ref");
+            assert_eq!(rp.replicas, 3);
+            assert_eq!(rs.replicas, 1);
+            // busy records total pool work, which replication must conserve
+            assert!((rp.busy_s - rs.busy_s).abs() < 1e-9, "{} vs {}", rp.busy_s, rs.busy_s);
             assert!(p.wall_s <= s.wall_s + 1e-9);
         }
     }

@@ -7,7 +7,7 @@ use oppo::coordinator::buffer::SeqBuffer;
 use oppo::coordinator::chunkctl::ChunkController;
 use oppo::coordinator::delta::{DeltaController, Policy};
 use oppo::coordinator::stage::{StageHandler, StagePool};
-use oppo::coordinator::worker::{Pick, StreamChunk};
+use oppo::coordinator::worker::{Pick, ReplicaPart, StreamChunk};
 use oppo::data::tasks::{Prompt, TaskKind};
 use oppo::model::sequence::SeqPhase;
 use oppo::util::proptest::{forall, forall_vec, Config};
@@ -113,25 +113,27 @@ fn buffer_invariants_hold_under_random_schedules() {
 /// Replica-pool routing property: across an arbitrary streamed-chunk
 /// schedule, no two chunks of one sequence (lane) may ever reach different
 /// replicas — the replica holds that lane's KV/seam state.  Exercises the
-/// real [`StagePool`] + [`StreamChunk::for_replica`] path with recording
-/// handlers on live worker threads.
+/// real [`StagePool`] + [`StreamChunk::for_replica`] path (both the masked
+/// full-shape split and, for divisor replica counts, the lane-compacted
+/// one) with recording handlers on live worker threads.
 #[test]
 fn pool_routing_never_splits_a_sequence_across_replicas() {
     struct Recorder {
         replica: usize,
-        /// (replica, lanes-with-valid-tokens) per handled request
+        /// (replica, absolute-lanes-with-valid-tokens) per handled request
         log: Arc<Mutex<Vec<(usize, Vec<usize>)>>>,
     }
     impl StageHandler for Recorder {
-        type Req = StreamChunk;
+        type Req = ReplicaPart;
         type Resp = ();
-        fn handle(&mut self, ck: StreamChunk) -> anyhow::Result<()> {
-            let lanes: Vec<usize> = ck
+        fn handle(&mut self, part: ReplicaPart) -> anyhow::Result<()> {
+            let lanes: Vec<usize> = part
+                .chunk
                 .n_valid
                 .iter()
                 .enumerate()
                 .filter(|(_, &nv)| nv > 0)
-                .map(|(l, _)| l)
+                .map(|(row, _)| part.lane_map[row])
                 .collect();
             self.log.lock().unwrap().push((self.replica, lanes));
             Ok(())
@@ -145,16 +147,19 @@ fn pool_routing_never_splits_a_sequence_across_replicas() {
             let replicas = rng.range_usize(1, 5);
             let lanes = rng.range_usize(1, 13);
             let c = 4 << rng.range_usize(0, 3);
+            let want_sliced = rng.range(0, 2) == 1;
             // per-chunk, per-lane count of valid tokens (0 = idle lane)
             let valid: Vec<Vec<usize>> = (0..rng.range_usize(1, 9))
                 .map(|_| (0..lanes).map(|_| rng.range_usize(0, c + 1)).collect())
                 .collect();
-            (replicas, lanes, c, valid)
+            (replicas, lanes, c, want_sliced, valid)
         },
-        |(replicas, lanes, c, valid)| {
+        |(replicas, lanes, c, want_sliced, valid)| {
             let (replicas, lanes, c) = (*replicas, *lanes, *c);
+            // the compacted split requires a divisor replica count
+            let sliced = *want_sliced && lanes % replicas == 0;
             let log: Arc<Mutex<Vec<(usize, Vec<usize>)>>> = Arc::new(Mutex::new(Vec::new()));
-            let mut pool: StagePool<StreamChunk, ()> =
+            let mut pool: StagePool<ReplicaPart, ()> =
                 StagePool::spawn("affinity", replicas, 2, |r| {
                     let log = log.clone();
                     move || Ok(Recorder { replica: r, log })
@@ -174,13 +179,13 @@ fn pool_routing_never_splits_a_sequence_across_replicas() {
                         .collect(),
                 };
                 for r in 0..pool.replicas() {
-                    let Some(part) = ck.for_replica(r, pool.replicas()) else { continue };
-                    for p in &part.picks {
-                        if pool.replica_for_lane(p.lane) != r {
-                            return Err(format!(
-                                "pick for lane {} routed to replica {r}",
-                                p.lane
-                            ));
+                    let Some(part) = ck.for_replica(r, pool.replicas(), sliced) else {
+                        continue;
+                    };
+                    for p in &part.chunk.picks {
+                        let abs = part.lane_map[p.lane];
+                        if pool.replica_for_lane(abs) != r {
+                            return Err(format!("pick for lane {abs} routed to replica {r}"));
                         }
                     }
                     pool.submit_to(r, part).map_err(|e| e.to_string())?;
@@ -208,6 +213,119 @@ fn pool_routing_never_splits_a_sequence_across_replicas() {
                         }
                         _ => {}
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Lane-compaction equivalence (DESIGN: lane-sliced stage entries): running
+/// a model of the prefill kernel over each replica's compacted `[G/N, C]`
+/// grid and scattering results back through the part's lane-map must
+/// reproduce the masked full-shape path **exactly** — scores at picks,
+/// streamed per-lane log-probs, and the per-lane seam carry — for
+/// arbitrary G, divisor N, and multi-chunk schedules with ragged lanes.
+#[test]
+fn compacted_grids_scatter_back_to_the_masked_results() {
+    forall(
+        Config { cases: 120, ..Default::default() },
+        "compaction-equivalence",
+        |rng| {
+            let g = rng.range_usize(1, 17);
+            let divisors: Vec<usize> = (1..=g).filter(|n| g % n == 0).collect();
+            let n = *rng.choice(&divisors);
+            let chunks: Vec<(usize, Vec<usize>, Vec<i32>)> = (0..rng.range_usize(1, 7))
+                .map(|_| {
+                    let c = 2 << rng.range_usize(0, 4); // 2..32
+                    let nv: Vec<usize> = (0..g).map(|_| rng.range_usize(0, c + 1)).collect();
+                    let toks: Vec<i32> = (0..g * c).map(|_| rng.range(3, 64) as i32).collect();
+                    (c, nv, toks)
+                })
+                .collect();
+            (g, n, chunks)
+        },
+        |(g, n, chunks)| {
+            let (g, n) = (*g, *n);
+            // kernel model: a grid cell's output depends only on the token
+            // and its absolute sequence position — all the real prefill
+            // entries see (grid row + start offset) — so a correct
+            // compaction is invisible to it and equality is exact
+            let cell = |tok: i32, pos: i32| (tok.wrapping_mul(31) ^ pos.wrapping_mul(7)) as f32;
+
+            // cumulative per-lane starts + a pick at each lane's last valid
+            // token per chunk (the real stream picks once; re-picking per
+            // chunk just checks more scatter paths)
+            let mut start_of = vec![0i32; g];
+            let mut stream: Vec<StreamChunk> = Vec::new();
+            for (c, nv, toks) in chunks {
+                let c = *c;
+                let n_valid: Vec<i32> = nv.iter().map(|&v| v as i32).collect();
+                let picks = nv
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v > 0)
+                    .map(|(l, &v)| Pick { lane: l, idx_in_chunk: v - 1 })
+                    .collect();
+                let start = start_of.clone();
+                for l in 0..g {
+                    start_of[l] += n_valid[l];
+                }
+                stream.push(StreamChunk { c, tokens: toks.clone(), start, n_valid, picks });
+            }
+
+            // run one path: the same sink-side logic consumes masked and
+            // compacted parts — only the grids differ
+            let run = |sliced: bool| {
+                let mut seam = vec![0f32; g];
+                let mut logp: Vec<Vec<f32>> = vec![Vec::new(); g];
+                let mut score: Vec<Option<f32>> = vec![None; g];
+                for ck in &stream {
+                    for r in 0..n {
+                        let Some(part) = ck.for_replica(r, n, sliced) else { continue };
+                        let pc = &part.chunk;
+                        let (rows, c) = (pc.lanes(), pc.c);
+                        let mut out = vec![0f32; rows * c];
+                        for row in 0..rows {
+                            for j in 0..pc.n_valid[row] as usize {
+                                out[row * c + j] =
+                                    cell(pc.tokens[row * c + j], pc.start[row] + j as i32);
+                            }
+                        }
+                        for p in &pc.picks {
+                            score[part.lane_map[p.lane]] = Some(out[p.lane * c + p.idx_in_chunk]);
+                        }
+                        for row in 0..rows {
+                            let nv = pc.n_valid[row] as usize;
+                            if nv == 0 {
+                                continue;
+                            }
+                            let lane = part.lane_map[row];
+                            logp[lane].extend_from_slice(&out[row * c..row * c + nv]);
+                            seam[lane] =
+                                cell(pc.tokens[row * c + nv - 1], pc.start[row] + nv as i32 - 1);
+                        }
+                    }
+                }
+                (seam, logp, score)
+            };
+            let (seam_m, logp_m, score_m) = run(false);
+            let (seam_c, logp_c, score_c) = run(true);
+            for lane in 0..g {
+                if score_c[lane] != score_m[lane] {
+                    return Err(format!(
+                        "lane {lane} score: compacted {:?} vs masked {:?}",
+                        score_c[lane], score_m[lane]
+                    ));
+                }
+                if logp_c[lane] != logp_m[lane] {
+                    return Err(format!("lane {lane} streamed log-probs diverged"));
+                }
+                if seam_c[lane] != seam_m[lane] {
+                    return Err(format!(
+                        "lane {lane} seam: compacted {} vs masked {}",
+                        seam_c[lane], seam_m[lane]
+                    ));
                 }
             }
             Ok(())
