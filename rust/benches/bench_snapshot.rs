@@ -1,22 +1,28 @@
-//! Pinned-seed performance snapshot → `BENCH_6.json`.
+//! Pinned-seed performance snapshot → `BENCH_7.json`.
 //!
 //! Runs the deterministic simulator on the paper's main preset at a fixed
 //! seed and emits a machine-readable snapshot of the metrics this repo's
 //! perf work is judged by: per-stage busy/idle attribution, steady-state
-//! step wall time, streamed-chunk throughput, and the lane-slicing knee
-//! (`min_replicas_actor_bound`).  The sim sections are bit-reproducible on
+//! step wall time, streamed-chunk throughput, the lane-slicing knee
+//! (`min_replicas_actor_bound`), and — new with rolling admission — lane
+//! idle fractions and per-prompt latency percentiles (queue wait / e2e
+//! p50/p95/p99) for the continuous-batching arms against their
+//! step-synchronous baselines.  The sim sections are bit-reproducible on
 //! any machine — same seed, same numbers — so the committed snapshot diffs
-//! cleanly against a re-run; the `host` section (peak RSS, runner wall
-//! time) is machine-dependent and refreshed by each local run.
+//! cleanly against a re-run; the `host` section (peak RSS, hot-path
+//! timings, runner wall time) is machine-dependent and refreshed by each
+//! local run.  `scripts/plot_bench.py` charts the committed `BENCH_*.json`
+//! sequence across PRs.
 //!
 //! Usage:
-//!   cargo bench --bench bench_snapshot              # writes ../BENCH_6.json
+//!   cargo bench --bench bench_snapshot              # writes ../BENCH_7.json
 //!   cargo bench --bench bench_snapshot -- --out /tmp/snap.json
 
 use std::time::Instant;
 
 use oppo::eval::{print_table, Row};
 use oppo::metrics::RunLog;
+use oppo::ppo::gae::gae;
 use oppo::sim::pipeline::{min_replicas_actor_bound, simulate, Pipeline, SimConfig};
 use oppo::sim::presets;
 use oppo::util::json::{self, Value};
@@ -39,11 +45,15 @@ fn scenario(name: &str, log: &RunLog) -> (Value, Row) {
     let tail = &log.records[log.records.len() / 2..];
     let n = tail.len() as f64;
     let (mut wall, mut util, mut chunks, mut gen_tokens) = (0.0, 0.0, 0.0, 0.0);
+    let (mut lane_idle, mut mid_step, mut dropped) = (0.0, 0u64, 0u64);
     for r in tail {
         wall += r.wall_s;
         util += r.util;
         chunks += r.gen_tokens as f64 / r.chunk.max(1) as f64;
         gen_tokens += r.gen_tokens as f64;
+        lane_idle += r.lane_idle_frac;
+        mid_step += r.admitted_mid_step as u64;
+        dropped += r.queue_dropped as u64;
     }
     let mut stages = Vec::new();
     for (i, st0) in tail[0].stages.iter().enumerate() {
@@ -63,18 +73,36 @@ fn scenario(name: &str, log: &RunLog) -> (Value, Row) {
             ("items", json::num(items as f64)),
         ]));
     }
+    // per-prompt SLO percentiles over the *whole* run (latency samples are
+    // too sparse per step to cut at the tail boundary)
+    let slo = match log.slo_summary() {
+        Some(s) => json::obj(vec![
+            ("prompts", json::num(s.prompts as f64)),
+            ("queue_wait_p50", json::num(s.queue_wait_p50)),
+            ("queue_wait_p95", json::num(s.queue_wait_p95)),
+            ("queue_wait_p99", json::num(s.queue_wait_p99)),
+            ("e2e_p50", json::num(s.e2e_p50)),
+            ("e2e_p95", json::num(s.e2e_p95)),
+            ("e2e_p99", json::num(s.e2e_p99)),
+        ]),
+        None => Value::Null,
+    };
     let v = json::obj(vec![
         ("mode", json::s(&log.mode)),
         ("step_wall_s_mean", json::num(wall / n)),
         ("util_mean", json::num(util / n)),
         ("streamed_chunks_per_s", json::num(chunks / wall)),
         ("gen_tokens_per_s", json::num(gen_tokens / wall)),
+        ("lane_idle_frac_mean", json::num(lane_idle / n)),
+        ("admitted_mid_step", json::num(mid_step as f64)),
+        ("queue_dropped", json::num(dropped as f64)),
+        ("slo", slo),
         ("stages", Value::Arr(stages)),
     ]);
     let row = Row::new(name)
         .cell("step_s", wall / n)
         .cell("util", util / n)
-        .cell("chunks_ps", chunks / wall)
+        .cell("lane_idle", lane_idle / n)
         .cell("tok_ps", gen_tokens / wall);
     (v, row)
 }
@@ -83,6 +111,68 @@ fn peak_rss_kb() -> Option<u64> {
     let status = std::fs::read_to_string("/proc/self/status").ok()?;
     let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
     line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn time_it(mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Host hot-path timings (machine-dependent, folded from the perf_hotpath
+/// microbenches so the snapshot captures the coordinator-side cost
+/// trajectory alongside the sim's modelled one).
+fn host_timings() -> Value {
+    use oppo::coordinator::buffer::SeqBuffer;
+    use oppo::data::tasks::{Prompt, TaskKind};
+
+    // buffer churn: admit + finish + take, per op
+    let n = 50_000u64;
+    let buf_secs = time_it(|| {
+        let mut buf = SeqBuffer::new(12, 12);
+        for i in 0..n {
+            let p = Prompt {
+                kind: TaskKind::Arith,
+                text: "1+1=".into(),
+                tokens: vec![1, 5, 40, 5, 44],
+                answer: "2".into(),
+                id: i,
+            };
+            let lane = buf.add(p, i).unwrap();
+            {
+                let s = buf.by_lane_mut(lane).unwrap();
+                s.phase = oppo::model::sequence::SeqPhase::Generating;
+                s.push_token(2, 0.0, 0.0, 2, 8, 100);
+            }
+            buf.mark_finished(lane);
+            assert_eq!(buf.take_finished(1, i).len(), 1);
+        }
+    });
+
+    // Rust GAE mirror over a [8, 160] batch
+    let (b, s) = (8usize, 160usize);
+    let r = vec![0.1f32; b * s];
+    let v = vec![0.05f32; b * s];
+    let m = vec![1.0f32; b * s];
+    let iters = 5_000u64;
+    let gae_secs = time_it(|| {
+        for _ in 0..iters {
+            let _ = gae(&r, &v, &m, b, s, 1.0, 0.95);
+        }
+    });
+
+    // simulator throughput on the heaviest arm
+    let sim_steps = 200usize;
+    let sim_secs = time_it(|| {
+        let c = SimConfig::new(presets::stackex_7b_h200(), sim_steps, 3);
+        let _ = simulate(Pipeline::oppo(), &c);
+    });
+
+    json::obj(vec![
+        ("buffer_ops_per_s", json::num(n as f64 / buf_secs.max(1e-12))),
+        ("gae_8x160_per_s", json::num(iters as f64 / gae_secs.max(1e-12))),
+        ("sim_oppo_steps_per_s", json::num(sim_steps as f64 / sim_secs.max(1e-12))),
+    ])
 }
 
 fn main() {
@@ -95,22 +185,39 @@ fn main() {
         // anything else (--bench, harness flags) is cargo's — ignore
     }
     let out_path = out_path
-        .unwrap_or_else(|| format!("{}/../BENCH_6.json", env!("CARGO_MANIFEST_DIR")));
+        .unwrap_or_else(|| format!("{}/../BENCH_7.json", env!("CARGO_MANIFEST_DIR")));
 
     let t0 = Instant::now();
-    let scenarios: [(&str, Pipeline, usize, usize); 3] = [
-        ("trl", Pipeline::TrlSequential, 1, 1),
-        ("oppo_x1", Pipeline::oppo(), 1, 1),
-        ("oppo_reward4_ref2", Pipeline::oppo(), 4, 2),
-    ];
     let mut rows = Vec::new();
     let mut svals = Vec::new();
-    for (name, p, rr, fr) in scenarios {
-        let log = simulate(p, &cfg(rr, fr));
+    let mut run = |name: &'static str, p: Pipeline, c: SimConfig| {
+        let log = simulate(p, &c);
         let (v, row) = scenario(name, &log);
         svals.push((name, v));
         rows.push(row);
-    }
+    };
+    // the PR-6 baselines, unchanged for cross-PR comparability
+    run("trl", Pipeline::TrlSequential, cfg(1, 1));
+    run("oppo_x1", Pipeline::oppo(), cfg(1, 1));
+    run("oppo_reward4_ref2", Pipeline::oppo(), cfg(4, 2));
+    // rolling admission: saturated (training parity) against the oppo_x1
+    // step-synchronous baseline above — lane idle must drop
+    run("oppo_rolling_saturated", Pipeline::oppo(), cfg(1, 1).rolling_saturated());
+    // Poisson traffic on the calibrated serving preset, step-sync vs
+    // rolling — the rolling arm reports queue-wait/e2e SLO percentiles and
+    // strictly lower lane idle
+    let traffic = presets::traffic_7b_h200();
+    let rate = traffic.arrival_rate;
+    run(
+        "traffic_stepsync",
+        Pipeline::oppo(),
+        SimConfig::new(traffic.clone(), STEPS, SEED),
+    );
+    run(
+        "traffic_rolling_poisson",
+        Pipeline::oppo(),
+        SimConfig::new(traffic, STEPS, SEED).rolling_poisson(rate),
+    );
     let knee = min_replicas_actor_bound(&cfg(1, 1), KNEE_MAX, KNEE_TOL);
 
     let host = json::obj(vec![
@@ -119,6 +226,7 @@ fn main() {
             "peak_rss_kb",
             peak_rss_kb().map(|k| json::num(k as f64)).unwrap_or(Value::Null),
         ),
+        ("timings", host_timings()),
         ("snapshot_wall_ms", json::num(t0.elapsed().as_secs_f64() * 1e3)),
     ]);
     let doc = json::obj(vec![
@@ -135,7 +243,7 @@ fn main() {
     let text = json::to_string(&doc) + "\n";
     std::fs::write(&out_path, &text).expect("write snapshot");
 
-    print_table("BENCH_6 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
+    print_table("BENCH_7 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
     println!("sliced knee: {knee} reward replicas (tol {KNEE_TOL})");
     println!("wrote {out_path}");
 }

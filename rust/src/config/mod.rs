@@ -77,6 +77,47 @@ impl Mode {
     }
 }
 
+/// How prompts are admitted to generation lanes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionMode {
+    /// Legacy step-synchronous loop: lanes refill only at step boundaries,
+    /// pulling straight from the sampler.  The default.
+    Step,
+    /// Rolling admission under saturated arrivals: a freed lane is refilled
+    /// at the next chunk boundary, and a prompt is always available (zero
+    /// queue wait).  Training parity mode — at Δ=0 it is step-for-step
+    /// score-equivalent to `Step`.
+    Saturated,
+    /// Rolling admission under Poisson traffic at `admission_rate` prompts
+    /// per chunk tick, through a bounded queue (serving simulation; the
+    /// queue sheds load past `admission_queue_depth`).
+    Poisson,
+}
+
+impl AdmissionMode {
+    pub fn parse(s: &str) -> Result<AdmissionMode> {
+        Ok(match s {
+            "step" | "sync" => AdmissionMode::Step,
+            "saturated" | "rolling" => AdmissionMode::Saturated,
+            "poisson" | "traffic" => AdmissionMode::Poisson,
+            _ => bail!("unknown admission mode {s:?} (want step|saturated|poisson)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionMode::Step => "step",
+            AdmissionMode::Saturated => "saturated",
+            AdmissionMode::Poisson => "poisson",
+        }
+    }
+
+    /// Does this mode refill lanes mid-step (continuous batching)?
+    pub fn rolling(&self) -> bool {
+        !matches!(self, AdmissionMode::Step)
+    }
+}
+
 /// Configuration for the real-compute training loop (runtime + coordinator).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -130,6 +171,16 @@ pub struct TrainConfig {
     /// no longer keep pace with actor decoding.
     pub reward_replicas: usize,
     pub ref_replicas: usize,
+    /// Prompt admission: `step` (legacy step-synchronous refill),
+    /// `saturated` (rolling admission, prompt always available), or
+    /// `poisson` (rolling admission under simulated traffic).
+    pub admission_mode: AdmissionMode,
+    /// Bound of the arrival queue (prompts), `poisson` mode only; arrivals
+    /// past the bound are shed and counted per step.
+    pub admission_queue_depth: usize,
+    /// Poisson arrival rate in prompts per chunk tick (one tick = one
+    /// `actor_generate_chunk` call), `poisson` mode only.
+    pub admission_rate: f64,
     pub artifacts_dir: String,
     pub log_every: usize,
     /// Where to drop JSON metrics (None = don't write).
@@ -162,6 +213,9 @@ impl Default for TrainConfig {
             stage_queue_depth: 2,
             reward_replicas: 1,
             ref_replicas: 1,
+            admission_mode: AdmissionMode::Step,
+            admission_queue_depth: 64,
+            admission_rate: 1.0,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             out_dir: None,
@@ -209,6 +263,11 @@ impl TrainConfig {
         set!(stage_queue_depth, as_usize);
         set!(reward_replicas, as_usize);
         set!(ref_replicas, as_usize);
+        if let Some(v) = get("admission_mode") {
+            cfg.admission_mode = AdmissionMode::parse(v.as_str()?)?;
+        }
+        set!(admission_queue_depth, as_usize);
+        set!(admission_rate, as_f64);
         set!(log_every, as_usize);
         if let Some(v) = get("task") {
             cfg.task = v.as_str()?.to_string();
@@ -270,6 +329,17 @@ impl TrainConfig {
                 self.reward_replicas, self.ref_replicas
             );
         }
+        if self.admission_queue_depth == 0 {
+            bail!("admission_queue_depth must be >= 1");
+        }
+        if self.admission_mode == AdmissionMode::Poisson
+            && !(self.admission_rate > 0.0 && self.admission_rate.is_finite())
+        {
+            bail!(
+                "poisson admission needs a finite admission_rate > 0 (got {})",
+                self.admission_rate
+            );
+        }
         match self.task.as_str() {
             "arith" | "copy" | "sort" | "mixed" => {}
             t => bail!("unknown task {t:?} (want arith|copy|sort|mixed)"),
@@ -326,6 +396,18 @@ impl TrainConfig {
                 "prompt_max {prompt_max} + max_new_tokens {} + largest chunk {max_chunk} \
                  exceeds s_max {s_max}: the final streamed chunk window would clamp",
                 self.max_new_tokens
+            );
+        }
+        // Under Poisson traffic a queue bound below B makes the partial-
+        // batch path the steady state: the queue can never hold a full
+        // batch's worth of waiting prompts even when arrivals allow it.
+        if self.admission_mode == AdmissionMode::Poisson
+            && self.admission_queue_depth < ppo_batch
+        {
+            bail!(
+                "admission_queue_depth {} < manifest ppo_batch {ppo_batch}: \
+                 a bound below B starves every batch under poisson arrivals",
+                self.admission_queue_depth
             );
         }
         Ok(())
@@ -444,6 +526,57 @@ mod tests {
         let cfg = TrainConfig { mode: Mode::AsyncStale, staleness: 0, ..Default::default() };
         assert!(cfg.validate().is_err());
     }
+
+    #[test]
+    fn admission_knobs_parse_and_validate() {
+        assert_eq!(AdmissionMode::parse("rolling").unwrap(), AdmissionMode::Saturated);
+        assert_eq!(AdmissionMode::parse("step").unwrap(), AdmissionMode::Step);
+        assert_eq!(AdmissionMode::parse("traffic").unwrap(), AdmissionMode::Poisson);
+        assert!(AdmissionMode::parse("teleport").is_err());
+        assert!(!AdmissionMode::Step.rolling());
+        assert!(AdmissionMode::Saturated.rolling() && AdmissionMode::Poisson.rolling());
+
+        let doc = parse::parse(
+            "[run]\nadmission_mode = \"poisson\"\nadmission_queue_depth = 32\n\
+             admission_rate = 0.5",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.admission_mode, AdmissionMode::Poisson);
+        assert_eq!(cfg.admission_queue_depth, 32);
+        assert!((cfg.admission_rate - 0.5).abs() < 1e-12);
+
+        let cfg = TrainConfig { admission_queue_depth: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = TrainConfig {
+            admission_mode: AdmissionMode::Poisson,
+            admission_rate: 0.0,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        // rate is irrelevant outside poisson mode
+        let cfg = TrainConfig { admission_rate: 0.0, ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn poisson_queue_depth_checked_against_manifest_batch() {
+        let cfg = TrainConfig {
+            admission_mode: AdmissionMode::Poisson,
+            admission_queue_depth: 4,
+            ..Default::default()
+        };
+        assert!(cfg.validate_against_manifest(8, 12, &[8, 16, 32], 160, 24).is_err());
+        let cfg = TrainConfig {
+            admission_mode: AdmissionMode::Poisson,
+            admission_queue_depth: 8,
+            ..Default::default()
+        };
+        cfg.validate_against_manifest(8, 12, &[8, 16, 32], 160, 24).unwrap();
+        // step mode is indifferent to a small queue bound
+        let cfg = TrainConfig { admission_queue_depth: 4, ..Default::default() };
+        cfg.validate_against_manifest(8, 12, &[8, 16, 32], 160, 24).unwrap();
+    }
 }
 
 #[cfg(test)]
@@ -456,9 +589,13 @@ mod config_file_tests {
 
     #[test]
     fn shipped_configs_all_parse_and_validate() {
-        for name in
-            ["oppo_default.toml", "trl_baseline.toml", "gsm8k_rule.toml", "async_stale.toml"]
-        {
+        for name in [
+            "oppo_default.toml",
+            "trl_baseline.toml",
+            "gsm8k_rule.toml",
+            "async_stale.toml",
+            "rolling_traffic.toml",
+        ] {
             let cfg = TrainConfig::load(&repo_config(name), &[]).unwrap_or_else(|e| {
                 panic!("configs/{name}: {e:#}");
             });
@@ -483,5 +620,17 @@ mod config_file_tests {
         let cfg = TrainConfig::load(&repo_config("gsm8k_rule.toml"), &[]).unwrap();
         assert_eq!(cfg.reward_model_weight, 0.0);
         assert_eq!(cfg.task, "arith");
+    }
+
+    #[test]
+    fn rolling_traffic_config_is_poisson() {
+        let cfg = TrainConfig::load(&repo_config("rolling_traffic.toml"), &[]).unwrap();
+        assert_eq!(cfg.admission_mode, AdmissionMode::Poisson);
+        assert!(cfg.admission_mode.rolling());
+        assert!(cfg.admission_rate > 0.0);
+        assert!(cfg.admission_queue_depth >= cfg.batch);
+        // the default run stays on the legacy step-synchronous loop
+        let cfg = TrainConfig::load(&repo_config("oppo_default.toml"), &[]).unwrap();
+        assert_eq!(cfg.admission_mode, AdmissionMode::Step);
     }
 }

@@ -12,6 +12,16 @@
 //!   of inter-step overlap: fast completions are not blocked on stragglers);
 //! * unfinished sequences keep their lane and state across steps
 //!   ("partial work is preserved", §3.2).
+//!
+//! Rolling admission (continuous batching) adds a **parked area**: a
+//! finished sequence whose downstream stage data is complete can release
+//! its lane mid-step ([`SeqBuffer::release_lane`]) and wait there for
+//! batch selection, while a queued prompt takes the lane immediately
+//! ([`SeqBuffer::admit`]).  Mid-step admits carry an *eligibility* flag:
+//! they cannot enter the current step's PPO batch (otherwise a fast
+//! mid-step arrival could displace a sequence the legacy fixed-grid loop
+//! would have selected, breaking the Δ=0 equivalence contract); the flag
+//! clears at the next step boundary via [`SeqBuffer::promote_admitted`].
 
 use anyhow::{bail, Result};
 
@@ -28,6 +38,11 @@ pub struct SeqBuffer {
     next_completion: u64,
     /// completion stamp per buffered sequence (u64::MAX = unfinished)
     completed_at: Vec<u64>,
+    /// finished sequences that released their lane mid-step (rolling
+    /// admission), awaiting batch selection
+    parked: Vec<Sequence>,
+    /// completion stamp per parked sequence (always a real stamp)
+    parked_at: Vec<u64>,
 }
 
 impl SeqBuffer {
@@ -40,15 +55,22 @@ impl SeqBuffer {
             lane_free: vec![true; lanes],
             next_completion: 0,
             completed_at: Vec::new(),
+            parked: Vec::new(),
+            parked_at: Vec::new(),
         }
     }
 
+    /// In-flight sequences: lane-resident plus parked.
     pub fn len(&self) -> usize {
-        self.seqs.len()
+        self.seqs.len() + self.parked.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.seqs.is_empty()
+        self.seqs.is_empty() && self.parked.is_empty()
+    }
+
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
     }
 
     pub fn capacity(&self) -> usize {
@@ -87,6 +109,62 @@ impl SeqBuffer {
         Ok(lane)
     }
 
+    /// Rolling admission: admit a prompt with its queue/admission tick
+    /// stamps.  `mid_step` marks the sequence ineligible for the current
+    /// step's PPO batch (see the module docs); admits append after all
+    /// resident sequences, so the chunk-processing iteration order of the
+    /// survivors is unchanged.
+    pub fn admit(
+        &mut self,
+        prompt: Prompt,
+        step: u64,
+        enqueued_tick: u64,
+        admitted_tick: u64,
+        mid_step: bool,
+    ) -> Result<usize> {
+        let lane = self.add(prompt, step)?;
+        let seq = self.seqs.last_mut().expect("add() just pushed");
+        seq.enqueued_tick = enqueued_tick;
+        seq.admitted_tick = admitted_tick;
+        seq.mid_step = mid_step;
+        seq.admitted_mid_step = mid_step;
+        Ok(lane)
+    }
+
+    /// Rolling admission: release a finished sequence's lane mid-step,
+    /// parking the sequence until batch selection.  Order-preserving
+    /// (`Vec::remove`, not `swap_remove`): `process_chunk` stamps
+    /// same-chunk completions in `seqs` iteration order, and the Δ=0
+    /// equivalence contract needs the survivors to keep the order the
+    /// legacy loop would have seen.  Returns false — and releases
+    /// nothing — if the lane holds no finished, stamped sequence, or the
+    /// parked area is at its bound (one slot per lane; the caller simply
+    /// retries at a later chunk boundary).
+    pub fn release_lane(&mut self, lane: usize) -> bool {
+        if self.parked.len() >= self.lanes {
+            return false;
+        }
+        let Some(idx) = self.seqs.iter().position(|s| s.lane == lane) else {
+            return false;
+        };
+        if !self.seqs[idx].is_finished() || self.completed_at[idx] == u64::MAX {
+            return false;
+        }
+        let seq = self.seqs.remove(idx);
+        let stamp = self.completed_at.remove(idx);
+        self.lane_free[lane] = true;
+        self.parked.push(seq);
+        self.parked_at.push(stamp);
+        true
+    }
+
+    /// Step boundary: every mid-step admit becomes batch-eligible.
+    pub fn promote_admitted(&mut self) {
+        for s in self.seqs.iter_mut().chain(self.parked.iter_mut()) {
+            s.mid_step = false;
+        }
+    }
+
     /// All sequences still generating (Alg. 1's `get_unfinished`).
     pub fn unfinished(&self) -> impl Iterator<Item = &Sequence> {
         self.seqs.iter().filter(|s| !s.is_finished())
@@ -97,7 +175,15 @@ impl SeqBuffer {
     }
 
     pub fn finished_count(&self) -> usize {
-        self.seqs.iter().filter(|s| s.is_finished()).count()
+        self.seqs.iter().filter(|s| s.is_finished()).count() + self.parked.len()
+    }
+
+    /// Finished sequences eligible for the *current* step's PPO batch
+    /// (mid-step admits are excluded until promoted) — the rolling
+    /// generation loop's stop condition.
+    pub fn finished_eligible_count(&self) -> usize {
+        self.seqs.iter().filter(|s| s.is_finished() && !s.mid_step).count()
+            + self.parked.iter().filter(|s| !s.mid_step).count()
     }
 
     /// Newly queued sequences that still need prompt prefill.
@@ -142,26 +228,42 @@ impl SeqBuffer {
     /// `current_step` stamps each sequence's deferral (Table 2).
     /// Returns fewer than `b` only if fewer are finished.
     pub fn take_finished(&mut self, b: usize, current_step: u64) -> Vec<Sequence> {
-        let mut finished: Vec<(u64, usize)> = self
-            .seqs
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.is_finished())
-            .map(|(i, s)| {
-                debug_assert_ne!(self.completed_at[i], u64::MAX, "finished w/o stamp: lane {}", s.lane);
-                (self.completed_at[i], i)
-            })
-            .collect();
+        // candidates: lane-resident finished + parked (lane already
+        // released), merged in completion-stamp order; mid-step admits are
+        // ineligible until promoted at the next step boundary
+        let mut finished: Vec<(u64, bool, usize)> = Vec::new();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if s.is_finished() && !s.mid_step {
+                debug_assert_ne!(
+                    self.completed_at[i],
+                    u64::MAX,
+                    "finished w/o stamp: lane {}",
+                    s.lane
+                );
+                finished.push((self.completed_at[i], false, i));
+            }
+        }
+        for (i, s) in self.parked.iter().enumerate() {
+            if !s.mid_step {
+                finished.push((self.parked_at[i], true, i));
+            }
+        }
         finished.sort();
-        let mut selected: Vec<(u64, usize)> = finished.into_iter().take(b).collect();
-        // remove highest indices first (swap_remove-safe), then restore
-        // completion-stamp order
-        selected.sort_unstable_by(|a, b| b.1.cmp(&a.1));
+        let mut selected: Vec<(u64, bool, usize)> = finished.into_iter().take(b).collect();
+        // remove highest indices first (swap_remove-safe per pool; removal
+        // in one pool never shifts the other), then restore stamp order
+        selected.sort_unstable_by(|a, b| b.2.cmp(&a.2));
         let mut out: Vec<(u64, Sequence)> = Vec::with_capacity(selected.len());
-        for (stamp, idx) in selected {
-            let mut seq = self.seqs.swap_remove(idx);
-            self.completed_at.swap_remove(idx);
-            self.lane_free[seq.lane] = true;
+        for (stamp, from_parked, idx) in selected {
+            let mut seq = if from_parked {
+                self.parked_at.swap_remove(idx);
+                self.parked.swap_remove(idx)
+            } else {
+                self.completed_at.swap_remove(idx);
+                let seq = self.seqs.swap_remove(idx);
+                self.lane_free[seq.lane] = true;
+                seq
+            };
             seq.deferred_steps = current_step.saturating_sub(seq.enqueued_step);
             out.push((stamp, seq));
         }
@@ -215,6 +317,42 @@ impl SeqBuffer {
         let not_free = self.lane_free.iter().filter(|&&f| !f).count();
         if occupied != not_free {
             bail!("lane accounting mismatch: {occupied} occupied vs {not_free} not-free");
+        }
+        // parked area: stamp-synced, bounded, finished-and-drained only
+        if self.parked_at.len() != self.parked.len() {
+            bail!(
+                "parked stamps out of sync: {} stamps vs {} sequences",
+                self.parked_at.len(),
+                self.parked.len()
+            );
+        }
+        if self.parked.len() > self.lanes {
+            bail!("parked area overflow: {} > {} lanes", self.parked.len(), self.lanes);
+        }
+        for (i, s) in self.parked.iter().enumerate() {
+            if !s.is_finished() {
+                bail!("parked sequence (ex-lane {}) not finished", s.lane);
+            }
+            if self.parked_at[i] == u64::MAX || self.parked_at[i] >= self.next_completion {
+                bail!(
+                    "parked sequence (ex-lane {}): bad stamp {}",
+                    s.lane,
+                    self.parked_at[i]
+                );
+            }
+        }
+        // completion stamps stay unique across both pools — batch order is
+        // undefined if two sequences share one
+        let mut stamps: Vec<u64> = self
+            .completed_at
+            .iter()
+            .copied()
+            .filter(|&st| st != u64::MAX)
+            .chain(self.parked_at.iter().copied())
+            .collect();
+        stamps.sort_unstable();
+        if stamps.windows(2).any(|w| w[0] == w[1]) {
+            bail!("duplicate completion stamp across lane/parked pools");
         }
         Ok(())
     }
@@ -344,5 +482,98 @@ mod tests {
         let batch = buf.take_finished(3, 0);
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].prompt.id, 1);
+    }
+
+    #[test]
+    fn release_parks_and_recycles_the_lane_mid_step() {
+        let mut buf = SeqBuffer::new(2, 2);
+        buf.add(prompt(0), 0).unwrap();
+        buf.add(prompt(1), 0).unwrap();
+        finish(&mut buf, 0);
+        assert!(buf.release_lane(0), "finished+stamped lane must release");
+        buf.check_invariants().unwrap();
+        assert_eq!(buf.parked_count(), 1);
+        assert_eq!(buf.len(), 2, "parked sequences still count as in-flight");
+        // the freed lane is immediately admittable
+        let lane = buf.admit(prompt(2), 0, 3, 5, true).unwrap();
+        assert_eq!(lane, 0);
+        buf.check_invariants().unwrap();
+        let s = buf.by_lane(0).unwrap();
+        assert_eq!((s.enqueued_tick, s.admitted_tick), (3, 5));
+        assert!(s.mid_step && s.admitted_mid_step);
+    }
+
+    #[test]
+    fn release_refuses_unfinished_vacant_and_overflow() {
+        let mut buf = SeqBuffer::new(2, 2);
+        buf.add(prompt(0), 0).unwrap();
+        assert!(!buf.release_lane(0), "unfinished lane must not release");
+        assert!(!buf.release_lane(1), "vacant lane must not release");
+        // fill the parked bound (lanes = 2) and verify backpressure
+        for round in 0..2u64 {
+            finish(&mut buf, 0);
+            assert!(buf.release_lane(0));
+            buf.admit(prompt(10 + round), 0, 0, 0, true).unwrap();
+        }
+        finish(&mut buf, 0);
+        assert!(!buf.release_lane(0), "parked bound must refuse further releases");
+        buf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mid_step_admits_are_ineligible_until_promoted() {
+        let mut buf = SeqBuffer::new(2, 2);
+        buf.add(prompt(0), 0).unwrap();
+        buf.admit(prompt(1), 0, 0, 0, true).unwrap();
+        finish(&mut buf, 0); // the step-boundary admit
+        finish(&mut buf, 1); // the mid-step admit
+        assert_eq!(buf.finished_count(), 2);
+        assert_eq!(buf.finished_eligible_count(), 1);
+        let batch = buf.take_finished(2, 0);
+        assert_eq!(batch.len(), 1, "mid-step admit must not enter this step's batch");
+        assert_eq!(batch[0].prompt.id, 0);
+        buf.promote_admitted();
+        assert_eq!(buf.finished_eligible_count(), 1);
+        let batch = buf.take_finished(2, 1);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].prompt.id, 1);
+        buf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn batch_order_merges_parked_and_resident_by_completion_stamp() {
+        let mut buf = SeqBuffer::new(3, 3);
+        for i in 0..3 {
+            buf.add(prompt(i), 0).unwrap();
+        }
+        finish(&mut buf, 1); // stamp 0
+        assert!(buf.release_lane(1)); // parked
+        finish(&mut buf, 0); // stamp 1 (stays lane-resident)
+        finish(&mut buf, 2); // stamp 2
+        assert!(buf.release_lane(2)); // parked
+        let batch = buf.take_finished(3, 0);
+        let ids: Vec<u64> = batch.iter().map(|s| s.prompt.id).collect();
+        assert_eq!(ids, vec![1, 0, 2], "completion order across pools");
+        assert_eq!(buf.len(), 0);
+        buf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_preserves_survivor_iteration_order() {
+        let mut buf = SeqBuffer::new(4, 4);
+        for i in 0..4 {
+            buf.add(prompt(i), 0).unwrap();
+        }
+        finish(&mut buf, 1);
+        assert!(buf.release_lane(1));
+        // survivors keep enqueue order (order-preserving removal), so the
+        // chunk-processing loop sees the same relative order as before
+        let order: Vec<u64> = buf.iter().map(|s| s.prompt.id).collect();
+        assert_eq!(order, vec![0, 2, 3]);
+        // and a fresh admit appends after all survivors
+        buf.admit(prompt(9), 0, 0, 0, true).unwrap();
+        let order: Vec<u64> = buf.iter().map(|s| s.prompt.id).collect();
+        assert_eq!(order, vec![0, 2, 3, 9]);
+        buf.check_invariants().unwrap();
     }
 }

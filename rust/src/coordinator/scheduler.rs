@@ -47,10 +47,11 @@ use crate::coordinator::engine_ops::{ActorState, ChunkOut, Ops};
 use crate::coordinator::worker::{
     Pick, RefSink, RewardReq, RewardResp, RewardWorker, StreamChunk, StreamSink,
 };
+use crate::data::queue::{Arrivals, PromptQueue, QueuedPrompt};
 use crate::data::tasks::{rule_reward, Task};
 use crate::data::tokenizer::{Tokenizer, EOS};
 use crate::data::PromptSampler;
-use crate::metrics::{RunLog, StageTiming, StepRecord};
+use crate::metrics::{PromptLatency, RunLog, StageTiming, StepRecord};
 use crate::model::rollout::{PpoBatch, RolloutAssembler};
 use crate::model::sequence::{SeqPhase, Sequence};
 use crate::ppo::gae::masked_mean;
@@ -74,19 +75,48 @@ pub struct OppoScheduler {
     sinks: Vec<StreamSink>,
     /// monolithic reward scorer for the non-streamed modes
     mono_reward: Option<RewardWorker>,
-    sampler: PromptSampler,
+    /// bounded prompt queue in front of the buffer (rolling admission);
+    /// under `AdmissionMode::Step` it degenerates to a pass-through over
+    /// the sampler, so the legacy fill loop is unchanged
+    queue: PromptQueue,
     tokenizer: Tokenizer,
     buffer: SeqBuffer,
     delta_ctl: DeltaController,
     chunk_ctl: ChunkController,
     assembler: RolloutAssembler,
     actor_state: ActorState,
+    /// persistent host-authoritative `[G, S]` token mirror.  `actor_prefill`
+    /// replaces the device token buffer wholesale from this slice, so every
+    /// lane's row is kept current *incrementally*: admission rewrites the
+    /// admitted lane's row, `process_chunk` appends each accepted token.
+    /// Nothing ever rebuilds it from scratch.
+    host_mirror: Vec<i32>,
+    /// monotonic chunk-tick clock: one tick per `generate_chunk` call (plus
+    /// idle ticks while waiting for traffic), never reset across steps.
+    /// All per-prompt latency accounting is in these units.
+    tick: u64,
     log: RunLog,
     /// Adam step counter (1-based across the whole run)
     update_count: i32,
     /// staleness queue for `Mode::AsyncStale`
     stale_queue: VecDeque<PendingUpdate>,
+    /// clone of the most recent step's selected PPO batch (test hook: lets
+    /// engine-gated tests recompute streamed scores densely)
+    last_selected: Vec<Sequence>,
     started: Instant,
+}
+
+/// Per-step generation counters (rolling admission telemetry).
+#[derive(Default)]
+struct GenStats {
+    /// tokens accepted into sequences
+    gen_tokens: usize,
+    /// prompts admitted into lanes mid-step
+    admitted_mid_step: usize,
+    /// lane-ticks available (every tick contributes `lanes`)
+    lane_slots: usize,
+    /// lane-ticks with no live sequence decoding
+    idle_lane_slots: usize,
 }
 
 impl OppoScheduler {
@@ -106,6 +136,16 @@ impl OppoScheduler {
         let tokenizer = Tokenizer::from_manifest(&engine.manifest().tokenizer)?;
         let task = Task::by_name(&cfg.task).context("unknown task")?;
         let sampler = PromptSampler::new(task, tokenizer.clone(), m.prompt_max, cfg.seed);
+        // Step mode never queues (it pulls a prompt whenever a lane frees at
+        // the step boundary), so it shares the saturated arrival process —
+        // identical prompt stream to the legacy direct-sampler fill loop
+        let arrivals = match cfg.admission_mode {
+            crate::config::AdmissionMode::Poisson => {
+                Arrivals::Poisson { rate: cfg.admission_rate }
+            }
+            _ => Arrivals::Saturated,
+        };
+        let queue = PromptQueue::new(sampler, arrivals, cfg.admission_queue_depth, cfg.seed);
 
         let (delta_init, delta_min, delta_max) = if cfg.mode.inter_enabled() {
             (cfg.delta_init, cfg.delta_min, cfg.delta_max)
@@ -164,7 +204,8 @@ impl OppoScheduler {
             }
         }
 
-        let actor_state = ops.fresh_actor_state(&vec![0i32; m.lanes * m.s_max])?;
+        let host_mirror = vec![0i32; m.lanes * m.s_max];
+        let actor_state = ops.fresh_actor_state(&host_mirror)?;
         let assembler = RolloutAssembler::new(m.s_max, cfg.kl_beta as f32);
         let buffer = SeqBuffer::new(m.ppo_batch + delta_ctl.delta(), m.lanes);
         let log = RunLog::new(cfg.mode.name(), &cfg.task, cfg.seed);
@@ -175,16 +216,19 @@ impl OppoScheduler {
             ops,
             sinks,
             mono_reward,
-            sampler,
+            queue,
             tokenizer,
             buffer,
             delta_ctl,
             chunk_ctl,
             assembler,
             actor_state,
+            host_mirror,
+            tick: 0,
             log,
             update_count: 0,
             stale_queue: VecDeque::new(),
+            last_selected: Vec::new(),
             started: Instant::now(),
         })
     }
@@ -208,6 +252,18 @@ impl OppoScheduler {
     /// Names of the active streaming stages (test / introspection hook).
     pub fn stage_names(&self) -> Vec<&'static str> {
         self.sinks.iter().map(|s| s.name()).collect()
+    }
+
+    /// The admission queue (test / introspection hook).
+    pub fn queue(&self) -> &PromptQueue {
+        &self.queue
+    }
+
+    /// Clones of the sequences selected by the most recent `run_step` —
+    /// lets engine-gated tests recompute streamed reward/ref scores with
+    /// the dense monolithic entry points and compare.
+    pub fn last_selected(&self) -> &[Sequence] {
+        &self.last_selected
     }
 
     /// Is the reference model fed by streamed chunks (vs the monolithic
@@ -271,6 +327,7 @@ impl OppoScheduler {
                 train_stats,
                 util: 0.0,
                 stages: Vec::new(),
+                ..Default::default()
             });
             step += 1;
         }
@@ -282,34 +339,69 @@ impl OppoScheduler {
         let t0 = Instant::now();
         let b = self.engine.manifest().shape.ppo_batch;
         let chunk = self.chunk_ctl.chunk();
+        let dropped_before = self.queue.dropped();
 
         // ---- Stage 1: fill the buffer to B + Δ (Alg. 1 l.3-5) ----
+        // step boundary: last step's mid-step admits become batch-eligible
+        self.buffer.promote_admitted();
         self.buffer.set_capacity(b + self.delta_ctl.delta());
-        while self.buffer.has_room() {
-            let prompt = self.sampler.next();
-            self.buffer.add(prompt, step)?;
+        self.queue.advance_to(self.tick);
+        while self.buffer.has_room() && self.queue.has_prompt() {
+            let Some(qp) = self.queue.pop(self.tick) else { break };
+            self.admit_prompt(qp, step, false)?;
         }
         self.prefill_queued()?;
 
-        // ---- Stage 2: generation (+ intra-step streaming to N stages) ----
-        let gen_tokens = self.generation_loop(chunk, b)?;
+        // ---- Stage 2: generation (+ intra-step streaming to N stages,
+        //      rolling admission into lanes that free up mid-step) ----
+        let gen = self.generation_loop(chunk, b, step)?;
+        let gen_tokens = gen.gen_tokens;
 
         // ---- Stage 3: PPO update with inter-step overlap (l.17-20) ----
         self.flush_streams(chunk)?; // no-op when no sinks are active
         let selected = self.buffer.take_finished(b, step);
-        ensure!(selected.len() == b, "only {} finished sequences (need {b})", selected.len());
+        if selected.len() < b {
+            // graceful degradation: all lanes dead (or traffic starved the
+            // queue) before B sequences finished — train on what we have
+            // rather than aborting the run
+            log::warn!(
+                "step {step}: only {} of {b} sequences finished; {}",
+                selected.len(),
+                if selected.is_empty() {
+                    "skipping the update"
+                } else {
+                    "training on the partial batch"
+                }
+            );
+        }
         let deferred_left = self.buffer.len();
         for seq in &selected {
             self.log.record_deferral(seq.deferred_steps);
         }
+        let prompt_latencies: Vec<PromptLatency> = selected
+            .iter()
+            .map(|s| PromptLatency {
+                prompt_id: s.prompt.id,
+                queue_wait: s.admitted_tick.saturating_sub(s.enqueued_tick) as f64,
+                e2e: s.finished_tick.saturating_sub(s.enqueued_tick) as f64,
+                mid_step: s.admitted_mid_step,
+            })
+            .collect();
 
-        let scores = self.score_batch(&selected)?;
-        let mean_score = scores.iter().sum::<f32>() / scores.len() as f32;
-
-        let train_stats = match self.cfg.mode {
-            Mode::AsyncStale => self.async_update(&selected, &scores)?,
-            _ => self.ppo_step(&selected, &scores)?,
+        let (mean_score, train_stats) = if selected.is_empty() {
+            // nothing finished: a generation-free step (all-zero batch has
+            // an empty mask, which would poison the masked PPO statistics)
+            (0.0f32, [0f32; 6])
+        } else {
+            let scores = self.score_batch(&selected)?;
+            let mean = scores.iter().sum::<f32>() / scores.len() as f32;
+            let stats = match self.cfg.mode {
+                Mode::AsyncStale => self.async_update(&selected, &scores)?,
+                _ => self.ppo_step(&selected, &scores)?,
+            };
+            (mean, stats)
         };
+        self.last_selected = selected.clone();
 
         // ---- dynamic control (Alg. 1 l.21-27 + §3.1) ----
         let new_delta = self.delta_ctl.observe(step, mean_score as f64);
@@ -346,6 +438,14 @@ impl OppoScheduler {
             train_stats,
             util,
             stages,
+            prompt_latencies,
+            lane_idle_frac: if gen.lane_slots > 0 {
+                gen.idle_lane_slots as f64 / gen.lane_slots as f64
+            } else {
+                0.0
+            },
+            admitted_mid_step: gen.admitted_mid_step,
+            queue_dropped: (self.queue.dropped() - dropped_before) as usize,
         };
         self.log.push(rec.clone());
         Ok(rec)
@@ -355,36 +455,41 @@ impl OppoScheduler {
     // generation machinery
     // ------------------------------------------------------------------
 
-    /// Rebuild the host-authoritative `[G, S]` token mirror.
-    fn host_tokens(&self) -> Vec<i32> {
-        let m = &self.engine.manifest().shape;
-        let mut out = vec![0i32; m.lanes * m.s_max];
-        for seq in self.buffer.iter() {
-            let row = seq.lane * m.s_max;
-            let toks = seq.full_tokens();
-            out[row..row + toks.len()].copy_from_slice(&toks);
-        }
-        out
+    /// Admit one queued prompt into a free lane and stamp its tick clock.
+    fn admit_prompt(&mut self, qp: QueuedPrompt, step: u64, mid_step: bool) -> Result<usize> {
+        self.buffer.admit(qp.prompt, step, qp.enqueued_tick, self.tick, mid_step)
     }
 
     /// Prompt-prefill all `Queued` lanes (selective reset, §3.2: existing
-    /// lanes' KV rows are untouched).
+    /// lanes' KV rows are untouched).  Only the queued lanes' rows of the
+    /// persistent host mirror are rewritten here — the upload itself is
+    /// wholesale (that is `actor_prefill`'s contract), which is exactly why
+    /// the mirror must always be current for *every* lane.
     fn prefill_queued(&mut self) -> Result<()> {
         let queued = self.buffer.queued_lanes();
         if queued.is_empty() {
             return Ok(());
         }
         let m = self.engine.manifest().shape.clone();
-        let tokens = self.host_tokens();
         let mut prompt_len = vec![1i32; m.lanes];
         let mut reset = vec![0i32; m.lanes];
         for seq in self.buffer.iter() {
             prompt_len[seq.lane] = seq.prompt_len as i32;
         }
         for &lane in &queued {
+            let seq = self.buffer.by_lane(lane).expect("queued lane vanished");
+            let row = lane * m.s_max;
+            self.host_mirror[row..row + m.s_max].fill(0);
+            self.host_mirror[row..row + seq.prompt_len]
+                .copy_from_slice(&seq.prompt.tokens);
             reset[lane] = 1;
         }
-        self.ops.actor_prefill(&mut self.actor_state, &tokens, &prompt_len, &reset)?;
+        self.ops.actor_prefill(
+            &mut self.actor_state,
+            &self.host_mirror,
+            &prompt_len,
+            &reset,
+        )?;
         for seq in self.buffer.iter_mut() {
             if seq.phase == SeqPhase::Queued {
                 seq.phase = SeqPhase::Generating;
@@ -393,27 +498,94 @@ impl OppoScheduler {
         Ok(())
     }
 
-    /// Alg. 1 l.7-16: decode chunks until `target` sequences finished,
-    /// fanning the previous chunk out to every downstream stage so their
-    /// prefill overlaps the actor's next decode chunk.
-    fn generation_loop(&mut self, chunk: usize, target: usize) -> Result<usize> {
+    /// One rolling-admission round at a chunk boundary: park every finished
+    /// sequence whose downstream data is complete (freeing its lane), then
+    /// admit queued prompts into the free lanes and prefill them (selective
+    /// reset — resident lanes' KV rows are untouched).  Returns how many
+    /// prompts were admitted.
+    ///
+    /// Release gate: a lane may be recycled only when nothing downstream
+    /// still needs it — the sequence is finished *and* its stream cursor is
+    /// drained *and* every sink has applied the lane's data (reward score
+    /// present, ref row complete).  With no sinks (monolithic scoring) the
+    /// sequence is scored after selection from the parked area, so finished
+    /// alone suffices.
+    fn rolling_admit(&mut self, step: u64) -> Result<usize> {
+        let releasable: Vec<usize> = self
+            .buffer
+            .iter()
+            .filter(|s| {
+                s.is_finished()
+                    && (self.sinks.is_empty()
+                        || (s.unstreamed() == 0
+                            && self.sinks.iter().all(|k| k.is_satisfied(s))))
+            })
+            .map(|s| s.lane)
+            .collect();
+        for lane in releasable {
+            // refused (parked area full) is fine — the lane stays resident
+            // and the next boundary retries
+            self.buffer.release_lane(lane);
+        }
+        let mut admitted = 0usize;
+        while self.buffer.has_room() && self.queue.has_prompt() {
+            let Some(qp) = self.queue.pop(self.tick) else { break };
+            self.admit_prompt(qp, step, true)?;
+            admitted += 1;
+        }
+        if admitted > 0 {
+            self.prefill_queued()?;
+        }
+        Ok(admitted)
+    }
+
+    /// Alg. 1 l.7-16: decode chunks until `target` batch-eligible sequences
+    /// finished, fanning the previous chunk out to every downstream stage so
+    /// their prefill overlaps the actor's next decode chunk.  Under rolling
+    /// admission each chunk boundary also recycles drained lanes into fresh
+    /// prompts from the queue; mid-step admits decode in the same grid but
+    /// stay ineligible for *this* step's batch, which keeps the saturated
+    /// Δ=0 schedule step-equivalent to the legacy fixed-grid loop.
+    fn generation_loop(&mut self, chunk: usize, target: usize, step: u64) -> Result<GenStats> {
         let m = self.engine.manifest().shape.clone();
-        let mut gen_tokens = 0usize;
+        let rolling = self.cfg.admission_mode.rolling();
+        let mut st = GenStats::default();
+        // bounded idle wait for traffic: with no live lane and an empty
+        // queue, tick the arrival process forward instead of spinning or
+        // bailing — but give up after enough expected interarrival times
+        // that a dried-up queue cannot stall the step forever
+        let mut idle_budget: u64 = match self.queue.arrivals() {
+            Arrivals::Poisson { rate } => ((64.0 / rate).ceil() as u64).min(1_000_000),
+            Arrivals::Saturated => 0,
+        };
         loop {
-            if self.buffer.finished_count() >= target {
+            if self.buffer.finished_eligible_count() >= target {
                 break;
+            }
+            if rolling {
+                st.admitted_mid_step += self.rolling_admit(step)?;
             }
             let mut pos = vec![0i32; m.lanes];
             let mut live = vec![0i32; m.lanes];
-            let mut any_live = false;
+            let mut live_count = 0usize;
             for seq in self.buffer.iter() {
                 pos[seq.lane] = seq.total_len() as i32;
                 if seq.phase == SeqPhase::Generating {
                     live[seq.lane] = 1;
-                    any_live = true;
+                    live_count += 1;
                 }
             }
-            if !any_live {
+            if live_count == 0 {
+                if rolling && idle_budget > 0 {
+                    // idle tick: no decode work, just advance the clock so
+                    // pending arrivals can materialize
+                    self.tick += 1;
+                    self.queue.advance_to(self.tick);
+                    st.lane_slots += m.lanes;
+                    st.idle_lane_slots += m.lanes;
+                    idle_budget -= 1;
+                    continue;
+                }
                 break; // Alg. 1 l.9-11
             }
 
@@ -430,21 +602,28 @@ impl OppoScheduler {
                 }
             }
             let out = self.ops.generate_chunk(&mut self.actor_state, chunk, &pos, &live)?;
+            self.tick += 1;
+            self.queue.advance_to(self.tick);
+            st.lane_slots += m.lanes;
+            st.idle_lane_slots += m.lanes - live_count;
             {
                 let Self { sinks, buffer, .. } = self;
                 for sink in sinks.iter_mut() {
                     sink.collect_ready(buffer)?;
                 }
             }
-            gen_tokens += self.process_chunk(&out, chunk)?;
+            st.gen_tokens += self.process_chunk(&out, chunk)?;
         }
-        Ok(gen_tokens)
+        Ok(st)
     }
 
     /// Fold one decode chunk into the sequences; returns tokens accepted.
+    /// Each accepted token is also appended to the lane's row of the host
+    /// mirror, keeping it current for the next selective-reset prefill.
     fn process_chunk(&mut self, out: &ChunkOut, chunk: usize) -> Result<usize> {
         let m = self.engine.manifest().shape.clone();
         let (eos, max_new, s_max) = (EOS, self.cfg.max_new_tokens, m.s_max);
+        let tick = self.tick;
         let mut accepted = 0usize;
         let mut newly_finished: Vec<usize> = Vec::new();
         for seq in self.buffer.iter_mut() {
@@ -457,7 +636,10 @@ impl OppoScheduler {
                 let logp = out.logps[lane * chunk + j];
                 let value = out.values[lane * chunk + j];
                 accepted += 1;
-                if seq.push_token(tok, logp, value, eos, max_new, s_max) {
+                let done = seq.push_token(tok, logp, value, eos, max_new, s_max);
+                self.host_mirror[lane * s_max + seq.total_len() - 1] = tok;
+                if done {
+                    seq.finished_tick = tick;
                     newly_finished.push(lane);
                     break; // tokens past EOS in this chunk are junk
                 }
@@ -598,31 +780,49 @@ impl OppoScheduler {
     fn assemble(&mut self, seqs: &[Sequence], scores: &[f32]) -> Result<PpoBatch> {
         let refs: Vec<&Sequence> = seqs.iter().collect();
         let m = self.engine.manifest().shape.clone();
+        let n = seqs.len();
         // reference log-probs over the dense batch tokens: already streamed
         // by the ref stage (no post-generation blocking call), or computed
         // monolithically on the fallback / baseline paths
         let ref_logp = if self.ref_streamed() {
-            let mut dense = vec![0f32; m.ppo_batch * m.s_max];
+            let mut dense = vec![0f32; n * m.s_max];
             for (i, seq) in seqs.iter().enumerate() {
-                let n = seq.total_len();
+                let len = seq.total_len();
                 ensure!(
-                    seq.ref_logp.len() >= n,
-                    "lane {}: streamed ref logprobs cover {} of {n} positions",
+                    seq.ref_logp.len() >= len,
+                    "lane {}: streamed ref logprobs cover {} of {len} positions",
                     seq.lane,
                     seq.ref_logp.len()
                 );
-                dense[i * m.s_max..i * m.s_max + n].copy_from_slice(&seq.ref_logp[..n]);
+                dense[i * m.s_max..i * m.s_max + len].copy_from_slice(&seq.ref_logp[..len]);
             }
             dense
         } else {
+            // the AOT entry is fixed at [B, S]; a partial batch pads with
+            // zero rows and truncates the result back to the real rows
             let mut tokens = vec![0i32; m.ppo_batch * m.s_max];
             for (i, seq) in seqs.iter().enumerate() {
                 let t = seq.full_tokens();
                 tokens[i * m.s_max..i * m.s_max + t.len()].copy_from_slice(&t);
             }
-            self.ops.ref_logprobs(&tokens)?
+            let mut dense = self.ops.ref_logprobs(&tokens)?;
+            dense.truncate(n * m.s_max);
+            dense
         };
-        self.assembler.assemble(&refs, scores, &ref_logp)
+        let mut batch = self.assembler.assemble(&refs, scores, &ref_logp)?;
+        // graceful degradation: gae/ppo_update are AOT-compiled for exactly
+        // [B, S], so a partial batch is zero-padded up to B — the pad rows
+        // carry an all-zero mask and contribute nothing to the update
+        if batch.b < m.ppo_batch {
+            let s = batch.s;
+            batch.tokens.resize(m.ppo_batch * s, 0);
+            batch.mask.resize(m.ppo_batch * s, 0.0);
+            batch.old_logp.resize(m.ppo_batch * s, 0.0);
+            batch.rewards.resize(m.ppo_batch * s, 0.0);
+            batch.values.resize(m.ppo_batch * s, 0.0);
+            batch.b = m.ppo_batch;
+        }
+        Ok(batch)
     }
 
     fn apply_update(&mut self, batch: &PpoBatch) -> Result<[f32; 6]> {
@@ -659,7 +859,7 @@ impl OppoScheduler {
     /// set (fresh lanes; does not disturb the training buffer, but does
     /// advance the sampling RNG).
     pub fn eval_accuracy(&mut self, n: usize, eval_seed: u64) -> Result<f64> {
-        let prompts = self.sampler.eval_set(n, eval_seed);
+        let prompts = self.queue.sampler().eval_set(n, eval_seed);
         let responses = self.generate_responses(&prompts)?;
         let hits = prompts
             .iter()

@@ -2,10 +2,12 @@
 //! manifest), rule-checkable tasks standing in for the paper's datasets
 //! (DESIGN.md §1), and prompt samplers.
 
+pub mod queue;
 pub mod sampler;
 pub mod tasks;
 pub mod tokenizer;
 
+pub use queue::{Arrivals, PromptQueue, QueuedPrompt};
 pub use sampler::PromptSampler;
 pub use tasks::{Prompt, Task, TaskKind};
 pub use tokenizer::Tokenizer;

@@ -26,6 +26,32 @@ pub struct StageTiming {
     pub items: u64,
 }
 
+/// One prompt's latency accounting under rolling admission.  Units are
+/// whatever clock the producer runs on: chunk ticks for the coordinator
+/// (one tick per `actor_generate_chunk` call), seconds for the simulator.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PromptLatency {
+    pub prompt_id: u64,
+    /// arrival → lane admission (zero under saturated arrivals)
+    pub queue_wait: f64,
+    /// arrival → generation finished (end-to-end)
+    pub e2e: f64,
+    /// admitted mid-step (continuous-batching refill) vs at a step boundary
+    pub mid_step: bool,
+}
+
+/// Run-level SLO percentiles over the per-prompt latencies.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloSummary {
+    pub prompts: usize,
+    pub queue_wait_p50: f64,
+    pub queue_wait_p95: f64,
+    pub queue_wait_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p95: f64,
+    pub e2e_p99: f64,
+}
+
 /// One PPO step's telemetry.
 #[derive(Clone, Debug, Default)]
 pub struct StepRecord {
@@ -57,6 +83,18 @@ pub struct StepRecord {
     /// (so even the sequential baseline reports a "reward" row); empty when
     /// no stage workers exist (e.g. DPO)
     pub stages: Vec<StageTiming>,
+    /// per-prompt latency records for the sequences selected this step
+    /// (the coordinator stamps all modes — queue wait is simply zero under
+    /// step-synchronous/saturated admission; empty for producers without a
+    /// tick clock)
+    pub prompt_latencies: Vec<PromptLatency>,
+    /// share of lane-chunk decode slots that held no live sequence this
+    /// step — the idle-lane waste rolling admission exists to remove
+    pub lane_idle_frac: f64,
+    /// sequences admitted mid-step this step (continuous-batching refills)
+    pub admitted_mid_step: usize,
+    /// prompts shed at the admission-queue bound this step
+    pub queue_dropped: usize,
 }
 
 /// Whole-run log for one pipeline mode.
@@ -117,6 +155,34 @@ impl RunLog {
         None
     }
 
+    /// SLO percentiles (p50/p95/p99 queue wait and end-to-end latency)
+    /// over every per-prompt latency the run recorded; `None` when the run
+    /// produced none (legacy step-synchronous admission).
+    pub fn slo_summary(&self) -> Option<SloSummary> {
+        let waits: Vec<f64> = self
+            .records
+            .iter()
+            .flat_map(|r| r.prompt_latencies.iter().map(|l| l.queue_wait))
+            .collect();
+        let e2es: Vec<f64> = self
+            .records
+            .iter()
+            .flat_map(|r| r.prompt_latencies.iter().map(|l| l.e2e))
+            .collect();
+        if waits.is_empty() {
+            return None;
+        }
+        Some(SloSummary {
+            prompts: waits.len(),
+            queue_wait_p50: stats::percentile(&waits, 50.0),
+            queue_wait_p95: stats::percentile(&waits, 95.0),
+            queue_wait_p99: stats::percentile(&waits, 99.0),
+            e2e_p50: stats::percentile(&e2es, 50.0),
+            e2e_p95: stats::percentile(&e2es, 95.0),
+            e2e_p99: stats::percentile(&e2es, 99.0),
+        })
+    }
+
     /// Deferral distribution as (steps, share) rows plus the mean —
     /// Table 2's exact format.
     pub fn deferral_distribution(&self) -> (Vec<(u64, f64)>, f64) {
@@ -175,6 +241,25 @@ impl RunLog {
                                 .collect(),
                         ),
                     ),
+                    ("lane_idle_frac", json::num(r.lane_idle_frac)),
+                    ("admitted_mid_step", json::num(r.admitted_mid_step as f64)),
+                    ("queue_dropped", json::num(r.queue_dropped as f64)),
+                    (
+                        "prompt_latencies",
+                        Value::Arr(
+                            r.prompt_latencies
+                                .iter()
+                                .map(|l| {
+                                    json::obj(vec![
+                                        ("prompt_id", json::num(l.prompt_id as f64)),
+                                        ("queue_wait", json::num(l.queue_wait)),
+                                        ("e2e", json::num(l.e2e)),
+                                        ("mid_step", Value::Bool(l.mid_step)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ])
             })
             .collect();
@@ -183,12 +268,25 @@ impl RunLog {
             .iter()
             .map(|(&k, &v)| json::arr_f64(&[k as f64, v as f64]))
             .collect();
+        let slo = match self.slo_summary() {
+            Some(s) => json::obj(vec![
+                ("prompts", json::num(s.prompts as f64)),
+                ("queue_wait_p50", json::num(s.queue_wait_p50)),
+                ("queue_wait_p95", json::num(s.queue_wait_p95)),
+                ("queue_wait_p99", json::num(s.queue_wait_p99)),
+                ("e2e_p50", json::num(s.e2e_p50)),
+                ("e2e_p95", json::num(s.e2e_p95)),
+                ("e2e_p99", json::num(s.e2e_p99)),
+            ]),
+            None => Value::Null,
+        };
         json::obj(vec![
             ("mode", json::s(&self.mode)),
             ("task", json::s(&self.task)),
             ("seed", json::num(self.seed as f64)),
             ("records", Value::Arr(records)),
             ("deferral_hist", Value::Arr(hist)),
+            ("slo", slo),
         ])
     }
 
@@ -258,6 +356,55 @@ mod tests {
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back.get("mode").unwrap().as_str().unwrap(), "oppo");
         assert_eq!(back.get("records").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn slo_summary_percentiles_and_json() {
+        let mut log = RunLog::new("oppo", "mixed", 0);
+        assert!(log.slo_summary().is_none(), "no latencies => no summary");
+        let lat = |id: u64, w: f64, e: f64| PromptLatency {
+            prompt_id: id,
+            queue_wait: w,
+            e2e: e,
+            mid_step: id % 2 == 0,
+        };
+        log.push(StepRecord {
+            step: 0,
+            prompt_latencies: (0..50).map(|i| lat(i, i as f64, 10.0 + i as f64)).collect(),
+            lane_idle_frac: 0.25,
+            admitted_mid_step: 3,
+            queue_dropped: 1,
+            ..Default::default()
+        });
+        log.push(StepRecord {
+            step: 1,
+            prompt_latencies: (50..100).map(|i| lat(i, i as f64, 10.0 + i as f64)).collect(),
+            ..Default::default()
+        });
+        let s = log.slo_summary().unwrap();
+        assert_eq!(s.prompts, 100);
+        // waits are 0..=99 — percentiles must be ordered and in range
+        assert!(s.queue_wait_p50 <= s.queue_wait_p95 && s.queue_wait_p95 <= s.queue_wait_p99);
+        assert!((s.queue_wait_p50 - 49.5).abs() < 1.0);
+        assert!(s.queue_wait_p99 > 95.0 && s.queue_wait_p99 <= 99.0);
+        assert!((s.e2e_p50 - s.queue_wait_p50 - 10.0).abs() < 1e-9);
+
+        let v = log.to_json();
+        let text = crate::util::json::to_string(&v);
+        let back = crate::util::json::parse(&text).unwrap();
+        let slo = back.get("slo").unwrap();
+        assert_eq!(slo.get("prompts").unwrap().as_usize().unwrap(), 100);
+        let rec0 = &back.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(rec0.get("admitted_mid_step").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(rec0.get("queue_dropped").unwrap().as_usize().unwrap(), 1);
+        assert!((rec0.get("lane_idle_frac").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        let lat0 = &rec0.get("prompt_latencies").unwrap().as_arr().unwrap()[0];
+        assert!(lat0.get("mid_step").unwrap().as_bool().unwrap());
+        // a legacy log still serializes: slo is null
+        let legacy = log_with_scores(&[0.1]);
+        let v = crate::util::json::parse(&crate::util::json::to_string(&legacy.to_json()))
+            .unwrap();
+        assert_eq!(*v.get("slo").unwrap(), crate::util::json::Value::Null);
     }
 
     #[test]

@@ -46,6 +46,23 @@ pub struct Sequence {
     /// number of PPO steps this sequence was deferred past its first
     /// eligible step (Table 2's metric); filled at batch selection
     pub deferred_steps: u64,
+    /// chunk tick at which the prompt entered the admission queue
+    /// (rolling admission; == `admitted_tick` under saturated arrivals)
+    pub enqueued_tick: u64,
+    /// chunk tick at which the prompt was admitted to a lane
+    pub admitted_tick: u64,
+    /// chunk tick at which generation finished (stamped by the scheduler;
+    /// 0 until then) — `finished_tick - enqueued_tick` is the end-to-end
+    /// latency, `admitted_tick - enqueued_tick` the queue wait
+    pub finished_tick: u64,
+    /// admitted mid-step: ineligible for the *current* step's PPO batch
+    /// (cleared at the next step boundary by `SeqBuffer::promote_admitted`,
+    /// which is what keeps Δ=0 saturated rolling step-equivalent to the
+    /// legacy fixed-grid loop)
+    pub mid_step: bool,
+    /// permanent record that this sequence entered mid-step (telemetry;
+    /// never cleared, unlike the eligibility flag above)
+    pub admitted_mid_step: bool,
 }
 
 impl Sequence {
@@ -64,6 +81,11 @@ impl Sequence {
             rm_score: None,
             ref_logp: Vec::new(),
             deferred_steps: 0,
+            enqueued_tick: 0,
+            admitted_tick: 0,
+            finished_tick: 0,
+            mid_step: false,
+            admitted_mid_step: false,
         }
     }
 

@@ -48,6 +48,11 @@ pub struct Setup {
     /// B=112, a heavy-tailed task needs a deeper overcommit pool to skip
     /// all concurrent stragglers)
     pub delta_max: usize,
+    /// calibrated Poisson arrival rate (prompts/second) for rolling-
+    /// admission traffic simulation — set somewhat above the setup's
+    /// steady-state service rate so the lanes stay loaded and queueing
+    /// delay is visible (a serving-style workload, not training parity)
+    pub arrival_rate: f64,
 }
 
 /// Stack-Exchange-Paired + Qwen2.5-7B-Instruct on 8×H200 (7 gen + 1 score).
@@ -85,6 +90,7 @@ pub fn stackex_7b_h200() -> Setup {
         use_reward_model: true,
         sp_gain: 1.6,
         delta_max: 12,
+        arrival_rate: 1.5,
     }
 }
 
@@ -125,6 +131,7 @@ pub fn stackex_3b_a100() -> Setup {
         use_reward_model: true,
         sp_gain: 1.6,
         delta_max: 16,
+        arrival_rate: 2.0,
     }
 }
 
@@ -166,6 +173,7 @@ pub fn gsm8k_7b_gh200() -> Setup {
         use_reward_model: false,
         sp_gain: 1.6,
         delta_max: 24,
+        arrival_rate: 1.0,
     }
 }
 
@@ -204,6 +212,7 @@ pub fn opencoder_3b_a100() -> Setup {
         use_reward_model: true,
         sp_gain: 1.6,
         delta_max: 16,
+        arrival_rate: 2.0,
     }
 }
 
@@ -232,6 +241,17 @@ pub fn table4_setup() -> Setup {
     s.lengths.warmup.sigma = 0.9;
     s.lengths.converged.sigma = 0.8;
     s.areal_sync_overhead = 0.18;
+    s
+}
+
+/// Traffic-simulation variant of the StackEx-7B setup: rolling admission
+/// under Poisson arrivals at `arrival_rate` — the serving-style workload
+/// the continuous-batching runtime is benchmarked on (pair with
+/// `SimConfig::rolling_poisson(setup.arrival_rate)`).
+pub fn traffic_7b_h200() -> Setup {
+    let mut s = stackex_7b_h200();
+    s.name = "stackex-7b-h200-traffic";
+    s.arrival_rate = 1.5;
     s
 }
 
@@ -264,6 +284,15 @@ mod tests {
         assert!(!s.use_reward_model);
         assert_eq!(s.cluster.n_score, 0);
         assert!(s.cluster.colocated_scoring);
+    }
+
+    #[test]
+    fn traffic_preset_has_a_positive_rate() {
+        let s = traffic_7b_h200();
+        assert!(s.arrival_rate > 0.0);
+        for s in all_main_setups() {
+            assert!(s.arrival_rate > 0.0, "{} needs a calibrated arrival rate", s.name);
+        }
     }
 
     #[test]

@@ -23,22 +23,29 @@ fn prompt(id: u64) -> Prompt {
     }
 }
 
-/// Random buffer op schedule.
+/// Random buffer op schedule — step-boundary ops plus the rolling-admission
+/// ones (mid-step admit, lane release, step-boundary promotion).
 #[derive(Clone, Debug)]
 enum Op {
     Fill,
     FinishRandom,
     Take(usize),
     SetCapacity(usize),
+    AdmitMidStep,
+    ReleaseRandom,
+    Promote,
 }
 
 fn gen_ops(rng: &mut Rng) -> Vec<Op> {
-    (0..rng.range_usize(5, 60))
-        .map(|_| match rng.range(0, 4) {
+    (0..rng.range_usize(5, 80))
+        .map(|_| match rng.range(0, 7) {
             0 => Op::Fill,
             1 => Op::FinishRandom,
             2 => Op::Take(rng.range_usize(1, 9)),
-            _ => Op::SetCapacity(rng.range_usize(1, 13)),
+            3 => Op::SetCapacity(rng.range_usize(1, 13)),
+            4 => Op::AdmitMidStep,
+            5 => Op::ReleaseRandom,
+            _ => Op::Promote,
         })
         .collect()
 }
@@ -55,12 +62,14 @@ fn buffer_invariants_hold_under_random_schedules() {
             let mut rng = Rng::new(1);
             let mut next_id = 0u64;
             let mut step = 0u64;
+            let mut tick = 0u64;
             let mut taken_total = 0usize;
             let mut added_total = 0usize;
             for op in ops {
+                tick += 1;
                 match op {
                     Op::Fill => {
-                        while buf.has_room() && buf.len() < lanes {
+                        while buf.has_room() {
                             buf.add(prompt(next_id), step).map_err(|e| e.to_string())?;
                             next_id += 1;
                             added_total += 1;
@@ -80,12 +89,14 @@ fn buffer_invariants_hold_under_random_schedules() {
                     }
                     Op::Take(b) => {
                         step += 1;
-                        let finished_before = buf.finished_count();
+                        // take_finished only selects *eligible* finished
+                        // sequences — mid-step admits wait for promotion
+                        let eligible_before = buf.finished_eligible_count();
                         let batch = buf.take_finished(*b, step);
                         taken_total += batch.len();
-                        if batch.len() != finished_before.min(*b) {
+                        if batch.len() != eligible_before.min(*b) {
                             return Err(format!(
-                                "take({b}) returned {} of {finished_before} finished",
+                                "take({b}) returned {} of {eligible_before} eligible",
                                 batch.len()
                             ));
                         }
@@ -93,16 +104,124 @@ fn buffer_invariants_hold_under_random_schedules() {
                             if !seq.is_finished() {
                                 return Err("took an unfinished sequence".into());
                             }
+                            if seq.mid_step {
+                                return Err("took an ineligible mid-step admit".into());
+                            }
                         }
                     }
                     Op::SetCapacity(c) => buf.set_capacity(*c),
+                    Op::AdmitMidStep => {
+                        if buf.has_room() {
+                            buf.admit(prompt(next_id), step, tick.saturating_sub(1), tick, true)
+                                .map_err(|e| e.to_string())?;
+                            next_id += 1;
+                            added_total += 1;
+                        }
+                    }
+                    Op::ReleaseRandom => {
+                        let finished_lanes: Vec<usize> = buf
+                            .iter()
+                            .filter(|s| s.is_finished())
+                            .map(|s| s.lane)
+                            .collect();
+                        if !finished_lanes.is_empty() {
+                            let lane = *rng.choice(&finished_lanes);
+                            // refusal (parked bound) is legal backpressure;
+                            // the sequence must stay buffered either way
+                            let before = buf.len();
+                            buf.release_lane(lane);
+                            if buf.len() != before {
+                                return Err("release changed in-flight count".into());
+                            }
+                        }
+                    }
+                    Op::Promote => buf.promote_admitted(),
                 }
                 buf.check_invariants().map_err(|e| e.to_string())?;
             }
+            // conservation: len() counts lane-resident + parked, so mid-step
+            // releases never leak a sequence
             if taken_total + buf.len() != added_total {
                 return Err(format!(
                     "conservation violated: took {taken_total} + {} buffered != {added_total} added",
                     buf.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Prompt-queue fairness: under any arrival process, pops are FIFO, the
+/// queue honours its bound, nothing is lost (arrived = popped + queued +
+/// dropped accounting is exact), and — given at-least-one-pop-per-tick
+/// service — no admitted prompt waits longer than the queue depth (the
+/// "bounded queue ⇒ bounded wait" guarantee behind the SLO accounting).
+#[test]
+fn prompt_queue_is_fifo_and_waits_are_bounded() {
+    use oppo::data::queue::{Arrivals, PromptQueue};
+    use oppo::data::sampler::PromptSampler;
+    use oppo::data::tasks::Task;
+    use oppo::data::tokenizer::Tokenizer;
+
+    forall(
+        Config { cases: 120, seed: 0xF1F0, shrink_iters: 200 },
+        "queue-fifo-bounded-wait",
+        |rng| {
+            let rate = rng.range_f64(0.05, 3.0);
+            let depth = rng.range_usize(1, 33);
+            let seed = rng.range(0, 1_000_000);
+            let ticks = rng.range_usize(50, 400);
+            (rate, depth, seed, ticks)
+        },
+        |&(rate, depth, seed, ticks)| {
+            let sampler = PromptSampler::new(
+                Task::by_name("mixed").ok_or_else(|| "no mixed task".to_string())?,
+                Tokenizer::builtin(64),
+                24,
+                seed,
+            );
+            let mut q = PromptQueue::new(sampler, Arrivals::Poisson { rate }, depth, seed);
+            let mut popped = 0u64;
+            let mut last_id: Option<u64> = None;
+            let mut last_enq: u64 = 0;
+            for tick in 1..=ticks as u64 {
+                q.advance_to(tick);
+                if q.len() > q.depth() {
+                    return Err(format!("queue {} escaped depth {}", q.len(), q.depth()));
+                }
+                if let Some(p) = q.pop(tick) {
+                    popped += 1;
+                    if p.enqueued_tick > tick {
+                        return Err("popped a prompt from the future".into());
+                    }
+                    // FIFO in both arrival-time and sampler-stream order
+                    if p.enqueued_tick < last_enq {
+                        return Err(format!(
+                            "FIFO violated: enq {} after {}",
+                            p.enqueued_tick, last_enq
+                        ));
+                    }
+                    last_enq = p.enqueued_tick;
+                    if let Some(prev) = last_id {
+                        if p.prompt.id <= prev {
+                            return Err("sampler stream order violated".into());
+                        }
+                    }
+                    last_id = Some(p.prompt.id);
+                    // one pop per tick + bound `depth` ⇒ a prompt admitted
+                    // at position k < depth drains within depth ticks
+                    let wait = tick - p.enqueued_tick;
+                    if wait > depth as u64 {
+                        return Err(format!("wait {wait} exceeds queue depth {depth}"));
+                    }
+                }
+            }
+            if q.arrived() != popped + q.len() as u64 {
+                return Err(format!(
+                    "conservation violated: {} arrived != {popped} popped + {} queued",
+                    q.arrived(),
+                    q.len()
                 ));
             }
             Ok(())

@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Cross-PR benchmark trajectory over the committed BENCH_*.json snapshots.
+
+Each PR commits one pinned-seed snapshot (BENCH_6.json, BENCH_7.json, ...);
+this script lines them up and renders ASCII trajectories of the headline
+metrics per scenario, so a perf regression shows up as a kink in the chart
+rather than a number buried in a JSON diff.  Tolerant of missing scenarios
+and keys — older snapshots predate newer metrics (e.g. lane_idle_frac_mean
+and the SLO block only exist from BENCH_7 on).
+
+Usage:
+  python3 scripts/plot_bench.py              # chart everything found
+  python3 scripts/plot_bench.py --check      # exit non-zero on structural
+                                             # problems in the newest snapshot
+  python3 scripts/plot_bench.py --dir /path  # snapshots live elsewhere
+
+Stdlib only (no matplotlib in CI).
+"""
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# (scenario-level key, display label, lower-is-better)
+METRICS = [
+    ("step_wall_s_mean", "step wall (s)", True),
+    ("util_mean", "utilization", False),
+    ("gen_tokens_per_s", "gen tok/s", False),
+    ("lane_idle_frac_mean", "lane idle frac", True),
+]
+SLO_KEYS = ["queue_wait_p50", "queue_wait_p99", "e2e_p50", "e2e_p99"]
+BAR_WIDTH = 40
+
+
+def load_snapshots(root):
+    """[(pr_number, path, doc)] sorted by PR number."""
+    out = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(path))
+        if not m:
+            continue
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {path}: {e}", file=sys.stderr)
+            continue
+        out.append((int(m.group(1)), path, doc))
+    return sorted(out)
+
+
+def series(snaps, scenario, key):
+    """[(pr, value)] for one scenario-level metric, skipping absences."""
+    pts = []
+    for pr, _path, doc in snaps:
+        v = doc.get("scenarios", {}).get(scenario, {}).get(key)
+        if isinstance(v, (int, float)):
+            pts.append((pr, float(v)))
+    return pts
+
+
+def bar_chart(title, pts, lower_better):
+    if not pts:
+        return
+    print(f"  {title}")
+    hi = max(v for _, v in pts)
+    for pr, v in pts:
+        w = 0 if hi <= 0 else int(round(BAR_WIDTH * v / hi))
+        mark = ""
+        best = min(pts, key=lambda p: p[1]) if lower_better else max(pts, key=lambda p: p[1])
+        if (pr, v) == best and len(pts) > 1:
+            mark = "  <- best"
+        print(f"    PR{pr:>3} | {'#' * w:<{BAR_WIDTH}} {v:.4g}{mark}")
+
+
+def chart_all(snaps):
+    scenarios = []
+    for _pr, _path, doc in snaps:
+        for name in doc.get("scenarios", {}):
+            if name not in scenarios:
+                scenarios.append(name)
+    for sc in scenarios:
+        printed = False
+        for key, label, lower in METRICS:
+            pts = series(snaps, sc, key)
+            if not pts:
+                continue
+            if not printed:
+                print(f"\n== scenario: {sc} ==")
+                printed = True
+            bar_chart(label, pts, lower)
+        # SLO percentiles (flattened from the nested block)
+        for k in SLO_KEYS:
+            pts = []
+            for pr, _path, doc in snaps:
+                slo = doc.get("scenarios", {}).get(sc, {}).get("slo")
+                if isinstance(slo, dict) and isinstance(slo.get(k), (int, float)):
+                    pts.append((pr, float(slo[k])))
+            if pts:
+                if not printed:
+                    print(f"\n== scenario: {sc} ==")
+                    printed = True
+                bar_chart(f"slo {k} (ticks)", pts, True)
+    # repo-level trajectory
+    pts = [
+        (pr, float(doc["sliced_knee_reward_replicas"]))
+        for pr, _path, doc in snaps
+        if isinstance(doc.get("sliced_knee_reward_replicas"), (int, float))
+    ]
+    if pts:
+        print("\n== repo-level ==")
+        bar_chart("sliced knee (reward replicas)", pts, True)
+
+
+def check_latest(snaps):
+    """Structural sanity of the newest snapshot; returns error strings."""
+    errors = []
+    pr, path, doc = snaps[-1]
+    scen = doc.get("scenarios")
+    if not isinstance(scen, dict) or not scen:
+        return [f"{path}: no scenarios block"]
+    for name, sc in scen.items():
+        for key in ("step_wall_s_mean", "util_mean", "gen_tokens_per_s"):
+            if not isinstance(sc.get(key), (int, float)):
+                errors.append(f"{path}: scenarios.{name}.{key} missing/non-numeric")
+    if pr >= 7:
+        # rolling-admission era: the continuous-batching arms must report
+        # lane idle, the Poisson arm must report SLO percentiles, and
+        # rolling must beat its step-synchronous baseline on lane idle
+        pairs = [
+            ("oppo_x1", "oppo_rolling_saturated"),
+            ("traffic_stepsync", "traffic_rolling_poisson"),
+        ]
+        for base_name, roll_name in pairs:
+            base, roll = scen.get(base_name), scen.get(roll_name)
+            if base is None or roll is None:
+                errors.append(f"{path}: missing scenario pair {base_name}/{roll_name}")
+                continue
+            bi, ri = base.get("lane_idle_frac_mean"), roll.get("lane_idle_frac_mean")
+            if not isinstance(bi, (int, float)) or not isinstance(ri, (int, float)):
+                errors.append(
+                    f"{path}: lane_idle_frac_mean missing on {base_name}/{roll_name}"
+                )
+            elif not ri < bi:
+                errors.append(
+                    f"{path}: rolling lane idle {ri:.4g} not below "
+                    f"step-sync baseline {bi:.4g} ({roll_name} vs {base_name})"
+                )
+        poisson = scen.get("traffic_rolling_poisson", {})
+        slo = poisson.get("slo")
+        if not isinstance(slo, dict):
+            errors.append(f"{path}: traffic_rolling_poisson.slo missing")
+        else:
+            for k in ("queue_wait_p50", "queue_wait_p99", "e2e_p50", "e2e_p99"):
+                if not isinstance(slo.get(k), (int, float)):
+                    errors.append(f"{path}: traffic_rolling_poisson.slo.{k} missing")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=None, help="directory holding BENCH_*.json")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate the newest snapshot's structure; non-zero exit on problems",
+    )
+    args = ap.parse_args()
+    root = args.dir or os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    snaps = load_snapshots(root)
+    if not snaps:
+        print(f"no BENCH_*.json snapshots under {root}", file=sys.stderr)
+        return 1
+    print(f"found {len(snaps)} snapshot(s): " + ", ".join(p for _, p, _ in [(n, os.path.basename(p), d) for n, p, d in snaps]))
+    chart_all(snaps)
+    if args.check:
+        errors = check_latest(snaps)
+        if errors:
+            print("\ncheck FAILED:", file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+            return 1
+        print("\ncheck OK: newest snapshot is structurally sound")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
