@@ -32,6 +32,15 @@ full-shape kernel.  The builders are lane-polymorphic, so the sliced
 flavours differ from the full-shape ones only in their input specs.
 Emitted for every replica count N > 1 that divides G.
 
+Paged variants: the ``*_paged`` entry family replaces each state's dense
+``[rows, H, s_max, hd]`` caches with one shared ``[P, H, bs, hd]`` block
+pool per layer-k/v plus a per-call ``[rows, s_max/bs]`` i32 block table
+(vLLM-style; block 0 is the reserved scratch sink for unallocated slots).
+The host-side ``BlockPool`` allocator (rust coordinator) decides which
+physical blocks each lane owns; admission gates on free blocks instead of
+free lanes.  Emitted full-G only — paged and lane-sliced are mutually
+exclusive, and the Rust workers pick paged > sliced > masked at spawn.
+
 Kernel flavours: the default artifact set lowers with ``kernel_impl="jnp"``
 (XLA-fused oracles — the throughput flavour; see EXPERIMENTS.md §Perf).  The
 Pallas L1 kernels additionally ship as ``*_pallas`` artifacts for the middle
@@ -98,6 +107,17 @@ def kv_specs(cfg: M.ModelConfig, batch: int) -> list[jax.ShapeDtypeStruct]:
     return [_sds(kv_shape) for _ in range(2 * cfg.n_layers)]
 
 
+def paged_kv_specs(cfg: M.ModelConfig) -> list[jax.ShapeDtypeStruct]:
+    """The pooled block caches shared by all lanes: [P, H, bs, hd] × 2L."""
+    shape = (cfg.kv_pool_size, cfg.n_heads, cfg.kv_block_size, cfg.head_dim)
+    return [_sds(shape) for _ in range(2 * cfg.n_layers)]
+
+
+def block_table_spec(cfg: M.ModelConfig, rows: int) -> jax.ShapeDtypeStruct:
+    """Per-call i32 block table [rows, s_max / kv_block_size]."""
+    return _sds((rows, cfg.kv_blocks_per_lane), jnp.int32)
+
+
 def sliced_row_counts(cfg: M.ModelConfig) -> list[int]:
     """Compacted row counts G/N for every replica count N > 1 dividing G.
 
@@ -147,6 +167,31 @@ def entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
                 [*p, _sds((rows, c), i32), _sds((rows,), i32), _sds((rows,), i32),
                  _sds((rows, cfg.vocab), f32), *kv_specs(cfg, rows)],
             )
+    # paged flavours: pooled [P, H, bs, hd] caches + a trailing block table.
+    # Emitted full-G only (paged and lane-sliced are mutually exclusive —
+    # a paged pool is already shared state, so replicas fall back to the
+    # masked full-shape split).
+    pool = paged_kv_specs(cfg)
+    table_g = block_table_spec(cfg, g)
+    sigs["actor_prefill_paged"] = (
+        M.make_actor_prefill_paged(cfg),
+        [*p, _sds((g, s), i32), _sds((g,), i32), _sds((g,), i32), *pool, table_g],
+    )
+    for c in cfg.chunk_sizes:
+        sigs[f"actor_generate_chunk_paged_c{c}"] = (
+            M.make_actor_generate_chunk_paged(cfg, c),
+            [*p, _sds((g, s), i32), _sds((g,), i32), _sds((g,), i32),
+             *pool, _sds((2,), u32), table_g],
+        )
+        sigs[f"reward_prefill_chunk_paged_c{c}"] = (
+            M.make_reward_prefill_chunk_paged(cfg, c),
+            [*p, _sds((g, c), i32), _sds((g,), i32), _sds((g,), i32), *pool, table_g],
+        )
+        sigs[f"ref_prefill_chunk_paged_c{c}"] = (
+            M.make_ref_prefill_chunk_paged(cfg, c),
+            [*p, _sds((g, c), i32), _sds((g,), i32), _sds((g,), i32),
+             _sds((g, cfg.vocab), f32), *pool, table_g],
+        )
     sigs["reward_score_full"] = (
         M.make_reward_score_full(cfg),
         [*p, _sds((g, s), i32), _sds((g,), i32)],
@@ -202,6 +247,13 @@ def pallas_entry_signatures(cfg: M.ModelConfig) -> dict[str, tuple]:
             [*p, _sds((rows, mid_c), i32), _sds((rows,), i32), _sds((rows,), i32),
              *kv_specs(pcfg, rows)],
         )
+    # paged pallas flavour: the Pallas chunked-prefill kernel runs unchanged
+    # on the gathered dense view, so the paged builder lowers directly
+    sigs[f"reward_prefill_chunk_paged_pallas_c{mid_c}"] = (
+        M.make_reward_prefill_chunk_paged(pcfg, mid_c),
+        [*p, _sds((g, mid_c), i32), _sds((g,), i32), _sds((g,), i32),
+         *paged_kv_specs(pcfg), block_table_spec(pcfg, g)],
+    )
     return sigs
 
 

@@ -62,11 +62,28 @@ class ModelConfig:
     temperature: float = 1.0
     dpo_beta: float = 0.1
     kernel_impl: str = "jnp"  # "jnp" (fused oracle) or "pallas" (L1 kernels)
+    # Paged KV: block granularity (tokens; must divide s_max) and physical
+    # pool size for the paged entry family.  0 pool blocks = auto-size to
+    # full capacity (lanes * blocks_per_lane + the reserved scratch block),
+    # which keeps the paged entries numerically interchangeable with the
+    # dense ones while the host allocator decides how much is actually used.
+    kv_block_size: int = 16
+    kv_pool_blocks: int = 0
 
     @property
     def head_dim(self) -> int:
         assert self.d_model % self.n_heads == 0
         return self.d_model // self.n_heads
+
+    @property
+    def kv_blocks_per_lane(self) -> int:
+        assert self.s_max % self.kv_block_size == 0, (self.s_max, self.kv_block_size)
+        return self.s_max // self.kv_block_size
+
+    @property
+    def kv_pool_size(self) -> int:
+        """Physical blocks in the pool, scratch block 0 included."""
+        return self.kv_pool_blocks or self.lanes * self.kv_blocks_per_lane + 1
 
     def kernels(self):
         return kernels.select(self.kernel_impl)
@@ -295,6 +312,61 @@ def prefill_chunk(cfg: ModelConfig, params: dict, chunk: jax.Array, start: jax.A
     return scalar, logits, new_kv
 
 
+# ---- Paged KV (block-table-indexed pool) ----------------------------------
+#
+# vLLM-style paged layout: each layer's K (or V) cache is one pooled buffer
+# ``[P, H, bs, hd]`` of P physical blocks shared by all lanes, and the host
+# allocator hands every call an i32 block table ``[rows, s_max/bs]`` mapping
+# lane-local block j of row r to a physical block.  The dense position
+# ``t`` of row ``r`` lives at ``pool[table[r, t//bs], :, t % bs, :]``.
+#
+# Physical block 0 is reserved as the *scratch sink*: table slots the host
+# has not allocated yet point at it.  Writes to it collide across lanes and
+# reads from it return garbage — both harmless, because the attention masks
+# (``start``/``pos``) never let a valid query attend a position beyond its
+# allocated prefix, the same garbage-in-garbage-out contract the dense
+# caches already rely on past ``n_valid``.
+#
+# The reference implementation is gather → dense compute → scatter: exact
+# semantics (paged == dense wherever the table covers the written rows), so
+# every dense attention kernel — jnp oracle or Pallas — runs unchanged on
+# the gathered view.
+
+
+def paged_gather(cfg: ModelConfig, pool: jax.Array, table: jax.Array) -> jax.Array:
+    """``pool [P,H,bs,hd]`` + ``table [B, s_max/bs]`` → dense ``[B,H,s_max,hd]``."""
+    d = pool[table]  # [B, nblk, H, bs, hd]
+    b, nblk, h, bs, hd = d.shape
+    return d.transpose(0, 2, 1, 3, 4).reshape(b, h, nblk * bs, hd)
+
+
+def paged_scatter(cfg: ModelConfig, pool: jax.Array, table: jax.Array,
+                  dense: jax.Array) -> jax.Array:
+    """Write a dense ``[B,H,S,hd]`` view back into the pool through the table."""
+    b, h, s, hd = dense.shape
+    bs = cfg.kv_block_size
+    blocks = dense.reshape(b, h, s // bs, bs, hd).transpose(0, 2, 1, 3, 4)
+    return pool.at[table].set(blocks)
+
+
+def decode_step_paged(cfg: ModelConfig, params: dict, tok: jax.Array,
+                      pos: jax.Array, pool_kv: list, table: jax.Array):
+    """``decode_step`` against pooled caches: gather → step → scatter."""
+    dense_kv = [paged_gather(cfg, p, table) for p in pool_kv]
+    logits, scalar, new_kv = decode_step(cfg, params, tok, pos, dense_kv)
+    new_pool = [paged_scatter(cfg, p, table, nk) for p, nk in zip(pool_kv, new_kv)]
+    return logits, scalar, new_pool
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params: dict, chunk: jax.Array,
+                        start: jax.Array, pool_kv: list, table: jax.Array):
+    """``prefill_chunk`` against pooled caches: gather → prefill → scatter."""
+    dense_kv = [paged_gather(cfg, p, table) for p in pool_kv]
+    scalar, logits, new_kv = prefill_chunk(cfg, params, chunk, start, dense_kv)
+    new_pool = [paged_scatter(cfg, p, table, nk) for p, nk in zip(pool_kv, new_kv)]
+    return scalar, logits, new_pool
+
+
 # --------------------------------------------------------------------------
 # Entry points (lowered to HLO by aot.py)
 # --------------------------------------------------------------------------
@@ -474,6 +546,145 @@ def make_ref_prefill_chunk(cfg: ModelConfig, c: int) -> Callable:
             (n_valid > 0)[:, None], logp_all[lanes, last_idx], boundary
         )
         return (*new_kv, new_boundary, logp)
+
+    return fn
+
+
+# ---- Paged entry family ---------------------------------------------------
+#
+# Same contracts as the dense flavours above, with the per-state dense
+# ``[rows, H, S, hd]`` caches replaced by the shared ``[P, H, bs, hd]`` pool
+# + per-call ``[rows, S/bs]`` block table.  The table rides as the LAST
+# input (after the RNG key where one exists) so the pool buffers occupy the
+# same argument positions the dense caches did.
+
+
+def make_actor_prefill_paged(cfg: ModelConfig) -> Callable:
+    """(params, tokens [G,S], prompt_len [G], reset [G], pool, table [G,S/bs])
+    -> pool'.  Selective-reset semantics identical to ``actor_prefill``:
+    lanes with ``reset == 0`` round-trip their pooled blocks bit-identically.
+    """
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        tokens, prompt_len, reset = args[np_], args[np_ + 1], args[np_ + 2]
+        pool = list(args[np_ + 3 : np_ + 3 + 2 * cfg.n_layers])
+        table = args[np_ + 3 + 2 * cfg.n_layers]
+        del prompt_len
+        g = tokens.shape[0]
+        chunk = tokens[:, : cfg.prompt_max]
+        start = jnp.zeros((g,), jnp.int32)
+        dense_kv = [paged_gather(cfg, p, table) for p in pool]
+        _, _, new_kv = prefill_chunk(cfg, params, chunk, start, dense_kv)
+        sel = (reset != 0)[:, None, None, None]
+        out_kv = [jnp.where(sel, nk, ok) for nk, ok in zip(new_kv, dense_kv)]
+        out_pool = [paged_scatter(cfg, p, table, ok) for p, ok in zip(pool, out_kv)]
+        return tuple(out_pool)
+
+    return fn
+
+
+def make_actor_generate_chunk_paged(cfg: ModelConfig, c: int) -> Callable:
+    """(params, tokens [G,S], pos [G], live [G], pool, key [2]u32, table)
+    -> (tokens', pos', pool', out_tok [G,C], logp [G,C], value [G,C]).
+
+    ``C`` decode+sample steps through ``decode_step_paged``.  The host must
+    have grown every live lane's table to cover ``pos + C`` before the call;
+    dead lanes' pooled blocks round-trip bit-identically (same freeze
+    contract as the dense flavour).
+    """
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        tokens, pos, live = args[np_], args[np_ + 1], args[np_ + 2]
+        pool = list(args[np_ + 3 : np_ + 3 + 2 * cfg.n_layers])
+        key = args[np_ + 3 + 2 * cfg.n_layers]
+        table = args[np_ + 4 + 2 * cfg.n_layers]
+        g = tokens.shape[0]
+        lanes = jnp.arange(g)
+
+        def step(carry, i):
+            tokens, pos, pool, key = carry
+            alive = live != 0
+            qpos = jnp.maximum(pos - 1, 0)
+            last_tok = tokens[lanes, qpos]
+            dense_kv = [paged_gather(cfg, p, table) for p in pool]
+            logits, value, new_kv = decode_step(cfg, params, last_tok, qpos, dense_kv)
+            # freeze dead lanes' caches (scatter then writes the old rows back)
+            new_kv = [
+                jnp.where(alive[:, None, None, None], nk, ok)
+                for nk, ok in zip(new_kv, dense_kv)
+            ]
+            pool = [paged_scatter(cfg, p, table, nk) for p, nk in zip(pool, new_kv)]
+            key, sub = jax.random.split(key)
+            next_tok = jax.random.categorical(sub, logits / cfg.temperature, axis=-1)
+            next_tok = next_tok.astype(jnp.int32)
+            logp_all = jax.nn.log_softmax(logits, axis=-1)
+            logp = logp_all[lanes, next_tok]
+            write_pos = jnp.minimum(pos, cfg.s_max - 1)
+            old_at_pos = tokens[lanes, write_pos]
+            tok_write = jnp.where(alive, next_tok, old_at_pos)
+            tokens = tokens.at[lanes, write_pos].set(tok_write)
+            pos = pos + alive.astype(jnp.int32)
+            out = (
+                jnp.where(alive, next_tok, PAD),
+                jnp.where(alive, logp, 0.0),
+                jnp.where(alive, value, 0.0),
+            )
+            return (tokens, pos, pool, key), out
+
+        (tokens, pos, pool, _), (toks, logps, values) = jax.lax.scan(
+            step, (tokens, pos, pool, key), jnp.arange(c)
+        )
+        return (tokens, pos, *pool, toks.T, logps.T, values.T)
+
+    return fn
+
+
+def make_reward_prefill_chunk_paged(cfg: ModelConfig, c: int) -> Callable:
+    """(rparams, chunk [G,C], start [G], n_valid [G], pool, table)
+    -> (pool', score [G,C]) — the paged ``reward_prefill_chunk``."""
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        chunk, start, n_valid = args[np_], args[np_ + 1], args[np_ + 2]
+        pool = list(args[np_ + 3 : np_ + 3 + 2 * cfg.n_layers])
+        table = args[np_ + 3 + 2 * cfg.n_layers]
+        del n_valid
+        score, _, new_pool = prefill_chunk_paged(cfg, params, chunk, start, pool, table)
+        return (*new_pool, score)
+
+    return fn
+
+
+def make_ref_prefill_chunk_paged(cfg: ModelConfig, c: int) -> Callable:
+    """(refparams, chunk [G,C], start [G], n_valid [G], boundary [G,V], pool,
+    table) -> (pool', boundary' [G,V], logp [G,C]) — paged ref prefill with
+    the same cross-chunk boundary-carry seam as the dense flavour."""
+
+    def fn(*args):
+        np_ = len(param_names(cfg))
+        params = unflatten_params(cfg, list(args[:np_]))
+        chunk, start, n_valid, boundary = (
+            args[np_], args[np_ + 1], args[np_ + 2], args[np_ + 3]
+        )
+        pool = list(args[np_ + 4 : np_ + 4 + 2 * cfg.n_layers])
+        table = args[np_ + 4 + 2 * cfg.n_layers]
+        _, logits, new_pool = prefill_chunk_paged(cfg, params, chunk, start, pool, table)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)
+        g = chunk.shape[0]
+        lanes = jnp.arange(g)
+        intra = jnp.take_along_axis(logp_all[:, :-1], chunk[:, 1:, None], axis=-1)[..., 0]
+        first = jnp.where(start > 0, boundary[lanes, chunk[:, 0]], 0.0)
+        logp = jnp.concatenate([first[:, None], intra], axis=1)
+        last_idx = jnp.maximum(n_valid - 1, 0)
+        new_boundary = jnp.where(
+            (n_valid > 0)[:, None], logp_all[lanes, last_idx], boundary
+        )
+        return (*new_pool, new_boundary, logp)
 
     return fn
 

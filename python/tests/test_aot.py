@@ -85,6 +85,47 @@ def test_sliced_entries_cover_divisor_replica_counts(manifest):
         )
 
 
+def test_paged_entries_present(manifest):
+    cfg = manifest["config"]
+    names = set(manifest["entries"])
+    assert "actor_prefill_paged" in names
+    for c in cfg["chunk_sizes"]:
+        assert f"actor_generate_chunk_paged_c{c}" in names
+        assert f"reward_prefill_chunk_paged_c{c}" in names
+        assert f"ref_prefill_chunk_paged_c{c}" in names
+    assert any(n.startswith("reward_prefill_chunk_paged_pallas_c") for n in names)
+    # paged entries are full-G only: no sliced paged flavours
+    assert not any("_paged_g" in n for n in names)
+
+
+def test_paged_entry_shapes(manifest):
+    cfg = manifest["config"]
+    g, bs = cfg["lanes"], cfg["kv_block_size"]
+    assert cfg["s_max"] % bs == 0
+    nblk = cfg["s_max"] // bs
+    pool = cfg["kv_pool_blocks"] or g * nblk + 1
+    hd = cfg["d_model"] // cfg["n_heads"]
+    np_ = manifest["n_params"]
+    l2 = 2 * cfg["n_layers"]
+    e = manifest["entries"]["actor_prefill_paged"]
+    # params + (tokens, prompt_len, reset) + pool kv + block table
+    assert len(e["inputs"]) == np_ + 3 + l2 + 1
+    assert e["inputs"][np_ + 3]["shape"] == [pool, cfg["n_heads"], bs, hd]
+    assert e["inputs"][-1]["shape"] == [g, nblk]
+    assert e["inputs"][-1]["dtype"] == "int32"
+    assert len(e["outputs"]) == l2
+    assert e["outputs"][0]["shape"] == [pool, cfg["n_heads"], bs, hd]
+    c0 = cfg["chunk_sizes"][0]
+    gen = manifest["entries"][f"actor_generate_chunk_paged_c{c0}"]
+    # params + (tokens, pos, live) + pool kv + key + table
+    assert len(gen["inputs"]) == np_ + 3 + l2 + 2
+    assert len(gen["outputs"]) == 2 + l2 + 3
+    assert gen["outputs"][2]["shape"] == [pool, cfg["n_heads"], bs, hd]
+    ref = manifest["entries"][f"ref_prefill_chunk_paged_c{c0}"]
+    assert len(ref["inputs"]) == np_ + 4 + l2 + 1
+    assert len(ref["outputs"]) == l2 + 2
+
+
 def test_sliced_entry_shapes_are_row_sized(manifest):
     cfg = manifest["config"]
     g, c0 = cfg["lanes"], cfg["chunk_sizes"][0]

@@ -1,0 +1,259 @@
+"""Paged KV semantics: gather/scatter round-trips and paged == dense.
+
+The paged entry family is the enabling change for block-granular KV
+allocation (lane slots decoupled from KV capacity).  Its correctness
+contract is exact: wherever the block table covers a lane's written rows,
+the paged flavour must reproduce the dense flavour — generation tokens,
+log-probs, values, streamed reward scores, and streamed ref log-probs all
+agree, and the reserved scratch block (physical block 0) must never leak
+into valid outputs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(
+    d_model=64, n_heads=2, n_layers=2, d_ff=128, s_max=64, prompt_max=8,
+    lanes=4, ppo_batch=4, chunk_sizes=(4, 8), temperature=1.0,
+    kv_block_size=16,
+)
+NBLK = CFG.kv_blocks_per_lane  # 4
+POOL = CFG.kv_pool_size        # lanes * nblk + 1 scratch
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(42))
+
+
+def fresh_dense_kv(batch):
+    shape = (batch, CFG.n_heads, CFG.s_max, CFG.head_dim)
+    return [jnp.zeros(shape, jnp.float32) for _ in range(2 * CFG.n_layers)]
+
+
+def fresh_pool_kv():
+    shape = (POOL, CFG.n_heads, CFG.kv_block_size, CFG.head_dim)
+    return [jnp.zeros(shape, jnp.float32) for _ in range(2 * CFG.n_layers)]
+
+
+def full_table(g=None, perm=None):
+    """A fully-allocated table: lane r's block j -> physical 1 + r*NBLK + j,
+    optionally shuffled through ``perm`` over the non-scratch blocks."""
+    g = g or CFG.lanes
+    ids = np.arange(g * NBLK)
+    if perm is not None:
+        ids = perm[ids]
+    return jnp.asarray(1 + ids.reshape(g, NBLK), jnp.int32)
+
+
+def make_prompts(key, g=None):
+    g = g or CFG.lanes
+    toks = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    toks = toks.at[:, 0].set(M.BOS)
+    prompt_len = jnp.full((g,), CFG.prompt_max, jnp.int32)
+    return toks, prompt_len
+
+
+def test_gather_scatter_roundtrip_arbitrary_tables():
+    """scatter(dense) then gather must reproduce dense for any permutation
+    table — the layout-equivalence half of the BlockPool invariants."""
+    rng = np.random.default_rng(0)
+    g = CFG.lanes
+    for trial in range(5):
+        perm = rng.permutation(g * NBLK)
+        table = full_table(perm=perm)
+        dense = jnp.asarray(
+            rng.standard_normal((g, CFG.n_heads, CFG.s_max, CFG.head_dim)),
+            jnp.float32,
+        )
+        pool = jnp.zeros((POOL, CFG.n_heads, CFG.kv_block_size, CFG.head_dim))
+        pool = M.paged_scatter(CFG, pool, table, dense)
+        back = M.paged_gather(CFG, pool, table)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(dense))
+        # scratch block 0 untouched by a fully-allocated table
+        np.testing.assert_array_equal(np.asarray(pool[0]), 0.0)
+
+
+def test_paged_generate_matches_dense(params):
+    """Same key, same prompts: paged generation must reproduce the dense
+    flavour's tokens exactly and logps/values numerically."""
+    key = jax.random.PRNGKey(0)
+    tokens, prompt_len = make_prompts(key)
+    reset = jnp.ones((CFG.lanes,), jnp.int32)
+    flat = M.flatten_params(CFG, params)
+    live = jnp.ones((CFG.lanes,), jnp.int32)
+    raw = jax.random.key_data(jax.random.PRNGKey(9)).astype(jnp.uint32)
+    c = 4
+
+    kv = fresh_dense_kv(CFG.lanes)
+    kv = list(M.make_actor_prefill(CFG)(*flat, tokens, prompt_len, reset, *kv))
+    dres = M.make_actor_generate_chunk(CFG, c)(*flat, tokens, prompt_len, live, *kv, raw)
+
+    table = full_table()
+    pool = fresh_pool_kv()
+    pool = list(
+        M.make_actor_prefill_paged(CFG)(*flat, tokens, prompt_len, reset, *pool, table)
+    )
+    pres = M.make_actor_generate_chunk_paged(CFG, c)(
+        *flat, tokens, prompt_len, live, *pool, raw, table
+    )
+
+    l2 = 2 * CFG.n_layers
+    np.testing.assert_array_equal(np.asarray(pres[0]), np.asarray(dres[0]))  # tokens
+    np.testing.assert_array_equal(np.asarray(pres[1]), np.asarray(dres[1]))  # pos
+    np.testing.assert_array_equal(
+        np.asarray(pres[2 + l2]), np.asarray(dres[2 + l2])  # sampled tokens
+    )
+    for k in (3 + l2, 4 + l2):  # logp, value
+        np.testing.assert_allclose(
+            np.asarray(pres[k]), np.asarray(dres[k]), rtol=5e-4, atol=5e-4
+        )
+    # the paged KV content must equal the dense caches through the table
+    for pk, dk in zip(pres[2 : 2 + l2], dres[2 : 2 + l2]):
+        back = M.paged_gather(CFG, pk, table)
+        np.testing.assert_allclose(
+            np.asarray(back), np.asarray(dk), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_paged_reward_prefill_matches_dense_streaming(params):
+    """Chunk-streamed paged reward prefill == dense streamed prefill, with
+    the table grown incrementally at chunk boundaries like the host does."""
+    key = jax.random.PRNGKey(3)
+    g = CFG.lanes
+    lens = jnp.array([13, 24, 32, 9], jnp.int32)
+    tokens = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    flat = M.flatten_params(CFG, params)
+    c = 4
+    bs = CFG.kv_block_size
+
+    dfn = M.make_reward_prefill_chunk(CFG, c)
+    pfn = M.make_reward_prefill_chunk_paged(CFG, c)
+    kv = fresh_dense_kv(g)
+    pool = fresh_pool_kv()
+    # incremental table: slots start at scratch 0 and grow as chunks land
+    table = np.zeros((g, NBLK), np.int32)
+    next_free = 1
+    max_len = int(lens.max())
+    for start in range(0, max_len, c):
+        # host-side grow: cover [0, start + c) for every lane still streaming
+        for lane in range(g):
+            need = min(-(-min(start + c, int(lens[lane])) // bs), NBLK)
+            while int((table[lane] != 0).sum()) < need:
+                j = int((table[lane] != 0).sum())
+                table[lane, j] = next_free
+                next_free += 1
+        chunk = jax.lax.dynamic_slice(tokens, (0, start), (g, c))
+        starts = jnp.full((g,), start, jnp.int32)
+        n_valid = jnp.clip(lens - start, 0, c)
+        dres = dfn(*flat, chunk, starts, n_valid, *kv)
+        kv = list(dres[: 2 * CFG.n_layers])
+        pres = pfn(*flat, chunk, starts, n_valid, *pool, jnp.asarray(table))
+        pool = list(pres[: 2 * CFG.n_layers])
+        d_scores = np.asarray(dres[2 * CFG.n_layers])
+        p_scores = np.asarray(pres[2 * CFG.n_layers])
+        for lane in range(g):
+            nv = int(n_valid[lane])
+            np.testing.assert_allclose(
+                p_scores[lane, :nv], d_scores[lane, :nv], rtol=5e-4, atol=5e-4,
+                err_msg=f"lane {lane} chunk@{start}",
+            )
+
+
+def test_paged_ref_prefill_matches_dense_logprobs(params):
+    """Paged streamed ref log-probs reproduce dense ``token_logprobs``
+    across the cross-chunk boundary seam."""
+    key = jax.random.PRNGKey(21)
+    g = CFG.lanes
+    lens = jnp.array([14, 23, 32, 7], jnp.int32)
+    tokens = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    tokens = tokens.at[:, 0].set(M.BOS)
+    flat = M.flatten_params(CFG, params)
+    dense, _ = M.token_logprobs(CFG, params, tokens)
+
+    c = 4
+    fn = M.make_ref_prefill_chunk_paged(CFG, c)
+    pool = fresh_pool_kv()
+    table = full_table()
+    boundary = jnp.zeros((g, CFG.vocab), jnp.float32)
+    got = np.full((g, CFG.s_max), np.nan, np.float32)
+    for start in range(0, int(lens.max()), c):
+        chunk = jax.lax.dynamic_slice(tokens, (0, start), (g, c))
+        starts = jnp.full((g,), start, jnp.int32)
+        n_valid = jnp.clip(lens - start, 0, c)
+        res = fn(*flat, chunk, starts, n_valid, boundary, *pool, table)
+        pool = list(res[: 2 * CFG.n_layers])
+        boundary = res[2 * CFG.n_layers]
+        logp = np.asarray(res[2 * CFG.n_layers + 1])
+        for lane in range(g):
+            nv = int(n_valid[lane])
+            got[lane, start : start + nv] = logp[lane, :nv]
+    for lane in range(g):
+        n = int(lens[lane])
+        np.testing.assert_allclose(
+            got[lane, :n], np.asarray(dense)[lane, :n], rtol=5e-4, atol=5e-4,
+            err_msg=f"lane {lane}",
+        )
+
+
+def test_scratch_block_garbage_does_not_leak(params):
+    """Poisoning physical block 0 (the scratch sink unallocated table slots
+    point at) must not change any valid output — the masked-attention
+    garbage-in-garbage-out contract the allocator relies on."""
+    key = jax.random.PRNGKey(5)
+    g = CFG.lanes
+    lens = jnp.full((g,), CFG.kv_block_size, jnp.int32)  # one block each
+    tokens = jax.random.randint(key, (g, CFG.s_max), 3, CFG.vocab).astype(jnp.int32)
+    flat = M.flatten_params(CFG, params)
+    c = 8
+    fn = M.make_reward_prefill_chunk_paged(CFG, c)
+
+    # only block 0 of each lane allocated; the rest point at scratch 0
+    table = np.zeros((g, NBLK), np.int32)
+    table[:, 0] = 1 + np.arange(g)
+    table = jnp.asarray(table)
+
+    def run(poison):
+        pool = fresh_pool_kv()
+        if poison:
+            pool = [p.at[0].set(1e6) for p in pool]
+        out = None
+        for start in range(0, int(lens.max()), c):
+            chunk = jax.lax.dynamic_slice(tokens, (0, start), (g, c))
+            starts = jnp.full((g,), start, jnp.int32)
+            n_valid = jnp.clip(lens - start, 0, c)
+            res = fn(*flat, chunk, starts, n_valid, *pool, table)
+            pool = list(res[: 2 * CFG.n_layers])
+            out = np.asarray(res[2 * CFG.n_layers])
+        return out
+
+    clean, poisoned = run(False), run(True)
+    np.testing.assert_allclose(clean, poisoned, rtol=1e-6, atol=1e-6)
+
+
+def test_paged_pallas_flavour_agrees(params):
+    """The Pallas kernels run unchanged on the gathered dense view."""
+    pcfg = dataclasses.replace(CFG, kernel_impl="pallas")
+    key = jax.random.PRNGKey(14)
+    g = CFG.lanes
+    tokens = jax.random.randint(key, (g, 8), 3, CFG.vocab).astype(jnp.int32)
+    start = jnp.zeros((g,), jnp.int32)
+    nv = jnp.full((g,), 8, jnp.int32)
+    flat = M.flatten_params(CFG, params)
+    table = full_table()
+    r_jnp = M.make_reward_prefill_chunk_paged(CFG, 8)(
+        *flat, tokens, start, nv, *fresh_pool_kv(), table
+    )
+    r_pal = M.make_reward_prefill_chunk_paged(pcfg, 8)(
+        *flat, tokens, start, nv, *fresh_pool_kv(), table
+    )
+    for a, b in zip(r_jnp, r_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)

@@ -1,21 +1,23 @@
-//! Pinned-seed performance snapshot → `BENCH_7.json`.
+//! Pinned-seed performance snapshot → `BENCH_8.json`.
 //!
 //! Runs the deterministic simulator on the paper's main preset at a fixed
 //! seed and emits a machine-readable snapshot of the metrics this repo's
 //! perf work is judged by: per-stage busy/idle attribution, steady-state
 //! step wall time, streamed-chunk throughput, the lane-slicing knee
-//! (`min_replicas_actor_bound`), and — new with rolling admission — lane
-//! idle fractions and per-prompt latency percentiles (queue wait / e2e
-//! p50/p95/p99) for the continuous-batching arms against their
-//! step-synchronous baselines.  The sim sections are bit-reproducible on
-//! any machine — same seed, same numbers — so the committed snapshot diffs
-//! cleanly against a re-run; the `host` section (peak RSS, hot-path
-//! timings, runner wall time) is machine-dependent and refreshed by each
-//! local run.  `scripts/plot_bench.py` charts the committed `BENCH_*.json`
-//! sequence across PRs.
+//! (`min_replicas_actor_bound`), lane idle fractions and per-prompt
+//! latency percentiles for the continuous-batching arms — and, new with
+//! paged KV, a `paged_kv` section comparing peak KV commitment and the
+//! max-concurrent-lanes bound between the dense (one worst-case row per
+//! lane) and block-granular arms at *identical* decode schedules.  The sim
+//! sections are bit-reproducible on any machine — same seed, same numbers
+//! — so the committed snapshot diffs cleanly against a re-run; the `host`
+//! section (peak RSS, hot-path timings, runner wall time) is
+//! machine-dependent and refreshed by each local run.
+//! `scripts/plot_bench.py` charts the committed `BENCH_*.json` sequence
+//! across PRs.
 //!
 //! Usage:
-//!   cargo bench --bench bench_snapshot              # writes ../BENCH_7.json
+//!   cargo bench --bench bench_snapshot              # writes ../BENCH_8.json
 //!   cargo bench --bench bench_snapshot -- --out /tmp/snap.json
 
 use std::time::Instant;
@@ -23,7 +25,7 @@ use std::time::Instant;
 use oppo::eval::{print_table, Row};
 use oppo::metrics::RunLog;
 use oppo::ppo::gae::gae;
-use oppo::sim::pipeline::{min_replicas_actor_bound, simulate, Pipeline, SimConfig};
+use oppo::sim::pipeline::{kv_lane_bounds, min_replicas_actor_bound, simulate, Pipeline, SimConfig};
 use oppo::sim::presets;
 use oppo::util::json::{self, Value};
 
@@ -31,6 +33,8 @@ const SEED: u64 = 600;
 const STEPS: usize = 60;
 const KNEE_MAX: usize = 8;
 const KNEE_TOL: f64 = 0.02;
+/// Paged-KV block size for the paged arms (tokens per physical block).
+const KV_BLOCK_TOKENS: f64 = 64.0;
 
 fn cfg(reward_replicas: usize, ref_replicas: usize) -> SimConfig {
     let mut c = SimConfig::new(presets::stackex_7b_h200(), STEPS, SEED);
@@ -55,6 +59,9 @@ fn scenario(name: &str, log: &RunLog) -> (Value, Row) {
         mid_step += r.admitted_mid_step as u64;
         dropped += r.queue_dropped as u64;
     }
+    // peak over the whole run — KV pressure spikes early while lanes warm
+    // up, so a tail-only max would understate the dense arm's commitment
+    let peak_kv = log.records.iter().map(|r| r.peak_kv_bytes).max().unwrap_or(0);
     let mut stages = Vec::new();
     for (i, st0) in tail[0].stages.iter().enumerate() {
         let (mut busy, mut idle) = (0.0, 0.0);
@@ -96,6 +103,7 @@ fn scenario(name: &str, log: &RunLog) -> (Value, Row) {
         ("lane_idle_frac_mean", json::num(lane_idle / n)),
         ("admitted_mid_step", json::num(mid_step as f64)),
         ("queue_dropped", json::num(dropped as f64)),
+        ("peak_kv_bytes", json::num(peak_kv as f64)),
         ("slo", slo),
         ("stages", Value::Arr(stages)),
     ]);
@@ -185,7 +193,7 @@ fn main() {
         // anything else (--bench, harness flags) is cargo's — ignore
     }
     let out_path = out_path
-        .unwrap_or_else(|| format!("{}/../BENCH_7.json", env!("CARGO_MANIFEST_DIR")));
+        .unwrap_or_else(|| format!("{}/../BENCH_8.json", env!("CARGO_MANIFEST_DIR")));
 
     let t0 = Instant::now();
     let mut rows = Vec::new();
@@ -213,11 +221,39 @@ fn main() {
         Pipeline::oppo(),
         SimConfig::new(traffic.clone(), STEPS, SEED),
     );
-    run(
-        "traffic_rolling_poisson",
-        Pipeline::oppo(),
-        SimConfig::new(traffic, STEPS, SEED).rolling_poisson(rate),
-    );
+    // paged KV vs dense at the SAME schedule: the rolling-Poisson arm runs
+    // twice, dense and block-granular.  Throughput columns must match
+    // exactly (paging is memory accounting only); peak KV must not.
+    let dense_cfg = SimConfig::new(traffic, STEPS, SEED).rolling_poisson(rate);
+    let paged_cfg = dense_cfg.clone().paged(KV_BLOCK_TOKENS);
+    let dense_log = simulate(Pipeline::oppo(), &dense_cfg);
+    let paged_log = simulate(Pipeline::oppo(), &paged_cfg);
+    let peak_of = |l: &RunLog| l.records.iter().map(|r| r.peak_kv_bytes).max().unwrap_or(0);
+    let (dense_peak, paged_peak) = (peak_of(&dense_log), peak_of(&paged_log));
+    run("traffic_rolling_poisson", Pipeline::oppo(), dense_cfg.clone());
+    run("traffic_rolling_paged", Pipeline::oppo(), paged_cfg);
+    let (dense_lanes, paged_lanes) = kv_lane_bounds(&dense_cfg, KV_BLOCK_TOKENS);
+    let paged_kv = json::obj(vec![
+        ("kv_block_tokens", json::num(KV_BLOCK_TOKENS)),
+        ("dense_peak_kv_bytes", json::num(dense_peak as f64)),
+        ("paged_peak_kv_bytes", json::num(paged_peak as f64)),
+        (
+            "peak_kv_reduction",
+            json::num(1.0 - paged_peak as f64 / (dense_peak as f64).max(1.0)),
+        ),
+        ("dense_max_lanes", json::num(dense_lanes)),
+        ("paged_max_lanes", json::num(paged_lanes)),
+        (
+            "equal_throughput",
+            Value::Bool(
+                dense_log
+                    .records
+                    .iter()
+                    .zip(&paged_log.records)
+                    .all(|(d, p)| d.wall_s == p.wall_s && d.gen_tokens == p.gen_tokens),
+            ),
+        ),
+    ]);
     let knee = min_replicas_actor_bound(&cfg(1, 1), KNEE_MAX, KNEE_TOL);
 
     let host = json::obj(vec![
@@ -238,12 +274,18 @@ fn main() {
         ("chunk_tokens", json::num(cfg(1, 1).chunk_tokens)),
         ("scenarios", json::obj(svals)),
         ("sliced_knee_reward_replicas", json::num(knee as f64)),
+        ("paged_kv", paged_kv),
         ("host", host),
     ]);
     let text = json::to_string(&doc) + "\n";
     std::fs::write(&out_path, &text).expect("write snapshot");
 
-    print_table("BENCH_7 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
+    print_table("BENCH_8 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
     println!("sliced knee: {knee} reward replicas (tol {KNEE_TOL})");
+    println!(
+        "paged kv: peak {paged_peak} vs dense {dense_peak} ({:.0}% reduction), \
+         lane bound {paged_lanes:.0} vs {dense_lanes:.0}",
+        100.0 * (1.0 - paged_peak as f64 / (dense_peak as f64).max(1.0))
+    );
     println!("wrote {out_path}");
 }

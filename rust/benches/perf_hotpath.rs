@@ -16,7 +16,8 @@ use oppo::data::tasks::{Prompt, TaskKind};
 use oppo::eval::{print_table, save_rows, Row};
 use oppo::ppo::gae::gae;
 use oppo::runtime::Engine;
-use oppo::sim::pipeline::{simulate, Pipeline, SimConfig};
+use oppo::coordinator::BlockPool;
+use oppo::sim::pipeline::{kv_lane_bounds, simulate, Pipeline, SimConfig};
 use oppo::sim::presets;
 
 fn time_it(mut f: impl FnMut()) -> f64 {
@@ -70,6 +71,54 @@ fn main() {
         let _ = simulate(Pipeline::oppo(), &cfg);
     });
     rows.push(Row::new("sim oppo steps").cell("ops_per_sec", steps as f64 / secs));
+
+    // L3: paged-KV allocator churn — one lane's whole life (reserve the
+    // full budget, map every block, free it all) per op; must stay
+    // negligible next to a PJRT chunk dispatch
+    {
+        let (lanes, bs, bpl) = (12usize, 16usize, 10usize);
+        let n = 100_000u64;
+        let secs = time_it(|| {
+            let mut pool = BlockPool::new(lanes, bs, bpl, lanes * bpl + 1);
+            for i in 0..n {
+                let lane = (i as usize) % lanes;
+                pool.admit(lane, 8, bs * bpl).unwrap();
+                pool.grow_to(lane, bs * bpl);
+                pool.release(lane);
+            }
+        });
+        rows.push(
+            Row::new("block pool admit+grow+release").cell("ops_per_sec", n as f64 / secs),
+        );
+    }
+
+    // Paged vs dense KV on the traffic sim: same seed, same rolling
+    // schedule — the paged arm's peak commitment and the lane bound the
+    // freed memory buys are the whole point of the block allocator
+    {
+        let su = presets::traffic_7b_h200();
+        let rate = su.arrival_rate;
+        let block_tokens = 64.0;
+        let dense_cfg = SimConfig::new(su, 40, 9).rolling_poisson(rate);
+        let paged_cfg = dense_cfg.clone().paged(block_tokens);
+        let peak = |cfg: &SimConfig| {
+            simulate(Pipeline::oppo(), cfg)
+                .records
+                .iter()
+                .map(|r| r.peak_kv_bytes)
+                .max()
+                .unwrap_or(0) as f64
+        };
+        let (d, p) = (peak(&dense_cfg), peak(&paged_cfg));
+        let (dense_lanes, paged_lanes) = kv_lane_bounds(&dense_cfg, block_tokens);
+        rows.push(
+            Row::new("paged kv (traffic sim)")
+                .cell("dense_peak_gb", d / 1e9)
+                .cell("paged_peak_gb", p / 1e9)
+                .cell("reduction", 1.0 - p / d.max(1.0))
+                .cell("lane_bound_x", paged_lanes / dense_lanes.max(1.0)),
+        );
+    }
 
     // StageWorker dispatch overhead: submit/recv round trips with a no-op
     // handler — the per-chunk tax of the stage runtime itself
@@ -307,6 +356,47 @@ fn main() {
                     .cell("us_per_token", 1e6 * per_call / (c * g) as f64),
             );
         }
+
+        // paged decode vs dense on real compute: same chunk grid, KV
+        // gathered/scattered through the block table instead of per-lane
+        // rows — the per-call tax paying for the pooled memory
+        if engine.manifest().paged_supported() {
+            let bpl = shape.paged_blocks_per_lane();
+            let mut pool = BlockPool::new(g, shape.kv_block_size, bpl, g * bpl + 1);
+            for lane in 0..g {
+                pool.admit(lane, 2, smax).unwrap();
+                pool.grow_to(lane, smax); // map every block: worst-case table
+            }
+            let table = pool.flat_table(g);
+            let mut pstate = ops.fresh_actor_state_paged(&tokens).unwrap();
+            ops.actor_prefill_paged(&mut pstate, &tokens, &vec![2; g], &vec![1; g], &table)
+                .unwrap();
+            let c = shape.chunk_sizes[0];
+            let pos = vec![2i32; g];
+            let live = vec![1i32; g];
+            let _ = ops.generate_chunk_paged(&mut pstate, c, &pos, &live, &table).unwrap();
+            let _ = ops.generate_chunk(&mut state, c, &pos, &live).unwrap();
+            let reps = 8;
+            let dense_secs = time_it(|| {
+                for _ in 0..reps {
+                    let _ = ops.generate_chunk(&mut state, c, &pos, &live).unwrap();
+                }
+            }) / reps as f64;
+            let paged_secs = time_it(|| {
+                for _ in 0..reps {
+                    let _ = ops.generate_chunk_paged(&mut pstate, c, &pos, &live, &table).unwrap();
+                }
+            }) / reps as f64;
+            rows.push(
+                Row::new(format!("paged generate_chunk c={c}"))
+                    .cell("dense_ms", 1e3 * dense_secs)
+                    .cell("paged_ms", 1e3 * paged_secs)
+                    .cell("overhead_x", paged_secs / dense_secs.max(1e-12)),
+            );
+        } else {
+            println!("(artifacts lack paged entries — paged decode bench skipped)");
+        }
+
         // dispatch overhead: the gae entry is tiny, so its latency ≈ overhead
         let rb = engine.upload_f32(&vec![0.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();
         let vb = engine.upload_f32(&vec![0.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();

@@ -1,0 +1,249 @@
+//! Host-side paged-KV allocator: a fixed pool of `kv_block_size`-token
+//! physical blocks shared by all lanes, with a per-lane block table mapping
+//! logical block index -> physical block id.
+//!
+//! Physical block 0 is reserved as a *scratch sink*: unallocated table slots
+//! point at it, so device-side gather reads garbage (masked off by the
+//! attention start/pos masks, the same GIGO contract dense caches rely on
+//! past `n_valid`) and scatter writes from unreached positions collide there
+//! harmlessly.  Real allocations hand out blocks `1..pool_blocks`.
+//!
+//! Allocation policy is *reservation-based*: `admit` reserves every block
+//! the lane could ever need (`ceil(min(s_max, prompt_len + max_new) /
+//! block)`) up front, so `grow_to` at chunk boundaries can never fail
+//! mid-generation — rolling admission gates on whole-sequence feasibility,
+//! which is exactly the "defer admits when the pool is near empty" behaviour
+//! the scheduler wants.  Reserved-but-unmapped blocks sit in the lane's
+//! private reserve list and only enter the table (becoming visible to the
+//! device) as the sequence actually grows past block boundaries.
+
+use anyhow::{ensure, Result};
+
+/// Free-list allocator over `pool_blocks` physical KV blocks with per-lane
+/// block tables sized `blocks_per_lane` (= `s_max / kv_block_size`).
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    blocks_per_lane: usize,
+    pool_blocks: usize,
+    /// Unowned physical block ids (never contains 0, the scratch block).
+    free: Vec<u32>,
+    /// Per-lane table rows; 0 marks an unallocated slot (scratch sink).
+    tables: Vec<Vec<i32>>,
+    /// Per-lane reserved-but-unmapped blocks, popped into the table by grow.
+    reserves: Vec<Vec<u32>>,
+}
+
+impl BlockPool {
+    /// `pool_blocks` counts the scratch block; usable capacity is one less.
+    pub fn new(lanes: usize, block_size: usize, blocks_per_lane: usize, pool_blocks: usize) -> Self {
+        assert!(block_size > 0 && blocks_per_lane > 0);
+        assert!(pool_blocks >= 2, "pool needs scratch block 0 plus at least one real block");
+        BlockPool {
+            block_size,
+            blocks_per_lane,
+            pool_blocks,
+            free: (1..pool_blocks as u32).rev().collect(),
+            tables: vec![vec![0; blocks_per_lane]; lanes],
+            reserves: vec![Vec::new(); lanes],
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Physical blocks currently on the free list (excludes reserves).
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks a sequence of up to `max_total` tokens needs end to end.
+    pub fn blocks_needed(&self, max_total: usize) -> usize {
+        max_total.div_ceil(self.block_size).min(self.blocks_per_lane).max(1)
+    }
+
+    /// Can a prompt that may reach `max_total` tokens be admitted now?
+    pub fn can_admit(&self, max_total: usize) -> bool {
+        self.free.len() >= self.blocks_needed(max_total)
+    }
+
+    /// Reserve the lane's whole-sequence block budget and map the blocks
+    /// covering the first `prompt_len` tokens into its table.
+    pub fn admit(&mut self, lane: usize, prompt_len: usize, max_total: usize) -> Result<()> {
+        ensure!(
+            self.tables[lane].iter().all(|&b| b == 0) && self.reserves[lane].is_empty(),
+            "lane {lane} admitted while still holding blocks"
+        );
+        let needed = self.blocks_needed(max_total);
+        ensure!(
+            self.free.len() >= needed,
+            "pool exhausted: lane {lane} needs {needed} blocks, {} free",
+            self.free.len()
+        );
+        let at = self.free.len() - needed;
+        self.reserves[lane] = self.free.split_off(at);
+        self.grow_to(lane, prompt_len.max(1));
+        Ok(())
+    }
+
+    /// Map reserved blocks so the table covers `tokens` positions.  Always
+    /// succeeds within the admission reservation; panics on a bookkeeping
+    /// bug (growing past what `admit` reserved).
+    pub fn grow_to(&mut self, lane: usize, tokens: usize) {
+        let want = tokens.div_ceil(self.block_size).min(self.blocks_per_lane);
+        let have = self.tables[lane].iter().filter(|&&b| b != 0).count();
+        for slot in have..want {
+            let b = self.reserves[lane]
+                .pop()
+                .unwrap_or_else(|| panic!("lane {lane} grew past its reservation"));
+            self.tables[lane][slot] = b as i32;
+        }
+    }
+
+    /// Return all of the lane's blocks (mapped + reserved) to the free list.
+    pub fn release(&mut self, lane: usize) {
+        for slot in self.tables[lane].iter_mut() {
+            if *slot != 0 {
+                self.free.push(*slot as u32);
+                *slot = 0;
+            }
+        }
+        self.free.append(&mut self.reserves[lane]);
+    }
+
+    /// The lane's table row, scratch-0 in unallocated slots.
+    pub fn table_row(&self, lane: usize) -> &[i32] {
+        &self.tables[lane]
+    }
+
+    /// Flattened `[rows, blocks_per_lane]` table for upload (row r = lane r).
+    pub fn flat_table(&self, rows: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(rows * self.blocks_per_lane);
+        for lane in 0..rows {
+            out.extend_from_slice(&self.tables[lane]);
+        }
+        out
+    }
+
+    /// Tokens of KV the pool has committed (mapped + reserved), block-rounded.
+    pub fn allocated_tokens(&self) -> usize {
+        let total = self.pool_blocks - 1 - self.free.len();
+        total * self.block_size
+    }
+
+    /// Conservation + aliasing invariants; used by tests and debug asserts.
+    pub fn check_invariants(&self) {
+        let mut seen = vec![false; self.pool_blocks];
+        seen[0] = true; // scratch is permanently "owned" by everyone
+        let mut count = 0usize;
+        let mut claim = |b: u32, what: &str| {
+            assert!((b as usize) < seen.len(), "{what}: block {b} out of range");
+            assert!(b != 0, "{what}: scratch block 0 must never be owned");
+            assert!(!seen[b as usize], "{what}: block {b} owned twice");
+            seen[b as usize] = true;
+        };
+        for &b in &self.free {
+            claim(b, "free list");
+            count += 1;
+        }
+        for (lane, table) in self.tables.iter().enumerate() {
+            let mut past_end = false;
+            for &b in table {
+                if b == 0 {
+                    past_end = true;
+                    continue;
+                }
+                assert!(!past_end, "lane {lane} table has a hole before block {b}");
+                claim(b as u32, "table");
+                count += 1;
+            }
+            for &b in &self.reserves[lane] {
+                claim(b, "reserve");
+                count += 1;
+            }
+        }
+        assert_eq!(count, self.pool_blocks - 1, "blocks leaked or double-freed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> BlockPool {
+        // 8 lanes x 4 blocks of 16 tokens, auto-sized pool (+1 scratch)
+        BlockPool::new(8, 16, 4, 8 * 4 + 1)
+    }
+
+    #[test]
+    fn admit_grow_release_roundtrip() {
+        let mut p = pool();
+        assert_eq!(p.free_blocks(), 32);
+        p.admit(3, 10, 64).unwrap(); // reserves 4, maps 1
+        p.check_invariants();
+        assert_eq!(p.free_blocks(), 28);
+        assert_eq!(p.table_row(3).iter().filter(|&&b| b != 0).count(), 1);
+        p.grow_to(3, 17); // second block
+        assert_eq!(p.table_row(3).iter().filter(|&&b| b != 0).count(), 2);
+        p.grow_to(3, 17); // idempotent
+        assert_eq!(p.table_row(3).iter().filter(|&&b| b != 0).count(), 2);
+        p.grow_to(3, 64); // full
+        assert_eq!(p.table_row(3).iter().filter(|&&b| b != 0).count(), 4);
+        p.check_invariants();
+        p.release(3);
+        p.check_invariants();
+        assert_eq!(p.free_blocks(), 32);
+        assert!(p.table_row(3).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn short_sequences_reserve_less() {
+        let mut p = pool();
+        // prompt 5 + max_new 20 = 25 tokens -> 2 blocks, not 4
+        p.admit(0, 5, 25).unwrap();
+        assert_eq!(p.free_blocks(), 30);
+        // all 8 lanes together use half the pool — the other half could
+        // back 8 more lanes if the table had rows for them
+        for lane in 1..8 {
+            assert!(p.can_admit(25));
+            p.admit(lane, 5, 25).unwrap();
+        }
+        assert_eq!(p.free_blocks(), 32 - 16);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn admission_gates_on_free_blocks() {
+        let mut p = BlockPool::new(4, 16, 4, 6); // 5 usable blocks
+        p.admit(0, 1, 64).unwrap(); // takes 4
+        assert!(!p.can_admit(64));
+        assert!(p.can_admit(16)); // a 1-block sequence still fits
+        assert!(p.admit(1, 1, 64).is_err());
+        p.check_invariants(); // failed admit must not leak
+        p.release(0);
+        assert!(p.can_admit(64));
+    }
+
+    #[test]
+    fn release_returns_reserved_blocks_too() {
+        let mut p = pool();
+        p.admit(0, 1, 64).unwrap(); // maps 1, reserves 3 more
+        assert_eq!(p.free_blocks(), 28);
+        p.release(0); // early EOS: all 4 come back
+        assert_eq!(p.free_blocks(), 32);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn flat_table_is_row_major_lane_order() {
+        let mut p = pool();
+        p.admit(0, 16, 32).unwrap();
+        p.admit(1, 1, 16).unwrap();
+        let flat = p.flat_table(2);
+        assert_eq!(flat.len(), 8);
+        assert_eq!(&flat[..4], p.table_row(0));
+        assert_eq!(&flat[4..], p.table_row(1));
+        assert!(flat[0] != 0 && flat[1] == 0); // 16 tokens -> 1 block
+    }
+}

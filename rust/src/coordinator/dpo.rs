@@ -99,6 +99,7 @@ impl DpoTrainer {
                 train_stats: [stats[0], stats[1], stats[2], stats[3], 0.0, 0.0],
                 util: 0.0,
                 stages: Vec::new(),
+                ..Default::default()
             });
             if self.cfg.log_every > 0 && step % self.cfg.log_every as u64 == 0 {
                 log::info!(

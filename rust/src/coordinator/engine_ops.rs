@@ -115,6 +115,101 @@ impl Ops {
         Ok(())
     }
 
+    /// Fresh *paged* actor state: the KV vec holds the pooled per-layer
+    /// buffers (`[P, H, bs, hd]`, physical block 0 = scratch) instead of
+    /// dense per-lane caches.  Same `ActorState` type — only the shapes and
+    /// the entry family differ, so the generation loop stays shared.
+    pub fn fresh_actor_state_paged(&self, tokens_host: &[i32]) -> Result<ActorState> {
+        let (g, s) = (self.g(), self.s());
+        ensure!(tokens_host.len() == g * s);
+        let shape = self.engine.manifest().shape.paged_kv_shape();
+        let kv = (0..self.n_kv())
+            .map(|_| self.engine.zeros_f32(&shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ActorState { tokens: self.engine.upload_i32(tokens_host, &[g, s])?, kv })
+    }
+
+    /// `actor_prefill_paged`: the paged flavour of [`Self::actor_prefill`].
+    /// `table` is the host [`crate::coordinator::BlockPool`]'s flattened
+    /// `[G, s_max/block]` block table; rows being re-prefilled must already
+    /// have their prompt blocks mapped.
+    pub fn actor_prefill_paged(
+        &self,
+        state: &mut ActorState,
+        tokens_host: &[i32],
+        prompt_len: &[i32],
+        reset: &[i32],
+        table: &[i32],
+    ) -> Result<()> {
+        let (g, s) = (self.g(), self.s());
+        ensure!(tokens_host.len() == g * s && prompt_len.len() == g && reset.len() == g);
+        let tokens = self.engine.upload_i32(tokens_host, &[g, s])?;
+        let plen = self.engine.upload_i32(prompt_len, &[g])?;
+        let rst = self.engine.upload_i32(reset, &[g])?;
+        let tbl = upload_block_table(&self.engine, g, table)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.actor.len() + 4 + self.n_kv());
+        args.extend(self.actor.bufs());
+        args.push(&tokens);
+        args.push(&plen);
+        args.push(&rst);
+        args.extend(state.kv.iter());
+        args.push(&tbl);
+        let outs = self.engine.execute_scoped("actor", "actor_prefill_paged", &args)?;
+        state.kv = outs;
+        state.tokens = tokens;
+        Ok(())
+    }
+
+    /// `actor_generate_chunk_paged_c{c}`: the paged flavour of
+    /// [`Self::generate_chunk`].  The host must have grown every live
+    /// lane's table to cover `pos + c` positions before calling.
+    pub fn generate_chunk_paged(
+        &mut self,
+        state: &mut ActorState,
+        c: usize,
+        pos: &[i32],
+        live: &[i32],
+        table: &[i32],
+    ) -> Result<ChunkOut> {
+        let g = self.g();
+        ensure!(pos.len() == g && live.len() == g);
+        let entry = format!("actor_generate_chunk_paged_c{c}");
+        let pos_b = self.engine.upload_i32(pos, &[g])?;
+        let live_b = self.engine.upload_i32(live, &[g])?;
+        self.rng_counter += 1;
+        let key: [u32; 2] = [self.seed as u32, self.rng_counter as u32];
+        let key_b = self.engine.upload_u32(&key, &[2])?;
+        let tbl = upload_block_table(&self.engine, g, table)?;
+
+        let n_kv = self.n_kv();
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.actor.len() + 5 + n_kv);
+        args.extend(self.actor.bufs());
+        args.push(&state.tokens);
+        args.push(&pos_b);
+        args.push(&live_b);
+        args.extend(state.kv.iter());
+        args.push(&key_b);
+        args.push(&tbl);
+        let mut outs = self.engine.execute_scoped("actor", &entry, &args)?;
+
+        // outputs mirror the dense entry: tokens', pos', pool' ×n_kv,
+        // out_tok, logp, value
+        let values_b = outs.pop().unwrap();
+        let logps_b = outs.pop().unwrap();
+        let toks_b = outs.pop().unwrap();
+        let kv: Vec<PjRtBuffer> = outs.drain(2..).collect();
+        debug_assert_eq!(kv.len(), n_kv);
+        let _pos_out = outs.pop().unwrap();
+        state.tokens = outs.pop().unwrap();
+        state.kv = kv;
+
+        Ok(ChunkOut {
+            tokens: self.engine.download_i32(&toks_b)?,
+            logps: self.engine.download_f32(&logps_b)?,
+            values: self.engine.download_f32(&values_b)?,
+        })
+    }
+
     /// `actor_generate_chunk_c{c}`: decode + sample `c` tokens on every
     /// live lane.  `pos`/`live` are host-managed (tiny uploads); the token
     /// buffer and KV caches stay on device and are swapped in place.
@@ -344,6 +439,44 @@ impl RewardOps {
         self.engine.download_f32(&scores_b)
     }
 
+    /// Fresh pooled-KV state for the paged entry family (always full-G:
+    /// paged entries never come sliced; replica pools route them masked).
+    pub fn fresh_paged_state(&self) -> Result<RewardState> {
+        let shape = self.engine.manifest().shape.paged_kv_shape();
+        let n = 2 * self.engine.manifest().shape.n_layers;
+        let kv = (0..n).map(|_| self.engine.zeros_f32(&shape)).collect::<Result<Vec<_>>>()?;
+        Ok(RewardState { kv })
+    }
+
+    /// `reward_prefill_chunk_paged_c{c}` (or its `_pallas_` flavour): the
+    /// paged flavour of [`Self::prefill_chunk`]; `table` is the flattened
+    /// `[G, s_max/block]` block table covering every lane's written prefix.
+    pub fn prefill_chunk_paged(
+        &self,
+        state: &mut RewardState,
+        entry: &str,
+        chunk: &[i32],
+        start: &[i32],
+        n_valid: &[i32],
+        table: &[i32],
+    ) -> Result<Vec<f32>> {
+        let g = start.len();
+        let (ch, st, nv) = upload_stream_chunk(&self.engine, g, chunk, start, n_valid)?;
+        let tbl = upload_block_table(&self.engine, g, table)?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(self.reward.len() + 4 + state.kv.len());
+        args.extend(self.reward.bufs());
+        args.push(&ch);
+        args.push(&st);
+        args.push(&nv);
+        args.extend(state.kv.iter());
+        args.push(&tbl);
+        let mut outs = self.engine.execute_scoped("reward", entry, &args)?;
+        let scores_b = outs.pop().unwrap();
+        state.kv = outs;
+        self.engine.download_f32(&scores_b)
+    }
+
     /// `reward_score_full`: monolithic scoring (baselines + equivalence
     /// oracle).  `last_idx[i]` is the index of sequence i's final token.
     pub fn score_full(&self, tokens: &[i32], last_idx: &[i32]) -> Result<Vec<f32>> {
@@ -432,6 +565,48 @@ impl RefOps {
         state.boundary = boundary;
         self.engine.download_f32(&logp_b)
     }
+
+    /// Fresh pooled-KV + boundary state for the paged entry family
+    /// (always full-G, like the reward flavour).
+    pub fn fresh_paged_state(&self) -> Result<RefStreamState> {
+        let shape = self.engine.manifest().shape.paged_kv_shape();
+        let n = 2 * self.engine.manifest().shape.n_layers;
+        let kv = (0..n).map(|_| self.engine.zeros_f32(&shape)).collect::<Result<Vec<_>>>()?;
+        let vocab = self.engine.manifest().shape.vocab;
+        let boundary = self.engine.zeros_f32(&[self.g(), vocab])?;
+        Ok(RefStreamState { kv, boundary })
+    }
+
+    /// `ref_prefill_chunk_paged_c{c}`: the paged flavour of
+    /// [`Self::prefill_chunk`] — same boundary-seam carry, block-table KV.
+    pub fn prefill_chunk_paged(
+        &self,
+        state: &mut RefStreamState,
+        entry: &str,
+        chunk: &[i32],
+        start: &[i32],
+        n_valid: &[i32],
+        table: &[i32],
+    ) -> Result<Vec<f32>> {
+        let g = start.len();
+        let (ch, st, nv) = upload_stream_chunk(&self.engine, g, chunk, start, n_valid)?;
+        let tbl = upload_block_table(&self.engine, g, table)?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(self.refm.len() + 5 + state.kv.len());
+        args.extend(self.refm.bufs());
+        args.push(&ch);
+        args.push(&st);
+        args.push(&nv);
+        args.push(&state.boundary);
+        args.extend(state.kv.iter());
+        args.push(&tbl);
+        let mut outs = self.engine.execute_scoped("ref", entry, &args)?;
+        let logp_b = outs.pop().unwrap();
+        let boundary = outs.pop().unwrap();
+        state.kv = outs;
+        state.boundary = boundary;
+        self.engine.download_f32(&logp_b)
+    }
 }
 
 /// Validate and upload one streamed `[G, C]` chunk's host arrays — shared by
@@ -460,6 +635,24 @@ fn upload_stream_chunk(
         engine.upload_i32(start, &[g])?,
         engine.upload_i32(n_valid, &[g])?,
     ))
+}
+
+/// Validate and upload one flattened `[rows, s_max/block]` block table for a
+/// paged entry call.  Ids must stay inside the pool; 0 (the scratch block)
+/// marks unallocated slots.
+fn upload_block_table(engine: &Engine, rows: usize, table: &[i32]) -> Result<PjRtBuffer> {
+    let shape = engine.manifest().shape.block_table_shape(rows);
+    let pool = engine.manifest().shape.paged_pool_blocks() as i32;
+    ensure!(
+        table.len() == shape[0] * shape[1],
+        "block table has {} ids, want {:?}",
+        table.len(),
+        shape
+    );
+    for &b in table {
+        ensure!((0..pool).contains(&b), "block id {b} outside pool [0, {pool})");
+    }
+    engine.upload_i32(table, &shape)
 }
 
 #[cfg(test)]
@@ -689,6 +882,114 @@ mod tests {
                     "lane {lane} pos {t}: streamed {a} vs dense {d}"
                 );
             }
+        }
+    }
+
+    /// Fully-mapped identity block table: lane r's block j -> 1 + r*bpl + j.
+    /// Requires the pool to hold a full-s_max table for every lane (true for
+    /// auto-sized pools); callers skip when a trimmed pool can't.
+    fn identity_table(m: &crate::runtime::manifest::ModelShape) -> Option<Vec<i32>> {
+        let bpl = m.paged_blocks_per_lane();
+        (m.paged_pool_blocks() >= m.lanes * bpl + 1)
+            .then(|| (0..m.lanes * bpl).map(|i| 1 + i as i32).collect())
+    }
+
+    #[test]
+    fn paged_reward_streaming_matches_dense_streaming() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().paged_supported() {
+            return; // pre-paging artifact set
+        }
+        let m = e.manifest().shape.clone();
+        let Some(table) = identity_table(&m) else { return };
+        let (g, s) = (m.lanes, m.s_max);
+        let c = m.chunk_sizes[0];
+        let rops = RewardOps::new(e.clone()).unwrap();
+
+        let mut tokens = vec![0i32; g * s];
+        let mut lens = vec![0usize; g];
+        for lane in 0..g {
+            let len = 4 + (lane * 9) % (3 * c);
+            lens[lane] = len;
+            for t in 0..len {
+                tokens[lane * s + t] = 3 + ((lane * 7 + t * 13) % (m.vocab - 3)) as i32;
+            }
+        }
+        let dense_entry = format!("reward_prefill_chunk_c{c}");
+        let paged_entry = e.manifest().paged_prefill_entry("reward", c).unwrap();
+        let mut dstate = rops.fresh_state().unwrap();
+        let mut pstate = rops.fresh_paged_state().unwrap();
+        let max_len = *lens.iter().max().unwrap();
+        let mut startpos = 0usize;
+        while startpos < max_len {
+            let mut chunk = vec![0i32; g * c];
+            let mut starts = vec![0i32; g];
+            let mut nvalid = vec![0i32; g];
+            for lane in 0..g {
+                starts[lane] = startpos as i32;
+                let nv = lens[lane].saturating_sub(startpos).min(c);
+                nvalid[lane] = nv as i32;
+                for j in 0..nv {
+                    chunk[lane * c + j] = tokens[lane * s + startpos + j];
+                }
+            }
+            let d =
+                rops.prefill_chunk(&mut dstate, &dense_entry, &chunk, &starts, &nvalid).unwrap();
+            let p = rops
+                .prefill_chunk_paged(&mut pstate, &paged_entry, &chunk, &starts, &nvalid, &table)
+                .unwrap();
+            for lane in 0..g {
+                for j in 0..nvalid[lane] as usize {
+                    let (a, b) = (p[lane * c + j], d[lane * c + j]);
+                    assert!(
+                        (a - b).abs() < 2e-3,
+                        "lane {lane} chunk@{startpos} pos {j}: paged {a} vs dense {b}"
+                    );
+                }
+            }
+            startpos += c;
+        }
+    }
+
+    #[test]
+    fn paged_generation_matches_dense() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().paged_supported() {
+            return;
+        }
+        let m = e.manifest().shape.clone();
+        let Some(table) = identity_table(&m) else { return };
+        let (g, s) = (m.lanes, m.s_max);
+        let c = m.chunk_sizes[0];
+
+        let tok = crate::data::Tokenizer::builtin(m.vocab);
+        let mut prompt = vec![1i32];
+        prompt.extend(tok.encode("2*3=").unwrap());
+        let plen = prompt.len();
+        let mut tokens = vec![0i32; g * s];
+        for lane in 0..g {
+            tokens[lane * s..lane * s + plen].copy_from_slice(&prompt);
+        }
+        let pos = vec![plen as i32; g];
+        let live = vec![1i32; g];
+
+        let mut dops = Ops::new(e.clone(), 11).unwrap();
+        let mut dstate = dops.fresh_actor_state(&tokens).unwrap();
+        dops.actor_prefill(&mut dstate, &tokens, &vec![plen as i32; g], &vec![1; g]).unwrap();
+        let dense = dops.generate_chunk(&mut dstate, c, &pos, &live).unwrap();
+
+        let mut pops = Ops::new(e.clone(), 11).unwrap();
+        let mut pstate = pops.fresh_actor_state_paged(&tokens).unwrap();
+        pops.actor_prefill_paged(&mut pstate, &tokens, &vec![plen as i32; g], &vec![1; g], &table)
+            .unwrap();
+        let paged = pops.generate_chunk_paged(&mut pstate, c, &pos, &live, &table).unwrap();
+
+        assert_eq!(paged.tokens, dense.tokens, "same seed: paged must sample identically");
+        for (a, b) in paged.logps.iter().zip(&dense.logps) {
+            assert!((a - b).abs() < 2e-3, "paged logp {a} vs dense {b}");
+        }
+        for (a, b) in paged.values.iter().zip(&dense.values) {
+            assert!((a - b).abs() < 2e-3, "paged value {a} vs dense {b}");
         }
     }
 

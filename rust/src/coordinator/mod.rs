@@ -1,6 +1,9 @@
 //! The OPPO coordinator — the paper's Layer-3 contribution, organized as a
 //! multi-stage pipeline runtime.
 //!
+//! * [`block_pool`] — the host-side paged-KV allocator: a free-list over
+//!   fixed-size physical blocks plus per-lane block tables, so rolling
+//!   admission gates on free blocks instead of worst-case dense KV;
 //! * [`buffer`] — Algorithm 1's `B + Δ` FIFO sequence buffer;
 //! * [`delta`] — the dynamic Δ controller (Eq. 4 / Alg. 1 l.21-27);
 //! * [`chunkctl`] — the dynamic chunk-size controller (§3.1);
@@ -17,6 +20,7 @@
 //!   async staleness-k;
 //! * [`dpo`] — the DPO generalization (§4.3).
 
+pub mod block_pool;
 pub mod buffer;
 pub mod chunkctl;
 pub mod delta;
@@ -26,6 +30,7 @@ pub mod scheduler;
 pub mod stage;
 pub mod worker;
 
+pub use block_pool::BlockPool;
 pub use buffer::SeqBuffer;
 pub use chunkctl::ChunkController;
 pub use delta::{DeltaController, Policy};

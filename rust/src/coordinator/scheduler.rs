@@ -40,6 +40,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{Mode, TrainConfig};
+use crate::coordinator::block_pool::BlockPool;
 use crate::coordinator::buffer::SeqBuffer;
 use crate::coordinator::chunkctl::ChunkController;
 use crate::coordinator::delta::{DeltaController, Policy};
@@ -85,6 +86,11 @@ pub struct OppoScheduler {
     chunk_ctl: ChunkController,
     assembler: RolloutAssembler,
     actor_state: ActorState,
+    /// paged-KV allocator (`Some` iff the artifacts ship the paged entry
+    /// family): admission gates on its *free blocks*, not just free lanes,
+    /// and every device call routes KV through the per-lane block tables.
+    /// `None` selects the dense per-lane KV path, bit-identical to before.
+    block_pool: Option<BlockPool>,
     /// persistent host-authoritative `[G, S]` token mirror.  `actor_prefill`
     /// replaces the device token buffer wholesale from this slice, so every
     /// lane's row is kept current *incrementally*: admission rewrites the
@@ -117,6 +123,10 @@ struct GenStats {
     lane_slots: usize,
     /// lane-ticks with no live sequence decoding
     idle_lane_slots: usize,
+    /// peak KV commitment over the step's chunk boundaries, in tokens:
+    /// block-rounded allocated tokens on the paged path, resident lanes ×
+    /// `s_max` on the dense path (a dense lane pins a full row for life)
+    peak_kv_tokens: usize,
 }
 
 impl OppoScheduler {
@@ -145,7 +155,11 @@ impl OppoScheduler {
             }
             _ => Arrivals::Saturated,
         };
-        let queue = PromptQueue::new(sampler, arrivals, cfg.admission_queue_depth, cfg.seed);
+        let mut queue = PromptQueue::new(sampler, arrivals, cfg.admission_queue_depth, cfg.seed);
+        // admission-time length guard: a prompt that cannot finish within
+        // the lane budget is shed at enqueue (distinct drop reason) rather
+        // than admitted and caught by the mid-chunk clamp check
+        queue.set_length_guard(m.s_max.saturating_sub(cfg.max_new_tokens).max(1));
 
         let (delta_init, delta_min, delta_max) = if cfg.mode.inter_enabled() {
             (cfg.delta_init, cfg.delta_min, cfg.delta_max)
@@ -180,22 +194,44 @@ impl OppoScheduler {
         // bottleneck without breaking per-sequence KV affinity
         let mut sinks: Vec<StreamSink> = Vec::new();
         let mut mono_reward = None;
+        // paged KV is selected at spawn, exactly like the sliced/masked
+        // split: artifacts without the paged entry family run the dense
+        // per-lane path bit-identically to before
+        let paged = engine.manifest().paged_supported();
         if cfg.mode.intra_enabled() && cfg.stream_reward {
-            sinks.push(StreamSink::Reward(RewardWorker::spawn_replicated(
-                engine.clone(),
-                cfg.reward_replicas,
-                cfg.stage_queue_depth,
-            )?));
+            let pool = if paged {
+                RewardWorker::spawn_replicated_paged(
+                    engine.clone(),
+                    cfg.reward_replicas,
+                    cfg.stage_queue_depth,
+                )?
+            } else {
+                RewardWorker::spawn_replicated(
+                    engine.clone(),
+                    cfg.reward_replicas,
+                    cfg.stage_queue_depth,
+                )?
+            };
+            sinks.push(StreamSink::Reward(pool));
         } else {
             mono_reward = Some(RewardWorker::spawn(engine.clone(), cfg.stage_queue_depth)?);
         }
         if cfg.mode.ref_stream_enabled() && cfg.stream_ref {
             if engine.manifest().ref_prefill_supported() {
-                sinks.push(StreamSink::Ref(RefSink::spawn_replicated(
-                    engine.clone(),
-                    cfg.ref_replicas,
-                    cfg.stage_queue_depth,
-                )?));
+                let pool = if paged {
+                    RefSink::spawn_replicated_paged(
+                        engine.clone(),
+                        cfg.ref_replicas,
+                        cfg.stage_queue_depth,
+                    )?
+                } else {
+                    RefSink::spawn_replicated(
+                        engine.clone(),
+                        cfg.ref_replicas,
+                        cfg.stage_queue_depth,
+                    )?
+                };
+                sinks.push(StreamSink::Ref(pool));
             } else {
                 log::warn!(
                     "artifacts lack ref_prefill_chunk_c* entries; falling back to \
@@ -205,7 +241,19 @@ impl OppoScheduler {
         }
 
         let host_mirror = vec![0i32; m.lanes * m.s_max];
-        let actor_state = ops.fresh_actor_state(&host_mirror)?;
+        let actor_state = if paged {
+            ops.fresh_actor_state_paged(&host_mirror)?
+        } else {
+            ops.fresh_actor_state(&host_mirror)?
+        };
+        let block_pool = paged.then(|| {
+            BlockPool::new(
+                m.lanes,
+                m.kv_block_size,
+                m.paged_blocks_per_lane(),
+                m.paged_pool_blocks(),
+            )
+        });
         let assembler = RolloutAssembler::new(m.s_max, cfg.kl_beta as f32);
         let buffer = SeqBuffer::new(m.ppo_batch + delta_ctl.delta(), m.lanes);
         let log = RunLog::new(cfg.mode.name(), &cfg.task, cfg.seed);
@@ -223,6 +271,7 @@ impl OppoScheduler {
             chunk_ctl,
             assembler,
             actor_state,
+            block_pool,
             host_mirror,
             tick: 0,
             log,
@@ -257,6 +306,17 @@ impl OppoScheduler {
     /// The admission queue (test / introspection hook).
     pub fn queue(&self) -> &PromptQueue {
         &self.queue
+    }
+
+    /// The paged-KV allocator, when the paged path is active
+    /// (test / introspection hook).
+    pub fn block_pool(&self) -> Option<&BlockPool> {
+        self.block_pool.as_ref()
+    }
+
+    /// Is the actor (and every streaming stage) running on pooled paged KV?
+    pub fn paged(&self) -> bool {
+        self.block_pool.is_some()
     }
 
     /// Clones of the sequences selected by the most recent `run_step` —
@@ -346,7 +406,7 @@ impl OppoScheduler {
         self.buffer.promote_admitted();
         self.buffer.set_capacity(b + self.delta_ctl.delta());
         self.queue.advance_to(self.tick);
-        while self.buffer.has_room() && self.queue.has_prompt() {
+        while self.buffer.has_room() && self.pool_can_admit() && self.queue.has_prompt() {
             let Some(qp) = self.queue.pop(self.tick) else { break };
             self.admit_prompt(qp, step, false)?;
         }
@@ -360,6 +420,9 @@ impl OppoScheduler {
         // ---- Stage 3: PPO update with inter-step overlap (l.17-20) ----
         self.flush_streams(chunk)?; // no-op when no sinks are active
         let selected = self.buffer.take_finished(b, step);
+        // batch selection vacated the selected resident lanes; their KV
+        // blocks go back to the pool before the next step's fill
+        self.release_vacant_lanes();
         if selected.len() < b {
             // graceful degradation: all lanes dead (or traffic starved the
             // queue) before B sequences finished — train on what we have
@@ -446,6 +509,8 @@ impl OppoScheduler {
             },
             admitted_mid_step: gen.admitted_mid_step,
             queue_dropped: (self.queue.dropped() - dropped_before) as usize,
+            peak_kv_bytes: (gen.peak_kv_tokens
+                * self.engine.manifest().shape.kv_bytes_per_token()) as u64,
         };
         self.log.push(rec.clone());
         Ok(rec)
@@ -456,8 +521,90 @@ impl OppoScheduler {
     // ------------------------------------------------------------------
 
     /// Admit one queued prompt into a free lane and stamp its tick clock.
+    /// On the paged path the lane's whole-sequence block budget is reserved
+    /// here, so generation can never run out of KV mid-sequence.
     fn admit_prompt(&mut self, qp: QueuedPrompt, step: u64, mid_step: bool) -> Result<usize> {
-        self.buffer.admit(qp.prompt, step, qp.enqueued_tick, self.tick, mid_step)
+        let prompt_len = qp.prompt.tokens.len();
+        let lane = self.buffer.admit(qp.prompt, step, qp.enqueued_tick, self.tick, mid_step)?;
+        if let Some(pool) = &mut self.block_pool {
+            let s_max = self.engine.manifest().shape.s_max;
+            let max_total = (prompt_len + self.cfg.max_new_tokens).min(s_max);
+            pool.admit(lane, prompt_len, max_total)?;
+        }
+        Ok(lane)
+    }
+
+    /// The admission gate beyond "a lane is free": on the paged path the
+    /// pool must also hold a worst-case whole-sequence reservation, so a
+    /// near-empty pool *defers* admits to a later chunk boundary instead of
+    /// overcommitting KV.  Dense KV always has room by construction (one
+    /// full-length row per lane).
+    fn pool_can_admit(&self) -> bool {
+        match &self.block_pool {
+            Some(pool) => {
+                let m = &self.engine.manifest().shape;
+                pool.can_admit((m.prompt_max + self.cfg.max_new_tokens).min(m.s_max))
+            }
+            None => true,
+        }
+    }
+
+    /// Paged KV, at a chunk boundary: map reserved blocks so every live
+    /// lane's table covers the positions the coming chunk can write, capped
+    /// at the sequence's own end-to-end budget (tokens past it are junk the
+    /// device scatters into the scratch block).  Growth always succeeds —
+    /// admission reserved the whole budget.  Returns the flattened
+    /// `[lanes, s_max/block]` table for upload; `None` on the dense path.
+    fn grow_for_chunk(&mut self, chunk: usize) -> Option<Vec<i32>> {
+        let pool = self.block_pool.as_mut()?;
+        let m = &self.engine.manifest().shape;
+        for seq in self.buffer.iter() {
+            if seq.phase != SeqPhase::Generating {
+                continue;
+            }
+            let cap = (seq.prompt_len + self.cfg.max_new_tokens).min(m.s_max);
+            pool.grow_to(seq.lane, (seq.total_len() + chunk).min(cap));
+        }
+        Some(pool.flat_table(m.lanes))
+    }
+
+    /// KV tokens currently committed on the device: block-rounded pool
+    /// allocation (paged) or one full `s_max` row per resident lane (dense).
+    fn committed_kv_tokens(&self) -> usize {
+        match &self.block_pool {
+            Some(pool) => pool.allocated_tokens(),
+            None => self.buffer.iter().count() * self.engine.manifest().shape.s_max,
+        }
+    }
+
+    /// Fan one streamed chunk out to every sink, through the block tables
+    /// when the stages run pooled KV.
+    fn fan_out(&mut self, ck: &StreamChunk, table: Option<&[i32]>) -> Result<()> {
+        for sink in &mut self.sinks {
+            match table {
+                Some(t) => sink.submit_chunk_paged(ck, t)?,
+                None => sink.submit_chunk(ck)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Return pool blocks held by lanes that no longer have a resident
+    /// sequence (batch selection just freed them; parked sequences returned
+    /// theirs at release time).  Idempotent — releasing a vacant lane that
+    /// holds nothing is a no-op — and must never touch an occupied lane.
+    fn release_vacant_lanes(&mut self) {
+        let Some(pool) = &mut self.block_pool else { return };
+        let lanes = self.buffer.lanes();
+        let mut resident = vec![false; lanes];
+        for seq in self.buffer.iter() {
+            resident[seq.lane] = true;
+        }
+        for (lane, occupied) in resident.iter().enumerate() {
+            if !occupied {
+                pool.release(lane);
+            }
+        }
     }
 
     /// Prompt-prefill all `Queued` lanes (selective reset, §3.2: existing
@@ -484,12 +631,24 @@ impl OppoScheduler {
                 .copy_from_slice(&seq.prompt.tokens);
             reset[lane] = 1;
         }
-        self.ops.actor_prefill(
-            &mut self.actor_state,
-            &self.host_mirror,
-            &prompt_len,
-            &reset,
-        )?;
+        // paged path: `admit_prompt` already mapped the blocks covering each
+        // queued lane's prompt, so the uploaded table routes the prefill KV
+        let table = self.block_pool.as_ref().map(|p| p.flat_table(m.lanes));
+        match &table {
+            Some(t) => self.ops.actor_prefill_paged(
+                &mut self.actor_state,
+                &self.host_mirror,
+                &prompt_len,
+                &reset,
+                t,
+            )?,
+            None => self.ops.actor_prefill(
+                &mut self.actor_state,
+                &self.host_mirror,
+                &prompt_len,
+                &reset,
+            )?,
+        }
         for seq in self.buffer.iter_mut() {
             if seq.phase == SeqPhase::Queued {
                 seq.phase = SeqPhase::Generating;
@@ -524,11 +683,16 @@ impl OppoScheduler {
             .collect();
         for lane in releasable {
             // refused (parked area full) is fine — the lane stays resident
-            // and the next boundary retries
-            self.buffer.release_lane(lane);
+            // and the next boundary retries; pool blocks come back only
+            // when the lane really vacates
+            if self.buffer.release_lane(lane) {
+                if let Some(pool) = &mut self.block_pool {
+                    pool.release(lane);
+                }
+            }
         }
         let mut admitted = 0usize;
-        while self.buffer.has_room() && self.queue.has_prompt() {
+        while self.buffer.has_room() && self.pool_can_admit() && self.queue.has_prompt() {
             let Some(qp) = self.queue.pop(self.tick) else { break };
             self.admit_prompt(qp, step, true)?;
             admitted += 1;
@@ -594,14 +758,23 @@ impl OppoScheduler {
             // chunk.  The bounded stage queues allow multiple chunks in
             // flight; responses are drained opportunistically and joined at
             // flush.
+            // paged KV: map reserved blocks so every live lane's table
+            // covers the positions this chunk can write *before* the device
+            // call — accepted tokens must land in mapped blocks (junk past
+            // EOS scatters harmlessly into scratch block 0)
+            let table = self.grow_for_chunk(chunk);
+            st.peak_kv_tokens = st.peak_kv_tokens.max(self.committed_kv_tokens());
             if !self.sinks.is_empty() {
                 if let Some(ck) = self.build_stream_chunk(chunk)? {
-                    for sink in &mut self.sinks {
-                        sink.submit_chunk(&ck)?;
-                    }
+                    self.fan_out(&ck, table.as_deref())?;
                 }
             }
-            let out = self.ops.generate_chunk(&mut self.actor_state, chunk, &pos, &live)?;
+            let out = match &table {
+                Some(t) => {
+                    self.ops.generate_chunk_paged(&mut self.actor_state, chunk, &pos, &live, t)?
+                }
+                None => self.ops.generate_chunk(&mut self.actor_state, chunk, &pos, &live)?,
+            };
             self.tick += 1;
             self.queue.advance_to(self.tick);
             st.lane_slots += m.lanes;
@@ -714,9 +887,13 @@ impl OppoScheduler {
             }
             match self.build_stream_chunk(chunk)? {
                 Some(ck) => {
-                    for sink in &mut self.sinks {
-                        sink.submit_chunk(&ck)?;
-                    }
+                    // finished sequences' tables already cover total_len()
+                    // (grown during generation), so no growth here
+                    let table = self
+                        .block_pool
+                        .as_ref()
+                        .map(|p| p.flat_table(self.buffer.lanes()));
+                    self.fan_out(&ck, table.as_deref())?;
                 }
                 None => {
                     // nothing left to stream but a stage is missing data —

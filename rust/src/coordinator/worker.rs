@@ -186,6 +186,19 @@ pub enum RewardReq {
         /// row → absolute lane
         lane_map: Vec<usize>,
     },
+    /// The paged flavour of `Stream`: KV lives in the replica's pooled
+    /// buffer and `table` is the flattened `[G, s_max/block]` block table.
+    /// Paged entries are full-G only, so the grid is never compacted —
+    /// replicas route masked, and `lane_map` is the identity.
+    StreamPaged {
+        entry: String,
+        chunk: Vec<i32>,
+        start: Vec<i32>,
+        n_valid: Vec<i32>,
+        picks: Vec<Pick>,
+        lane_map: Vec<usize>,
+        table: Vec<i32>,
+    },
     /// Monolithic scoring (baselines / ablation w/o intra).
     ScoreFull { tokens: Vec<i32>, last_idx: Vec<i32> },
     /// Reset the reward KV state (new run / tests).
@@ -208,6 +221,9 @@ struct RewardHandler {
     state: RewardState,
     /// KV rows this replica's state holds (G full-shape, G/N sliced)
     rows: usize,
+    /// pooled-KV mode: `state` holds `[P, H, bs, hd]` buffers and requests
+    /// must be `StreamPaged` (the dense and paged shapes are incompatible)
+    paged: bool,
 }
 
 impl StageHandler for RewardHandler {
@@ -217,14 +233,38 @@ impl StageHandler for RewardHandler {
     fn handle(&mut self, req: RewardReq) -> Result<RewardResp> {
         match req {
             RewardReq::Reset => {
-                self.state = self.ops.fresh_state_rows(self.rows)?;
+                self.state = if self.paged {
+                    self.ops.fresh_paged_state()?
+                } else {
+                    self.ops.fresh_state_rows(self.rows)?
+                };
                 Ok(RewardResp::ResetDone)
             }
             RewardReq::Stream { entry, chunk, start, n_valid, picks, lane_map } => {
+                ensure!(!self.paged, "dense stream request on a paged reward replica");
                 let rows = start.len();
                 let c = chunk.len() / rows;
                 let scores =
                     self.ops.prefill_chunk(&mut self.state, &entry, &chunk, &start, &n_valid)?;
+                Ok(RewardResp::StreamScores(
+                    picks
+                        .iter()
+                        .map(|p| (lane_map[p.lane], scores[p.lane * c + p.idx_in_chunk]))
+                        .collect(),
+                ))
+            }
+            RewardReq::StreamPaged { entry, chunk, start, n_valid, picks, lane_map, table } => {
+                ensure!(self.paged, "paged stream request on a dense reward replica");
+                let rows = start.len();
+                let c = chunk.len() / rows;
+                let scores = self.ops.prefill_chunk_paged(
+                    &mut self.state,
+                    &entry,
+                    &chunk,
+                    &start,
+                    &n_valid,
+                    &table,
+                )?;
                 Ok(RewardResp::StreamScores(
                     picks
                         .iter()
@@ -248,6 +288,8 @@ pub struct RewardWorker {
     /// replica's state holds only its compacted rows); `None` → masked
     /// full-shape fallback.
     sliced_rows: Option<usize>,
+    /// Pool runs the paged entry family (pooled KV + block tables).
+    paged: bool,
 }
 
 impl RewardWorker {
@@ -267,8 +309,34 @@ impl RewardWorker {
         replicas: usize,
         queue_depth: usize,
     ) -> Result<Self> {
+        Self::spawn_inner(engine, replicas, queue_depth, false)
+    }
+
+    /// Spawn a *paged* reward pool: each replica's KV is the pooled
+    /// `[P, H, bs, hd]` buffer and streamed chunks arrive as `StreamPaged`
+    /// with a block table.  Paged entries are full-G only, so replicas
+    /// always route masked (no sliced flavour); requires
+    /// [`Manifest::paged_supported`](crate::runtime::manifest::Manifest::paged_supported).
+    pub fn spawn_replicated_paged(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        ensure!(
+            engine.manifest().paged_supported(),
+            "paged reward pool requested but the artifacts ship no paged entries"
+        );
+        Self::spawn_inner(engine, replicas, queue_depth, true)
+    }
+
+    fn spawn_inner(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+        paged: bool,
+    ) -> Result<Self> {
         let g = engine.manifest().shape.lanes;
-        let sliced_rows = (replicas > 1 && g % replicas == 0)
+        let sliced_rows = (!paged && replicas > 1 && g % replicas == 0)
             .then(|| g / replicas)
             .filter(|&rows| engine.manifest().sliced_prefill_supported("reward", rows));
         let pool = StagePool::spawn("reward", replicas, queue_depth, |_replica| {
@@ -276,11 +344,12 @@ impl RewardWorker {
             let rows = sliced_rows.unwrap_or(g);
             move || {
                 let ops = RewardOps::new(engine)?;
-                let state = ops.fresh_state_rows(rows)?;
-                Ok(RewardHandler { ops, state, rows })
+                let state =
+                    if paged { ops.fresh_paged_state()? } else { ops.fresh_state_rows(rows)? };
+                Ok(RewardHandler { ops, state, rows, paged })
             }
         })?;
-        Ok(Self { pool, sliced_rows })
+        Ok(Self { pool, sliced_rows, paged })
     }
 
     pub fn replicas(&self) -> usize {
@@ -290,6 +359,11 @@ impl RewardWorker {
     /// Compacted rows per replica when the pool runs sliced entries.
     pub fn sliced_rows(&self) -> Option<usize> {
         self.sliced_rows
+    }
+
+    /// Does this pool run the paged entry family?
+    pub fn paged(&self) -> bool {
+        self.paged
     }
 
     /// The replica owning `lane`'s KV state.
@@ -349,6 +423,14 @@ impl RewardWorker {
 pub enum RefReq {
     /// Incremental ref-logprob prefill of one streamed chunk.
     Stream { entry: String, chunk: Vec<i32>, start: Vec<i32>, n_valid: Vec<i32> },
+    /// The paged flavour: pooled KV + a `[G, s_max/block]` block table.
+    StreamPaged {
+        entry: String,
+        chunk: Vec<i32>,
+        start: Vec<i32>,
+        n_valid: Vec<i32>,
+        table: Vec<i32>,
+    },
     /// Reset the ref KV/boundary state (new run / tests).
     Reset,
 }
@@ -365,6 +447,8 @@ struct RefHandler {
     state: RefStreamState,
     /// KV/boundary rows this replica's state holds (G or G/N)
     rows: usize,
+    /// pooled-KV mode (see `RewardHandler::paged`)
+    paged: bool,
 }
 
 impl StageHandler for RefHandler {
@@ -374,12 +458,30 @@ impl StageHandler for RefHandler {
     fn handle(&mut self, req: RefReq) -> Result<RefResp> {
         match req {
             RefReq::Reset => {
-                self.state = self.ops.fresh_state_rows(self.rows)?;
+                self.state = if self.paged {
+                    self.ops.fresh_paged_state()?
+                } else {
+                    self.ops.fresh_state_rows(self.rows)?
+                };
                 Ok(RefResp::ResetDone)
             }
-            RefReq::Stream { entry, chunk, start, n_valid } => Ok(RefResp::StreamLogps(
-                self.ops.prefill_chunk(&mut self.state, &entry, &chunk, &start, &n_valid)?,
-            )),
+            RefReq::Stream { entry, chunk, start, n_valid } => {
+                ensure!(!self.paged, "dense stream request on a paged ref replica");
+                Ok(RefResp::StreamLogps(
+                    self.ops.prefill_chunk(&mut self.state, &entry, &chunk, &start, &n_valid)?,
+                ))
+            }
+            RefReq::StreamPaged { entry, chunk, start, n_valid, table } => {
+                ensure!(self.paged, "paged stream request on a dense ref replica");
+                Ok(RefResp::StreamLogps(self.ops.prefill_chunk_paged(
+                    &mut self.state,
+                    &entry,
+                    &chunk,
+                    &start,
+                    &n_valid,
+                    &table,
+                )?))
+            }
         }
     }
 }
@@ -390,6 +492,8 @@ pub struct RefWorker {
     pool: StagePool<RefReq, RefResp>,
     /// `Some(G/N)` when this pool runs the lane-sliced entries.
     sliced_rows: Option<usize>,
+    /// Pool runs the paged entry family.
+    paged: bool,
 }
 
 impl RefWorker {
@@ -406,8 +510,30 @@ impl RefWorker {
         replicas: usize,
         queue_depth: usize,
     ) -> Result<Self> {
+        Self::spawn_inner(engine, replicas, queue_depth, false)
+    }
+
+    /// Spawn a *paged* ref pool (see [`RewardWorker::spawn_replicated_paged`]).
+    pub fn spawn_replicated_paged(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        ensure!(
+            engine.manifest().paged_supported(),
+            "paged ref pool requested but the artifacts ship no paged entries"
+        );
+        Self::spawn_inner(engine, replicas, queue_depth, true)
+    }
+
+    fn spawn_inner(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+        paged: bool,
+    ) -> Result<Self> {
         let g = engine.manifest().shape.lanes;
-        let sliced_rows = (replicas > 1 && g % replicas == 0)
+        let sliced_rows = (!paged && replicas > 1 && g % replicas == 0)
             .then(|| g / replicas)
             .filter(|&rows| engine.manifest().sliced_prefill_supported("ref", rows));
         let pool = StagePool::spawn("ref", replicas, queue_depth, |_replica| {
@@ -415,11 +541,12 @@ impl RefWorker {
             let rows = sliced_rows.unwrap_or(g);
             move || {
                 let ops = RefOps::new(engine)?;
-                let state = ops.fresh_state_rows(rows)?;
-                Ok(RefHandler { ops, state, rows })
+                let state =
+                    if paged { ops.fresh_paged_state()? } else { ops.fresh_state_rows(rows)? };
+                Ok(RefHandler { ops, state, rows, paged })
             }
         })?;
-        Ok(Self { pool, sliced_rows })
+        Ok(Self { pool, sliced_rows, paged })
     }
 
     pub fn replicas(&self) -> usize {
@@ -429,6 +556,11 @@ impl RefWorker {
     /// Compacted rows per replica when the pool runs sliced entries.
     pub fn sliced_rows(&self) -> Option<usize> {
         self.sliced_rows
+    }
+
+    /// Does this pool run the paged entry family?
+    pub fn paged(&self) -> bool {
+        self.paged
     }
 
     pub fn replica_for_lane(&self, lane: usize) -> usize {
@@ -512,6 +644,16 @@ impl RefSink {
         queue_depth: usize,
     ) -> Result<Self> {
         let worker = RefWorker::spawn_replicated(engine, replicas, queue_depth)?;
+        let meta = (0..worker.replicas()).map(|_| VecDeque::new()).collect();
+        Ok(Self { worker, meta })
+    }
+
+    pub fn spawn_replicated_paged(
+        engine: Arc<Engine>,
+        replicas: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        let worker = RefWorker::spawn_replicated_paged(engine, replicas, queue_depth)?;
         let meta = (0..worker.replicas()).map(|_| VecDeque::new()).collect();
         Ok(Self { worker, meta })
     }
@@ -630,6 +772,70 @@ impl StreamSink {
                             chunk: part.chunk.tokens,
                             start: part.chunk.start,
                             n_valid: part.chunk.n_valid,
+                        },
+                    ));
+                }
+                s.worker.fan_out(parts)
+            }
+        }
+    }
+
+    /// Does this stage run the paged entry family?
+    pub fn paged(&self) -> bool {
+        match self {
+            StreamSink::Reward(w) => w.paged(),
+            StreamSink::Ref(s) => s.worker.paged(),
+        }
+    }
+
+    /// Submit one streamed chunk with its block table (paged pools only).
+    /// Paged entries are full-G, so replicas always get the masked
+    /// full-shape split; each part carries a clone of the table — every
+    /// replica's pooled KV uses the same lane → block mapping, which is
+    /// safe because replicas only *read* rows they own (`n_valid > 0`) and
+    /// each writes its private pool buffer.
+    pub fn submit_chunk_paged(&mut self, ck: &StreamChunk, table: &[i32]) -> Result<()> {
+        ensure!(self.paged(), "submit_chunk_paged on a dense {} pool", self.name());
+        match self {
+            StreamSink::Reward(w) => {
+                let n = w.replicas();
+                let mut parts = Vec::new();
+                for r in 0..n {
+                    let Some(part) = ck.for_replica(r, n, false) else { continue };
+                    parts.push((
+                        r,
+                        RewardReq::StreamPaged {
+                            entry: format!("reward_prefill_chunk_paged_c{}", part.chunk.c),
+                            chunk: part.chunk.tokens,
+                            start: part.chunk.start,
+                            n_valid: part.chunk.n_valid,
+                            picks: part.chunk.picks,
+                            lane_map: part.lane_map,
+                            table: table.to_vec(),
+                        },
+                    ));
+                }
+                w.fan_out(parts)
+            }
+            StreamSink::Ref(s) => {
+                let n = s.worker.replicas();
+                let mut parts = Vec::new();
+                for r in 0..n {
+                    let Some(part) = ck.for_replica(r, n, false) else { continue };
+                    s.meta[r].push_back(RefMeta {
+                        start: part.chunk.start.clone(),
+                        n_valid: part.chunk.n_valid.clone(),
+                        c: part.chunk.c,
+                        lane_map: part.lane_map,
+                    });
+                    parts.push((
+                        r,
+                        RefReq::StreamPaged {
+                            entry: format!("ref_prefill_chunk_paged_c{}", part.chunk.c),
+                            chunk: part.chunk.tokens,
+                            start: part.chunk.start,
+                            n_valid: part.chunk.n_valid,
+                            table: table.to_vec(),
                         },
                     ));
                 }

@@ -53,7 +53,13 @@ pub struct PromptQueue {
     /// total prompts that arrived (admitted to the queue)
     arrived: u64,
     /// arrivals shed because the queue was full
-    dropped: u64,
+    dropped_bound: u64,
+    /// arrivals shed by the admission-time length guard: the prompt could
+    /// never finish within the lane budget (`prompt_len + max_new > s_max`)
+    dropped_oversize: u64,
+    /// max admissible prompt tokens (`s_max - max_new`); `usize::MAX`
+    /// until [`Self::set_length_guard`] installs the bound
+    max_prompt_tokens: usize,
 }
 
 impl PromptQueue {
@@ -70,8 +76,19 @@ impl PromptQueue {
             rng: Rng::new(seed ^ 0x61726976), // "ariv"
             tick_seen: 0,
             arrived: 0,
-            dropped: 0,
+            dropped_bound: 0,
+            dropped_oversize: 0,
+            max_prompt_tokens: usize::MAX,
         }
+    }
+
+    /// Install the admission-time length guard: prompts longer than
+    /// `max_prompt_tokens` (i.e. `prompt_len + max_new > s_max`) are shed
+    /// at enqueue with their own drop reason, instead of wasting a lane and
+    /// failing the mid-chunk clamp check after admission.
+    pub fn set_length_guard(&mut self, max_prompt_tokens: usize) {
+        assert!(max_prompt_tokens >= 1, "length guard must admit some prompt");
+        self.max_prompt_tokens = max_prompt_tokens;
     }
 
     /// Materialize all arrivals up to and including `tick`.  No-op for
@@ -85,11 +102,16 @@ impl PromptQueue {
             self.tick_seen += 1;
             for _ in 0..poisson(&mut self.rng, rate) {
                 if self.queue.len() >= self.depth {
-                    self.dropped += 1;
+                    self.dropped_bound += 1;
+                    continue;
+                }
+                let prompt = self.sampler.next();
+                if prompt.tokens.len() > self.max_prompt_tokens {
+                    self.dropped_oversize += 1;
                     continue;
                 }
                 self.queue.push_back(QueuedPrompt {
-                    prompt: self.sampler.next(),
+                    prompt,
                     enqueued_tick: self.tick_seen,
                 });
                 self.arrived += 1;
@@ -111,8 +133,19 @@ impl PromptQueue {
     pub fn pop(&mut self, tick: u64) -> Option<QueuedPrompt> {
         match self.arrivals {
             Arrivals::Saturated => {
-                self.arrived += 1;
-                Some(QueuedPrompt { prompt: self.sampler.next(), enqueued_tick: tick })
+                // synthesized on demand: shed oversize draws like Poisson
+                // enqueue does, with a retry bound so a sampler that only
+                // produces oversize prompts cannot spin forever
+                for _ in 0..64 {
+                    let prompt = self.sampler.next();
+                    if prompt.tokens.len() > self.max_prompt_tokens {
+                        self.dropped_oversize += 1;
+                        continue;
+                    }
+                    self.arrived += 1;
+                    return Some(QueuedPrompt { prompt, enqueued_tick: tick });
+                }
+                None
             }
             Arrivals::Poisson { .. } => self.queue.pop_front(),
         }
@@ -134,9 +167,15 @@ impl PromptQueue {
         self.arrivals
     }
 
-    /// Total prompts shed at the bound so far.
+    /// Total prompts shed so far, for any reason (queue bound + length
+    /// guard).  [`Self::dropped_oversize`] breaks out the guard's share.
     pub fn dropped(&self) -> u64 {
-        self.dropped
+        self.dropped_bound + self.dropped_oversize
+    }
+
+    /// Prompts shed by the admission-time length guard specifically.
+    pub fn dropped_oversize(&self) -> u64 {
+        self.dropped_oversize
     }
 
     /// Total prompts that entered the queue (or were synthesized) so far.
@@ -236,6 +275,29 @@ mod tests {
         };
         assert_eq!(run(5), run(5));
         assert_ne!(run(5).0, 0, "rate 0.7 over 200 ticks must arrive something");
+    }
+
+    #[test]
+    fn length_guard_sheds_oversize_prompts_at_enqueue() {
+        // guard below the sampler's minimum prompt length: every arrival
+        // is shed with the oversize reason, none enter the queue
+        let mut q = queue(Arrivals::Poisson { rate: 1.0 }, 8, 13);
+        q.set_length_guard(1);
+        q.advance_to(100);
+        assert_eq!(q.len(), 0);
+        assert!(q.dropped_oversize() > 0, "oversize arrivals must be counted");
+        assert_eq!(q.arrived(), 0);
+        assert!(q.dropped() >= q.dropped_oversize(), "dropped() includes the guard");
+        // saturated arrivals give up after the retry bound instead of spinning
+        let mut s = queue(Arrivals::Saturated, 8, 13);
+        s.set_length_guard(1);
+        assert!(s.pop(0).is_none());
+        assert!(s.dropped_oversize() > 0);
+        // a permissive guard admits normally
+        let mut ok = queue(Arrivals::Saturated, 8, 13);
+        ok.set_length_guard(64);
+        assert!(ok.pop(0).is_some());
+        assert_eq!(ok.dropped_oversize(), 0);
     }
 
     #[test]

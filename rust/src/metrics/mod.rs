@@ -95,6 +95,10 @@ pub struct StepRecord {
     pub admitted_mid_step: usize,
     /// prompts shed at the admission-queue bound this step
     pub queue_dropped: usize,
+    /// peak KV commitment across the step's chunk boundaries, in bytes:
+    /// block-rounded pool allocation under paged KV, resident lanes ×
+    /// `s_max` rows under dense KV (0 when unreported, e.g. legacy logs)
+    pub peak_kv_bytes: u64,
 }
 
 /// Whole-run log for one pipeline mode.
@@ -244,6 +248,7 @@ impl RunLog {
                     ("lane_idle_frac", json::num(r.lane_idle_frac)),
                     ("admitted_mid_step", json::num(r.admitted_mid_step as f64)),
                     ("queue_dropped", json::num(r.queue_dropped as f64)),
+                    ("peak_kv_bytes", json::num(r.peak_kv_bytes as f64)),
                     (
                         "prompt_latencies",
                         Value::Arr(

@@ -25,6 +25,11 @@ pub struct ModelShape {
     pub gamma: f64,
     pub lam: f64,
     pub kl_beta_default: f64,
+    /// Tokens per KV block for the paged entry family (must divide `s_max`).
+    pub kv_block_size: usize,
+    /// Physical blocks in the pooled KV buffer; 0 = auto-size so every lane
+    /// can hold a full `s_max` sequence plus the scratch block.
+    pub kv_pool_blocks: usize,
 }
 
 impl ModelShape {
@@ -35,6 +40,36 @@ impl ModelShape {
     /// Shape of one KV cache tensor for `batch` lanes.
     pub fn kv_shape(&self, batch: usize) -> Vec<usize> {
         vec![batch, self.n_heads, self.s_max, self.head_dim()]
+    }
+
+    /// KV blocks covering one full-length (`s_max`) lane.
+    pub fn paged_blocks_per_lane(&self) -> usize {
+        self.s_max / self.kv_block_size
+    }
+
+    /// Physical blocks in the pooled KV buffer, scratch block 0 included.
+    pub fn paged_pool_blocks(&self) -> usize {
+        if self.kv_pool_blocks > 0 {
+            self.kv_pool_blocks
+        } else {
+            self.lanes * self.paged_blocks_per_lane() + 1
+        }
+    }
+
+    /// Shape of one pooled KV tensor: `[pool, n_heads, block, head_dim]`.
+    pub fn paged_kv_shape(&self) -> Vec<usize> {
+        vec![self.paged_pool_blocks(), self.n_heads, self.kv_block_size, self.head_dim()]
+    }
+
+    /// Shape of an uploaded i32 block table covering `rows` lanes.
+    pub fn block_table_shape(&self, rows: usize) -> Vec<usize> {
+        vec![rows, self.paged_blocks_per_lane()]
+    }
+
+    /// f32 bytes of K + V across all layers for one token of one sequence —
+    /// the unit the paged-vs-dense memory accounting is priced in.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_heads * self.head_dim() * 4
     }
 
     /// Total parameter count (elements) of one model.
@@ -112,6 +147,18 @@ impl Manifest {
             gamma: cfg.get("gamma")?.as_f64()?,
             lam: cfg.get("lam")?.as_f64()?,
             kl_beta_default: cfg.opt("kl_beta").map(|x| x.as_f64()).transpose()?.unwrap_or(0.02),
+            // older artifact sets predate paging; defaults keep them loadable
+            // (paged support is gated on entry presence, not these knobs)
+            kv_block_size: cfg
+                .opt("kv_block_size")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(16),
+            kv_pool_blocks: cfg
+                .opt("kv_pool_blocks")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(0),
         };
 
         let param_table = v
@@ -235,6 +282,41 @@ impl Manifest {
                 );
             }
         }
+        // paged entries are all-or-nothing: workers and the scheduler commit
+        // to the paged path at spawn, so shipping (say) paged reward prefill
+        // without paged generation would strand a run mid-step.  Pallas
+        // validation flavours are exempt, like the sliced family above.
+        let any_paged =
+            self.entries.keys().any(|n| n.contains("_paged") && !n.contains("_pallas_"));
+        if any_paged {
+            if self.shape.kv_block_size == 0 || self.shape.s_max % self.shape.kv_block_size != 0
+            {
+                bail!(
+                    "paged entries present but kv_block_size {} does not divide s_max {}",
+                    self.shape.kv_block_size,
+                    self.shape.s_max
+                );
+            }
+            let mut family = vec!["actor_prefill_paged".to_string()];
+            for c in &self.shape.chunk_sizes {
+                family.push(format!("actor_generate_chunk_paged_c{c}"));
+                family.push(format!("reward_prefill_chunk_paged_c{c}"));
+                if self.ref_prefill_supported() {
+                    family.push(format!("ref_prefill_chunk_paged_c{c}"));
+                }
+            }
+            for name in family {
+                if !self.entries.contains_key(&name) {
+                    bail!("partial paged entry family: missing {name:?}");
+                }
+            }
+            let table = self.shape.block_table_shape(self.shape.lanes);
+            let prefill = self.entry("actor_prefill_paged")?;
+            let got = &prefill.inputs.last().expect("entry has inputs").shape;
+            if *got != table {
+                bail!("actor_prefill_paged block table shape {got:?} != {table:?}");
+            }
+        }
         Ok(())
     }
 
@@ -284,6 +366,30 @@ impl Manifest {
             && self.shape.chunk_sizes.iter().all(|c| {
                 self.entries.contains_key(&format!("{stage}_prefill_chunk_g{rows}_c{c}"))
             })
+    }
+
+    /// Do the artifacts ship the paged entry family?  validate() enforces
+    /// all-or-nothing coverage, so actor-prefill presence implies the full
+    /// set (paged generation + reward, and ref when chunked ref ships).
+    pub fn paged_supported(&self) -> bool {
+        self.entries.contains_key("actor_prefill_paged")
+    }
+
+    /// The paged prefill entry for `stage` ("reward" | "ref") at chunk `c`,
+    /// if shipped.  Paged entries are full-G only (no sliced flavours):
+    /// replica pools route them via the masked path.
+    pub fn paged_prefill_entry(&self, stage: &str, c: usize) -> Option<String> {
+        let name = format!("{stage}_prefill_chunk_paged_c{c}");
+        self.entries.contains_key(&name).then_some(name)
+    }
+
+    /// The Pallas-flavoured paged reward entry, if shipped.
+    pub fn pallas_paged_reward_entry(&self) -> Option<(&str, usize)> {
+        self.entries.keys().find_map(|k| {
+            k.strip_prefix("reward_prefill_chunk_paged_pallas_c")
+                .and_then(|c| c.parse::<usize>().ok())
+                .map(|c| (k.as_str(), c))
+        })
     }
 
     /// The sliced Pallas reward entry at `rows`, if shipped.
@@ -386,5 +492,34 @@ mod tests {
         // non-divisor row counts are absent → masked fallback
         assert!(!m.sliced_prefill_supported("reward", g + 1));
         assert!(!m.sliced_prefill_supported("reward", 0));
+    }
+
+    #[test]
+    fn paged_family_ships_and_is_shaped() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        if !m.paged_supported() {
+            return; // pre-paging artifact set
+        }
+        assert_eq!(m.shape.s_max % m.shape.kv_block_size, 0);
+        let pool = m.shape.paged_pool_blocks();
+        assert!(pool > 1, "pool must hold the scratch block plus real blocks");
+        let kv = m.shape.paged_kv_shape();
+        assert_eq!(kv, vec![pool, m.shape.n_heads, m.shape.kv_block_size, m.shape.head_dim()]);
+        for c in &m.shape.chunk_sizes {
+            assert!(m.paged_prefill_entry("reward", *c).is_some());
+            assert!(m.paged_prefill_entry("ref", *c).is_some());
+            let e = m.entry(&format!("actor_generate_chunk_paged_c{c}")).unwrap();
+            // params + (tokens, pos, live) + pooled kv + key + table
+            assert_eq!(e.inputs.len(), m.n_params + 3 + 2 * m.shape.n_layers + 2);
+            assert_eq!(e.inputs[m.n_params + 3].shape, kv);
+            assert_eq!(
+                e.inputs.last().unwrap().shape,
+                m.shape.block_table_shape(m.shape.lanes)
+            );
+        }
+        assert!(m.pallas_paged_reward_entry().is_some());
+        // paged entries never come sliced — full-G only
+        assert!(!m.entries.keys().any(|n| n.contains("_paged_g")));
     }
 }

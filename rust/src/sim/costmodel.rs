@@ -119,6 +119,34 @@ impl CostModel {
         self.model.hidden * self.model.hidden
     }
 
+    /// KV bytes one sequence *commits* (not merely fills): under paged
+    /// allocation (`block_tokens > 0`) its context rounds up to whole
+    /// blocks, capped at the block-rounded row; dense (`block_tokens == 0`)
+    /// commits the full `max_len` row for the sequence's whole life — the
+    /// worst-case reservation paging exists to avoid.
+    pub fn kv_committed_bytes(&self, ctx: f64, max_len: f64, block_tokens: f64) -> f64 {
+        if block_tokens <= 0.0 {
+            return self.model.kv_bytes_per_seq(max_len);
+        }
+        let cap = (max_len / block_tokens).ceil() * block_tokens;
+        let rounded = ((ctx / block_tokens).ceil().max(1.0) * block_tokens).min(cap);
+        self.model.kv_bytes_per_seq(rounded)
+    }
+
+    /// Concurrent sequences a KV budget can hold at mean context
+    /// `mean_ctx`: the dense bound pays a full `max_len` row per lane, so
+    /// paging buys strictly more lanes whenever sequences run shorter than
+    /// the row (`decouple lane slots from KV capacity`).
+    pub fn max_concurrent_lanes(
+        &self,
+        budget_bytes: f64,
+        mean_ctx: f64,
+        max_len: f64,
+        block_tokens: f64,
+    ) -> f64 {
+        (budget_bytes / self.kv_committed_bytes(mean_ctx, max_len, block_tokens)).floor()
+    }
+
     /// Seconds for one optimizer step over `tokens` tokens on `n_gpus`
     /// data-parallel workers (fwd+bwd ≈ 6·P FLOPs per token) plus a ring
     /// allreduce of the gradients over `network_gbps` (0 ⇒ NVLink-local,
@@ -210,6 +238,32 @@ mod tests {
         let t_big = m.sliced_prefill(tokens, ctx, 4096.0);
         assert!((t_big - floor).abs() <= 1e-12 * floor, "t_big {t_big} vs floor {floor}");
         assert!(t_big > t1 / 4096.0, "the floor must bind before perfect scaling");
+    }
+
+    #[test]
+    fn paged_commitment_rounds_to_blocks_and_beats_dense() {
+        let m = cm();
+        let (max_len, bt) = (1024.0, 16.0);
+        // dense commits the whole row no matter the context
+        assert_eq!(m.kv_committed_bytes(100.0, max_len, 0.0), m.model.kv_bytes_per_seq(max_len));
+        // paged commits block-rounded context
+        let c = m.kv_committed_bytes(100.0, max_len, bt);
+        assert_eq!(c, m.model.kv_bytes_per_seq(112.0)); // ceil(100/16)*16
+        // empty sequences still hold one block; full rows cap at the row
+        assert_eq!(m.kv_committed_bytes(0.0, max_len, bt), m.model.kv_bytes_per_seq(bt));
+        assert_eq!(
+            m.kv_committed_bytes(9999.0, max_len, bt),
+            m.model.kv_bytes_per_seq(max_len)
+        );
+        // the same budget holds strictly more short sequences under paging
+        let budget = 64.0 * m.model.kv_bytes_per_seq(max_len);
+        let dense_lanes = m.max_concurrent_lanes(budget, 100.0, max_len, 0.0);
+        let paged_lanes = m.max_concurrent_lanes(budget, 100.0, max_len, bt);
+        assert_eq!(dense_lanes, 64.0);
+        assert!(
+            paged_lanes > dense_lanes,
+            "paged {paged_lanes} must exceed the dense lane bound {dense_lanes}"
+        );
     }
 
     #[test]

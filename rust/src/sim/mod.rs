@@ -34,6 +34,6 @@ pub use cluster::ClusterSetup;
 pub use costmodel::ModelSpec;
 pub use gpu::GpuSpec;
 pub use lengths::LengthModel;
-pub use pipeline::{simulate, Pipeline, SimAdmission, SimConfig};
+pub use pipeline::{kv_lane_bounds, simulate, Pipeline, SimAdmission, SimConfig};
 pub use presets::Setup;
 pub use rewardmodel::RewardCurve;

@@ -121,6 +121,12 @@ pub struct SimConfig {
     /// bound on the Poisson arrival queue — prompts arriving with the
     /// queue at this depth are shed (and counted in `queue_dropped`)
     pub admission_queue_depth: usize,
+    /// paged-KV block size in tokens; 0 = dense per-lane rows.  Paging is
+    /// a *memory* discipline: the decode schedule is untouched (equal
+    /// throughput by construction), but each sequence commits block-rounded
+    /// context instead of a worst-case `prompt + max_len` row, which is
+    /// what `peak_kv_bytes` measures and rolling admission scales against.
+    pub kv_block_tokens: f64,
 }
 
 impl SimConfig {
@@ -136,7 +142,15 @@ impl SimConfig {
             ref_replicas: 1,
             admission: SimAdmission::Step,
             admission_queue_depth: 256,
+            kv_block_tokens: 0.0,
         }
+    }
+
+    /// Switch KV accounting to paged blocks of `block_tokens` tokens.
+    pub fn paged(mut self, block_tokens: f64) -> Self {
+        assert!(block_tokens > 0.0, "paged KV needs a positive block size");
+        self.kv_block_tokens = block_tokens;
+        self
     }
 
     /// Switch to rolling admission with saturated arrivals.
@@ -178,6 +192,9 @@ struct GenOutcome {
     /// ∫ (lanes − active) dt over the stage, in lane·seconds — the idle
     /// capacity rolling admission exists to reclaim
     idle_lane_s: f64,
+    /// max over decode segments of Σ_active committed KV bytes (dense: a
+    /// full `max_row` per lane; paged: block-rounded sequence length)
+    peak_kv_bytes: f64,
 }
 
 /// Event-stepped decode: advance until `stop_finished` sequences complete
@@ -189,12 +206,20 @@ fn run_generation(
     lanes: usize,
     cm: &CostModel,
     per_gpu_shards: f64,
+    max_row: f64,
+    kv_block_tokens: f64,
 ) -> GenOutcome {
     let mut time = 0.0;
     let mut tokens = 0.0;
     let mut idle_lane_s = 0.0;
+    let mut peak_kv_bytes = 0.0f64;
     let mut finished = Vec::new();
     while !active.is_empty() && finished.len() < stop_finished {
+        let committed: f64 = active
+            .iter()
+            .map(|s| cm.kv_committed_bytes(s.prompt + s.total_len, max_row, kv_block_tokens))
+            .sum();
+        peak_kv_bytes = peak_kv_bytes.max(committed);
         let min_rem = active.iter().map(|s| s.remaining).fold(f64::INFINITY, f64::min);
         let batch = active.len() as f64 / per_gpu_shards.max(1.0);
         let mean_ctx = active.iter().map(|s| s.prompt + s.total_len - s.remaining).sum::<f64>()
@@ -223,7 +248,7 @@ fn run_generation(
         seq.remaining = 0.0;
         active.push(seq);
     }
-    GenOutcome { time, tokens, finished, idle_lane_s }
+    GenOutcome { time, tokens, finished, idle_lane_s, peak_kv_bytes }
 }
 
 /// Poisson arrival stream state, persistent across steps: prompts keep
@@ -290,10 +315,13 @@ fn run_generation_rolling(
     now: f64,
     next_id: &mut u64,
     rng: &mut Rng,
+    max_row: f64,
+    kv_block_tokens: f64,
 ) -> (GenOutcome, RollExtra) {
     let mut time = 0.0;
     let mut tokens = 0.0;
     let mut idle_lane_s = 0.0;
+    let mut peak_kv_bytes = 0.0f64;
     let mut finished: Vec<GenSeq> = Vec::new();
     let mut latencies: Vec<PromptLatency> = Vec::new();
     let mut admitted_mid = 0usize;
@@ -355,6 +383,11 @@ fn run_generation_rolling(
 
         // ---- advance to the next completion or (if a lane is free and
         //      traffic pending) the next arrival ----
+        let committed: f64 = active
+            .iter()
+            .map(|s| cm.kv_committed_bytes(s.prompt + s.total_len, max_row, kv_block_tokens))
+            .sum();
+        peak_kv_bytes = peak_kv_bytes.max(committed);
         let min_rem = active.iter().map(|s| s.remaining).fold(f64::INFINITY, f64::min);
         let batch = active.len() as f64 / per_gpu_shards.max(1.0);
         let mean_ctx = active.iter().map(|s| s.prompt + s.total_len - s.remaining).sum::<f64>()
@@ -394,7 +427,7 @@ fn run_generation_rolling(
         }
     }
     (
-        GenOutcome { time, tokens, finished, idle_lane_s },
+        GenOutcome { time, tokens, finished, idle_lane_s, peak_kv_bytes },
         RollExtra { admitted_mid, latencies },
     )
 }
@@ -467,6 +500,9 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         },
     };
     let mut next_id: u64 = 0;
+    // densest possible KV row: a full prompt plus the longest decode the
+    // length model can emit — what a dense cache must reserve per lane
+    let max_row = su.prompt_len + su.lengths.max_len;
 
     for step in 0..cfg.steps as u64 {
         let progress = step as f64 / su.total_steps.max(1) as f64;
@@ -506,6 +542,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         let lanes = (b + delta).max(1);
         let stop = if rolling || inter { b } else { carried.len() };
         let mut lane_idle_s = 0.0;
+        let mut peak_kv = 0.0f64;
         let mut roll_extra = RollExtra { admitted_mid: 0, latencies: Vec::new() };
         let (mut gen_time, gen_tokens, finished) = if rolling {
             let (out, extra) = run_generation_rolling(
@@ -523,8 +560,11 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                 elapsed,
                 &mut next_id,
                 &mut rng,
+                max_row,
+                cfg.kv_block_tokens,
             );
             lane_idle_s = out.idle_lane_s;
+            peak_kv = out.peak_kv_bytes;
             roll_extra = extra;
             (out.time, out.tokens, out.finished)
         } else {
@@ -543,7 +583,17 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                     let mut shard_rows: Vec<(f64, usize, f64)> = Vec::new();
                     for mut shard in shard_seqs {
                         let n = shard.len();
-                        let out = run_generation(&mut shard, n, n.max(1), &gen_cm, 1.0);
+                        let out = run_generation(
+                            &mut shard,
+                            n,
+                            n.max(1),
+                            &gen_cm,
+                            1.0,
+                            max_row,
+                            cfg.kv_block_tokens,
+                        );
+                        // shards decode concurrently: their peaks add
+                        peak_kv += out.peak_kv_bytes;
                         let mut t = out.time;
                         if sp {
                             // sequence parallelism accelerates the tail segment
@@ -568,14 +618,32 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                     // interruption) and resumes later — cut at ~93% completion
                     let stop_at = ((carried.len() * 97) / 100).max(1);
                     let n = carried.len().max(1);
-                    let out = run_generation(&mut carried, stop_at, n, &gen_cm, shards);
+                    let out = run_generation(
+                        &mut carried,
+                        stop_at,
+                        n,
+                        &gen_cm,
+                        shards,
+                        max_row,
+                        cfg.kv_block_tokens,
+                    );
                     lane_idle_s = out.idle_lane_s;
+                    peak_kv = out.peak_kv_bytes;
                     (out.time, out.tokens, out.finished)
                 }
                 _ => {
                     let n = carried.len().max(1);
-                    let out = run_generation(&mut carried, stop, n, &gen_cm, shards);
+                    let out = run_generation(
+                        &mut carried,
+                        stop,
+                        n,
+                        &gen_cm,
+                        shards,
+                        max_row,
+                        cfg.kv_block_tokens,
+                    );
                     lane_idle_s = out.idle_lane_s;
+                    peak_kv = out.peak_kv_bytes;
                     (out.time, out.tokens, out.finished)
                 }
             }
@@ -761,6 +829,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                 .clamp(0.0, 1.0),
             admitted_mid_step: roll_extra.admitted_mid,
             queue_dropped: (arr.dropped - dropped_before) as usize,
+            peak_kv_bytes: peak_kv as u64,
         });
 
         // non-inter pipelines never carry work across steps (except AReaL,
@@ -822,6 +891,30 @@ pub fn steady_state_util(log: &RunLog) -> f64 {
     let n = log.records.len();
     let tail = &log.records[n / 2..];
     tail.iter().map(|r| r.util).sum::<f64>() / tail.len().max(1) as f64
+}
+
+/// `(dense, paged)` bound on concurrently resident lanes for a setup: KV
+/// budget is the gen pool's HBM minus one weight replica per GPU; a dense
+/// lane commits the worst-case `prompt + max_len` row for its whole life
+/// while a paged lane commits only its block-rounded median context — the
+/// "scale lanes, not memory" headline number for the bench harness.
+pub fn kv_lane_bounds(cfg: &SimConfig, block_tokens: f64) -> (f64, f64) {
+    let su = &cfg.setup;
+    let cm = CostModel {
+        model: su.model,
+        gpu: su.cluster.gpu,
+        tp: 1.0,
+        software_efficiency: su.gen_eff,
+        iter_overhead_s: su.iter_overhead_s,
+    };
+    let per_gpu = (su.cluster.gpu.mem_gb * 1e9 - su.model.weight_bytes()).max(0.0);
+    let budget = per_gpu * su.cluster.n_gen as f64;
+    let mean_ctx = su.prompt_len + su.lengths.median(0.5);
+    let max_row = su.prompt_len + su.lengths.max_len;
+    (
+        cm.max_concurrent_lanes(budget, mean_ctx, max_row, 0.0),
+        cm.max_concurrent_lanes(budget, mean_ctx, max_row, block_tokens),
+    )
 }
 
 #[cfg(test)]
@@ -1084,16 +1177,27 @@ mod tests {
         assert!(slo.queue_wait_p99 >= slo.queue_wait_p50);
         assert!(slo.e2e_p99 >= slo.e2e_p50);
         assert!(slo.e2e_p50 > 0.0, "end-to-end latency must be positive");
-        // queueing delay is real under calibrated traffic
+        // queueing delay is real under calibrated traffic — but only at the
+        // tail: arrivals queue during score/train dead time, while the
+        // median prompt lands in a free lane the instant it arrives
         assert!(slo.queue_wait_p99 > 0.0, "p99 queue wait {}", slo.queue_wait_p99);
-        // and the loaded system keeps lanes busier than the step-sync loop
-        let sync = simulate(Pipeline::oppo(), &SimConfig::new(presets::traffic_7b_h200(), 40, 31));
-        let idle_sync = tail_mean(&sync, |r| r.lane_idle_frac);
-        let idle_roll = tail_mean(&log, |r| r.lane_idle_frac);
+        assert!(slo.queue_wait_p99 > slo.queue_wait_p50);
+        // the traffic preset offers 1.5 prompts/s against ~2.6/s of decode
+        // capacity, so the run is arrival-bound: completions track the
+        // Poisson rate and the depth-256 queue never sheds.  Lane idle here
+        // is arrival starvation, not scheduler inefficiency, so no idle
+        // ordering vs the step-sync loop is asserted — that property only
+        // holds when arrivals saturate, and
+        // `rolling_saturated_eliminates_lane_idle_and_decodes_more` pins it
+        // in that regime.
+        let elapsed: f64 = log.records.iter().map(|r| r.wall_s).sum();
+        let thr = slo.prompts as f64 / elapsed.max(1e-12);
         assert!(
-            idle_roll < idle_sync,
-            "poisson rolling lane idle {idle_roll} !< step-sync {idle_sync}"
+            thr > 0.9 * rate && thr <= 1.05 * rate,
+            "undersaturated run must complete at the offered rate: {thr} vs {rate}"
         );
+        let dropped: usize = log.records.iter().map(|r| r.queue_dropped).sum();
+        assert_eq!(dropped, 0, "depth-256 queue must not shed at 1.5 prompts/s");
     }
 
     #[test]
@@ -1130,5 +1234,48 @@ mod tests {
         for (x, y) in a.records.iter().zip(&b.records) {
             assert_eq!(x.wall_s, y.wall_s, "VeRL arms model fixed dispatch");
         }
+    }
+
+    #[test]
+    fn paged_arm_same_schedule_less_kv() {
+        // paging is a memory discipline, not a scheduling one: the paged
+        // arm must reproduce the dense arm's timing and token counts
+        // exactly while committing far less peak KV (the ISSUE's >= 40%
+        // reduction at equal streamed-chunk throughput, on the traffic
+        // preset under rolling Poisson admission)
+        let su = presets::traffic_7b_h200();
+        let rate = su.arrival_rate;
+        let dense_cfg = SimConfig::new(su, 30, 47).rolling_poisson(rate);
+        let paged_cfg = dense_cfg.clone().paged(64.0);
+        let dense = simulate(Pipeline::oppo(), &dense_cfg);
+        let paged = simulate(Pipeline::oppo(), &paged_cfg);
+        assert_eq!(dense.records.len(), paged.records.len());
+        let mut dense_peak = 0u64;
+        let mut paged_peak = 0u64;
+        for (d, p) in dense.records.iter().zip(&paged.records) {
+            assert_eq!(d.wall_s, p.wall_s, "paging must not change the schedule");
+            assert_eq!(d.gen_tokens, p.gen_tokens, "paging must not change throughput");
+            dense_peak = dense_peak.max(d.peak_kv_bytes);
+            paged_peak = paged_peak.max(p.peak_kv_bytes);
+        }
+        assert!(dense_peak > 0 && paged_peak > 0, "both arms must report peak KV");
+        assert!(
+            (paged_peak as f64) <= 0.6 * dense_peak as f64,
+            "paged peak {paged_peak} not <= 60% of dense {dense_peak}"
+        );
+    }
+
+    #[test]
+    fn paged_lane_bound_exceeds_dense() {
+        // the headline of the PR: with block-rounded commitment the same
+        // HBM budget holds strictly more concurrent lanes than the dense
+        // one-full-row-per-lane bound
+        let cfg = SimConfig::new(presets::traffic_7b_h200(), 10, 7);
+        let (dense, paged) = kv_lane_bounds(&cfg, 64.0);
+        assert!(dense >= 1.0, "H200 must hold at least one dense lane");
+        assert!(
+            paged > dense,
+            "paged lane bound {paged} must exceed dense {dense}"
+        );
     }
 }

@@ -602,6 +602,174 @@ fn delta_controller_converges_under_synthetic_reward_phases() {
     );
 }
 
+/// Paged-KV allocator properties (DESIGN: paged KV): across arbitrary
+/// admit / grow / release schedules the pool conserves blocks (free +
+/// owned == capacity, enforced by `check_invariants`), never hands one
+/// physical block to two live lanes, gates admission exactly on the
+/// whole-sequence reservation, and — the device-facing contract — a
+/// scatter/gather of every live token through the block table round-trips
+/// against a dense per-lane KV mirror, with unreached table slots left
+/// pointing at scratch block 0.
+#[test]
+fn block_pool_invariants_and_table_roundtrip() {
+    use oppo::coordinator::BlockPool;
+
+    #[derive(Clone, Debug)]
+    enum PoolOp {
+        /// (lane-pick, prompt_len, max_new)
+        Admit(usize, usize, usize),
+        /// (lane-pick, tokens to grow by)
+        Grow(usize, usize),
+        /// lane-pick
+        Release(usize),
+    }
+
+    forall(
+        Config { cases: 150, seed: 0xB10C, shrink_iters: 300 },
+        "block-pool-invariants",
+        |rng| {
+            let lanes = rng.range_usize(1, 9);
+            let block = 1 << rng.range_usize(1, 5); // 2..16 tokens
+            let bpl = rng.range_usize(1, 9); // s_max = bpl * block
+            // sometimes auto-sized (never defers), sometimes trimmed (defers)
+            let pool = match rng.range(0, 2) {
+                0 => lanes * bpl + 1,
+                _ => rng.range_usize(2, lanes * bpl + 2),
+            };
+            let s_max = block * bpl;
+            let ops: Vec<PoolOp> = (0..rng.range_usize(5, 60))
+                .map(|_| match rng.range(0, 5) {
+                    0 | 1 => PoolOp::Admit(
+                        rng.range_usize(0, lanes),
+                        rng.range_usize(1, s_max + 1),
+                        rng.range_usize(0, s_max),
+                    ),
+                    2 | 3 => PoolOp::Grow(rng.range_usize(0, lanes), rng.range_usize(1, block * 3)),
+                    _ => PoolOp::Release(rng.range_usize(0, lanes)),
+                })
+                .collect();
+            (lanes, block, bpl, pool, ops)
+        },
+        |(lanes, block, bpl, pool_blocks, ops)| {
+            let (lanes, block, bpl, pool_blocks) = (*lanes, *block, *bpl, *pool_blocks);
+            let s_max = block * bpl;
+            let mut pool = BlockPool::new(lanes, block, bpl, pool_blocks);
+            // host mirror of each lane's live sequence: (covered_tokens, cap)
+            let mut live: Vec<Option<(usize, usize)>> = vec![None; lanes];
+            for op in ops {
+                match *op {
+                    PoolOp::Admit(lane, prompt_len, max_new) => {
+                        if live[lane].is_some() {
+                            continue; // occupied — the scheduler never re-admits
+                        }
+                        let max_total = (prompt_len + max_new).min(s_max);
+                        let fits = pool.can_admit(max_total);
+                        let got = pool.admit(lane, prompt_len, max_total);
+                        if fits != got.is_ok() {
+                            return Err(format!(
+                                "can_admit({max_total}) said {fits} but admit {:?}",
+                                got.err()
+                            ));
+                        }
+                        if got.is_ok() {
+                            live[lane] = Some((prompt_len.max(1), max_total));
+                        }
+                    }
+                    PoolOp::Grow(lane, by) => {
+                        if let Some((cur, cap)) = live[lane] {
+                            // the scheduler caps growth at the admission
+                            // budget, so grow_to must always succeed
+                            let to = (cur + by).min(cap);
+                            pool.grow_to(lane, to);
+                            live[lane] = Some((to.max(cur), cap));
+                        }
+                    }
+                    PoolOp::Release(lane) => {
+                        if live[lane].take().is_some() {
+                            pool.release(lane);
+                            if !pool.table_row(lane).iter().all(|&b| b == 0) {
+                                return Err(format!("lane {lane} table not scratch after release"));
+                            }
+                        }
+                    }
+                }
+                pool.check_invariants();
+                // committed accounting: every live lane holds exactly its
+                // whole-sequence reservation until release
+                let expect: usize = live
+                    .iter()
+                    .flatten()
+                    .map(|&(_, cap)| pool.blocks_needed(cap) * block)
+                    .sum();
+                if pool.allocated_tokens() != expect {
+                    return Err(format!(
+                        "allocated {} tokens, reservations say {expect}",
+                        pool.allocated_tokens()
+                    ));
+                }
+            }
+            // scatter/gather round-trip: write f(lane, pos) for every live
+            // token through the table into pooled storage, then gather it
+            // back and compare against the dense mirror.  Aliased blocks
+            // would make some lane read another's values.
+            let table = pool.flat_table(lanes);
+            if table.len() != lanes * bpl {
+                return Err(format!("flat table len {} != {}", table.len(), lanes * bpl));
+            }
+            let f = |lane: usize, pos: usize| (lane * s_max + pos + 1) as i64;
+            let mut storage = vec![0i64; pool_blocks * block];
+            for lane in 0..lanes {
+                if let Some((cur, _)) = live[lane] {
+                    for pos in 0..cur {
+                        let phys = table[lane * bpl + pos / block];
+                        if phys == 0 {
+                            return Err(format!("live token {pos} of lane {lane} maps to scratch"));
+                        }
+                        storage[phys as usize * block + pos % block] = f(lane, pos);
+                    }
+                }
+            }
+            for lane in 0..lanes {
+                if let Some((cur, _)) = live[lane] {
+                    for pos in 0..cur {
+                        let phys = table[lane * bpl + pos / block] as usize;
+                        let got = storage[phys * block + pos % block];
+                        if got != f(lane, pos) {
+                            return Err(format!(
+                                "lane {lane} pos {pos}: gathered {got}, wrote {} — blocks aliased",
+                                f(lane, pos)
+                            ));
+                        }
+                    }
+                    // slots past the covered prefix stay scratch-0
+                    for slot in cur.div_ceil(block)..bpl {
+                        if table[lane * bpl + slot] != 0 {
+                            return Err(format!("lane {lane} slot {slot} mapped past coverage"));
+                        }
+                    }
+                } else if table[lane * bpl..(lane + 1) * bpl].iter().any(|&b| b != 0) {
+                    return Err(format!("vacant lane {lane} still mapped"));
+                }
+            }
+            // drain everything: the pool must return to full capacity
+            for lane in 0..lanes {
+                if live[lane].take().is_some() {
+                    pool.release(lane);
+                }
+            }
+            pool.check_invariants();
+            if pool.free_blocks() != pool_blocks - 1 {
+                return Err(format!(
+                    "{} of {} blocks free after full drain",
+                    pool.free_blocks(),
+                    pool_blocks - 1
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn sim_deferral_never_exceeds_buffer_depth() {
     forall(

@@ -30,6 +30,7 @@ METRICS = [
     ("util_mean", "utilization", False),
     ("gen_tokens_per_s", "gen tok/s", False),
     ("lane_idle_frac_mean", "lane idle frac", True),
+    ("peak_kv_bytes", "peak KV (bytes)", True),
 ]
 SLO_KEYS = ["queue_wait_p50", "queue_wait_p99", "e2e_p50", "e2e_p99"]
 BAR_WIDTH = 40
@@ -115,6 +116,24 @@ def chart_all(snaps):
         bar_chart("sliced knee (reward replicas)", pts, True)
 
 
+def check_sequence(snaps):
+    """Gaps in the committed BENCH_* index sequence, as error strings.
+
+    The trajectory is only meaningful if every PR since the first snapshot
+    landed one — a missing index means a PR shipped without refreshing the
+    pinned-seed runner, which is exactly the drift --check exists to catch.
+    """
+    prs = [pr for pr, _path, _doc in snaps]
+    missing = [i for i in range(prs[0], prs[-1] + 1) if i not in prs]
+    if missing:
+        gaps = ", ".join(f"BENCH_{i}.json" for i in missing)
+        return [
+            f"snapshot sequence has gaps: {gaps} missing between "
+            f"BENCH_{prs[0]}.json and BENCH_{prs[-1]}.json"
+        ]
+    return []
+
+
 def check_latest(snaps):
     """Structural sanity of the newest snapshot; returns error strings."""
     errors = []
@@ -128,13 +147,21 @@ def check_latest(snaps):
                 errors.append(f"{path}: scenarios.{name}.{key} missing/non-numeric")
     if pr >= 7:
         # rolling-admission era: the continuous-batching arms must report
-        # lane idle, the Poisson arm must report SLO percentiles, and
-        # rolling must beat its step-synchronous baseline on lane idle
+        # lane idle and the Poisson arm SLO percentiles.  The strict idle
+        # ordering (rolling below its step-sync baseline) is only asserted
+        # for the *saturated* pair — saturated arrivals refill every freed
+        # lane, so residual idle is pure scheduler inefficiency.  The
+        # Poisson arm is calibrated *under* decode capacity (1.5 prompts/s
+        # offered vs ~2.6/s served), so its lane idle is dominated by
+        # arrival starvation and legitimately exceeds the step-sync
+        # baseline (which synthesizes a full batch at every boundary
+        # regardless of traffic); for that arm --check instead requires
+        # idle to be reported and the bounded queue to shed nothing.
         pairs = [
-            ("oppo_x1", "oppo_rolling_saturated"),
-            ("traffic_stepsync", "traffic_rolling_poisson"),
+            ("oppo_x1", "oppo_rolling_saturated", True),
+            ("traffic_stepsync", "traffic_rolling_poisson", False),
         ]
-        for base_name, roll_name in pairs:
+        for base_name, roll_name, ordered in pairs:
             base, roll = scen.get(base_name), scen.get(roll_name)
             if base is None or roll is None:
                 errors.append(f"{path}: missing scenario pair {base_name}/{roll_name}")
@@ -144,12 +171,17 @@ def check_latest(snaps):
                 errors.append(
                     f"{path}: lane_idle_frac_mean missing on {base_name}/{roll_name}"
                 )
-            elif not ri < bi:
+            elif ordered and not ri < bi:
                 errors.append(
                     f"{path}: rolling lane idle {ri:.4g} not below "
                     f"step-sync baseline {bi:.4g} ({roll_name} vs {base_name})"
                 )
         poisson = scen.get("traffic_rolling_poisson", {})
+        if isinstance(poisson.get("queue_dropped"), (int, float)) and poisson["queue_dropped"] > 0:
+            errors.append(
+                f"{path}: undersaturated Poisson arm shed "
+                f"{poisson['queue_dropped']} prompts (queue misconfigured?)"
+            )
         slo = poisson.get("slo")
         if not isinstance(slo, dict):
             errors.append(f"{path}: traffic_rolling_poisson.slo missing")
@@ -157,6 +189,49 @@ def check_latest(snaps):
             for k in ("queue_wait_p50", "queue_wait_p99", "e2e_p50", "e2e_p99"):
                 if not isinstance(slo.get(k), (int, float)):
                     errors.append(f"{path}: traffic_rolling_poisson.slo.{k} missing")
+    if pr >= 8:
+        # paged-KV era: the paged arm must exist, throughput must match the
+        # dense arm exactly (paging is memory accounting, not scheduling),
+        # peak KV must drop by the ISSUE's >= 40%, and the freed memory must
+        # buy strictly more concurrent lanes than the dense bound
+        paged_kv = doc.get("paged_kv")
+        if not isinstance(paged_kv, dict):
+            errors.append(f"{path}: paged_kv block missing")
+        else:
+            for k in (
+                "dense_peak_kv_bytes",
+                "paged_peak_kv_bytes",
+                "peak_kv_reduction",
+                "dense_max_lanes",
+                "paged_max_lanes",
+            ):
+                if not isinstance(paged_kv.get(k), (int, float)):
+                    errors.append(f"{path}: paged_kv.{k} missing/non-numeric")
+            red = paged_kv.get("peak_kv_reduction")
+            if isinstance(red, (int, float)) and red < 0.4:
+                errors.append(
+                    f"{path}: paged peak-KV reduction {red:.4g} below the 40% floor"
+                )
+            dl, pl = paged_kv.get("dense_max_lanes"), paged_kv.get("paged_max_lanes")
+            if isinstance(dl, (int, float)) and isinstance(pl, (int, float)) and not pl > dl:
+                errors.append(
+                    f"{path}: paged lane bound {pl:.4g} not above dense {dl:.4g}"
+                )
+            if paged_kv.get("equal_throughput") is not True:
+                errors.append(f"{path}: paged arm did not match dense throughput")
+        dense_sc = scen.get("traffic_rolling_poisson")
+        paged_sc = scen.get("traffic_rolling_paged")
+        if paged_sc is None:
+            errors.append(f"{path}: traffic_rolling_paged scenario missing")
+        elif isinstance(dense_sc, dict):
+            dp = dense_sc.get("peak_kv_bytes")
+            pp = paged_sc.get("peak_kv_bytes")
+            if not isinstance(dp, (int, float)) or not isinstance(pp, (int, float)):
+                errors.append(f"{path}: peak_kv_bytes missing on the traffic arms")
+            elif not pp < dp:
+                errors.append(
+                    f"{path}: paged scenario peak {pp:.4g} not below dense {dp:.4g}"
+                )
     return errors
 
 
@@ -177,7 +252,7 @@ def main():
     print(f"found {len(snaps)} snapshot(s): " + ", ".join(p for _, p, _ in [(n, os.path.basename(p), d) for n, p, d in snaps]))
     chart_all(snaps)
     if args.check:
-        errors = check_latest(snaps)
+        errors = check_sequence(snaps) + check_latest(snaps)
         if errors:
             print("\ncheck FAILED:", file=sys.stderr)
             for e in errors:
