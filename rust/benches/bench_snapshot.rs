@@ -1,23 +1,28 @@
-//! Pinned-seed performance snapshot → `BENCH_8.json`.
+//! Pinned-seed performance snapshot → `BENCH_9.json`.
 //!
 //! Runs the deterministic simulator on the paper's main preset at a fixed
 //! seed and emits a machine-readable snapshot of the metrics this repo's
 //! perf work is judged by: per-stage busy/idle attribution, steady-state
 //! step wall time, streamed-chunk throughput, the lane-slicing knee
 //! (`min_replicas_actor_bound`), lane idle fractions and per-prompt
-//! latency percentiles for the continuous-batching arms — and, new with
-//! paged KV, a `paged_kv` section comparing peak KV commitment and the
-//! max-concurrent-lanes bound between the dense (one worst-case row per
-//! lane) and block-granular arms at *identical* decode schedules.  The sim
-//! sections are bit-reproducible on any machine — same seed, same numbers
-//! — so the committed snapshot diffs cleanly against a re-run; the `host`
-//! section (peak RSS, hot-path timings, runner wall time) is
-//! machine-dependent and refreshed by each local run.
+//! latency percentiles for the continuous-batching arms, the `paged_kv`
+//! section comparing peak KV commitment and the max-concurrent-lanes
+//! bound between the dense (one worst-case row per lane) and
+//! block-granular arms at *identical* decode schedules — and, new with
+//! multi-node transport, a `transport` section pricing the remote-replica
+//! arm against its local sliced twin from the cost model's closed-form
+//! link terms (per-chunk wire cost, masked-grid penalty, chunk-replay
+//! failover overhead) alongside host-measured frame codec throughput.
+//! The sim and cost-model sections are bit-reproducible on any machine —
+//! same seed, same numbers — so the committed snapshot diffs cleanly
+//! against a re-run; the `host` section (peak RSS, hot-path timings,
+//! frame MB/s, runner wall time) is machine-dependent and refreshed by
+//! each local run (committed as null when the runner lacks a toolchain).
 //! `scripts/plot_bench.py` charts the committed `BENCH_*.json` sequence
 //! across PRs.
 //!
 //! Usage:
-//!   cargo bench --bench bench_snapshot              # writes ../BENCH_8.json
+//!   cargo bench --bench bench_snapshot              # writes ../BENCH_9.json
 //!   cargo bench --bench bench_snapshot -- --out /tmp/snap.json
 
 use std::time::Instant;
@@ -35,6 +40,12 @@ const KNEE_MAX: usize = 8;
 const KNEE_TOL: f64 = 0.02;
 /// Paged-KV block size for the paged arms (tokens per physical block).
 const KV_BLOCK_TOKENS: f64 = 64.0;
+/// Link the remote transport arm is priced at (the `SimConfig` defaults:
+/// 100 Gb/s fabric, 50 µs one-way framed-message latency).
+const LINK_GBPS: f64 = 100.0;
+const LINK_LATENCY_S: f64 = 5e-5;
+/// Remote reward pool size for the transport comparison.
+const REMOTE_POOL: f64 = 2.0;
 
 fn cfg(reward_replicas: usize, ref_replicas: usize) -> SimConfig {
     let mut c = SimConfig::new(presets::stackex_7b_h200(), STEPS, SEED);
@@ -183,6 +194,78 @@ fn host_timings() -> Value {
     ])
 }
 
+/// The `transport` section: the remote-replica arm priced against its
+/// local sliced twin at the preset's steady shapes, straight from the
+/// cost model's closed-form link terms (pure f64 arithmetic, so the
+/// modelled fields are bit-reproducible anywhere) — plus frame codec
+/// throughput measured on this runner over an in-memory pipe
+/// (machine-dependent, refreshed by each local run).
+fn transport_block() -> Value {
+    use oppo::sim::costmodel::CostModel;
+    use oppo::transport::frame::{read_frame, write_frame};
+    use oppo::transport::wire::kind;
+
+    let su = presets::stackex_7b_h200();
+    // the same score-stage cost model `simulate` builds, on the default link
+    let cm = CostModel {
+        model: su.model,
+        gpu: su.cluster.gpu,
+        tp: su.cluster.n_score.max(1) as f64,
+        software_efficiency: su.score_eff,
+        iter_overhead_s: 0.0,
+        link_gbps: LINK_GBPS,
+        link_latency_s: LINK_LATENCY_S,
+    };
+    // steady shapes: every lane near the converged median response
+    // (~314 tokens) plus the 220-token prompt, full batch
+    let mean_seq = 534.0;
+    let total_tokens = su.batch as f64 * mean_seq;
+    let chunk = cfg(1, 1).chunk_tokens;
+    let local = cm.sliced_prefill(total_tokens, mean_seq, REMOTE_POOL);
+    let remote = cm.remote_masked_prefill(total_tokens, mean_seq, chunk);
+    // failover replay: one pool member dies half-streamed and the survivor
+    // re-executes its retained share through the same remote path
+    let replay_tokens = total_tokens / REMOTE_POOL / 2.0;
+    let replay = cm.replay_overhead(replay_tokens, mean_seq, chunk);
+
+    // frame codec throughput: one chunk-sized payload (i32 tokens for a
+    // full [G, C] grid) per frame, encoded to / decoded from memory
+    let payload = vec![0x5Au8; su.batch * chunk as usize * 4];
+    let iters = 200usize;
+    let mut buf: Vec<u8> = Vec::with_capacity((payload.len() + 64) * iters);
+    let enc_secs = time_it(|| {
+        buf.clear();
+        for _ in 0..iters {
+            write_frame(&mut buf, kind::REWARD_REQ, &payload).expect("encode");
+        }
+    });
+    let mut r = &buf[..];
+    let dec_secs = time_it(|| {
+        for _ in 0..iters {
+            let (_, p) = read_frame(&mut r).expect("decode");
+            assert_eq!(p.len(), payload.len());
+        }
+    });
+    let mb = (payload.len() * iters) as f64 / 1e6;
+
+    json::obj(vec![
+        ("link_gbps", json::num(LINK_GBPS)),
+        ("link_latency_s", json::num(LINK_LATENCY_S)),
+        ("remote_replicas", json::num(REMOTE_POOL)),
+        ("mean_seq_tokens", json::num(mean_seq)),
+        ("step_score_tokens", json::num(total_tokens)),
+        ("chunk_transfer_s", json::num(cm.chunk_transfer(chunk))),
+        ("local_sliced_prefill_s", json::num(local)),
+        ("remote_masked_prefill_s", json::num(remote)),
+        ("remote_over_local", json::num(remote / local)),
+        ("replay_tokens", json::num(replay_tokens)),
+        ("replay_overhead_s", json::num(replay)),
+        ("replay_overhead_frac", json::num(replay / remote)),
+        ("frame_encode_mb_s", json::num(mb / enc_secs.max(1e-12))),
+        ("frame_decode_mb_s", json::num(mb / dec_secs.max(1e-12))),
+    ])
+}
+
 fn main() {
     let mut out_path: Option<String> = None;
     let mut args = std::env::args().skip(1);
@@ -193,7 +276,7 @@ fn main() {
         // anything else (--bench, harness flags) is cargo's — ignore
     }
     let out_path = out_path
-        .unwrap_or_else(|| format!("{}/../BENCH_8.json", env!("CARGO_MANIFEST_DIR")));
+        .unwrap_or_else(|| format!("{}/../BENCH_9.json", env!("CARGO_MANIFEST_DIR")));
 
     let t0 = Instant::now();
     let mut rows = Vec::new();
@@ -255,6 +338,7 @@ fn main() {
         ),
     ]);
     let knee = min_replicas_actor_bound(&cfg(1, 1), KNEE_MAX, KNEE_TOL);
+    let transport = transport_block();
 
     let host = json::obj(vec![
         ("note", json::s("machine-dependent; refreshed by each local run")),
@@ -275,17 +359,30 @@ fn main() {
         ("scenarios", json::obj(svals)),
         ("sliced_knee_reward_replicas", json::num(knee as f64)),
         ("paged_kv", paged_kv),
+        ("transport", transport),
         ("host", host),
     ]);
     let text = json::to_string(&doc) + "\n";
     std::fs::write(&out_path, &text).expect("write snapshot");
 
-    print_table("BENCH_8 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
+    print_table("BENCH_9 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
     println!("sliced knee: {knee} reward replicas (tol {KNEE_TOL})");
     println!(
         "paged kv: peak {paged_peak} vs dense {dense_peak} ({:.0}% reduction), \
          lane bound {paged_lanes:.0} vs {dense_lanes:.0}",
         100.0 * (1.0 - paged_peak as f64 / (dense_peak as f64).max(1.0))
     );
+    if let Value::Obj(m) = &transport {
+        let get = |k: &str| match m.get(k) {
+            Some(Value::Num(x)) => *x,
+            _ => f64::NAN,
+        };
+        println!(
+            "transport: remote/local {:.3}, replay frac {:.3}, frame enc {:.0} MB/s",
+            get("remote_over_local"),
+            get("replay_overhead_frac"),
+            get("frame_encode_mb_s"),
+        );
+    }
     println!("wrote {out_path}");
 }

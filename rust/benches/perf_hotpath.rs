@@ -398,9 +398,11 @@ fn main() {
         }
 
         // dispatch overhead: the gae entry is tiny, so its latency ≈ overhead
-        let rb = engine.upload_f32(&vec![0.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();
-        let vb = engine.upload_f32(&vec![0.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();
-        let mb = engine.upload_f32(&vec![1.0; shape.ppo_batch * smax], &[shape.ppo_batch, smax]).unwrap();
+        let grid = vec![0.0; shape.ppo_batch * smax];
+        let ones = vec![1.0; shape.ppo_batch * smax];
+        let rb = engine.upload_f32(&grid, &[shape.ppo_batch, smax]).unwrap();
+        let vb = engine.upload_f32(&grid, &[shape.ppo_batch, smax]).unwrap();
+        let mb = engine.upload_f32(&ones, &[shape.ppo_batch, smax]).unwrap();
         let _ = engine.execute("gae", &[&rb, &vb, &mb]).unwrap();
         let reps = 100;
         let secs = time_it(|| {

@@ -79,6 +79,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "figures" => cmd_figures(&args),
         "info" => cmd_info(&args),
+        "remote-stage" => cmd_remote_stage(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -98,6 +99,14 @@ USAGE:
                 [--steps N] [--seed K]
   oppo figures  [--only fig2a|fig2b|fig2c|fig3|fig4|fig5|fig6|fig7a|fig7b|table1|table2|table3|table4]
   oppo info     [--artifacts DIR]
+  oppo remote-stage --stage reward|ref --listen HOST:PORT
+                [--backend engine|toy] [--artifacts DIR] [--max-conns N]
+
+remote-stage hosts one stage replica behind a framed-TCP listener; point a
+training run at it via run.connect_addrs = \"reward@HOST:PORT,...\" (with
+run.remote_replicas matching the endpoint count).  --backend toy serves the
+deterministic engine-free scorer used by transport tests and the CI
+loopback smoke; --max-conns 0 serves forever.
 ";
 
 fn load_cfg(args: &Args) -> Result<TrainConfig> {
@@ -227,6 +236,53 @@ fn cmd_figures(args: &Args) -> Result<()> {
         emit("table4", "Table 4 — framework comparison", tables::table4())?;
     }
     Ok(())
+}
+
+/// `remote-stage`: host one stage replica behind a TCP listener.  Prints
+/// `listening on ADDR` (flushed) once bound, so a parent process — the CI
+/// loopback smoke — can wait for readiness and recover the ephemeral port.
+fn cmd_remote_stage(args: &Args) -> Result<()> {
+    use crate::transport::{serve, Backend};
+
+    let stage = args.flag("stage").context("--stage reward|ref is required")?.to_string();
+    anyhow::ensure!(stage == "reward" || stage == "ref", "--stage must be reward or ref");
+    let listen = args.flag("listen").context("--listen HOST:PORT is required")?;
+    let backend_kind = args.flag("backend").unwrap_or("engine");
+    let max_conns = match args.flag_usize("max-conns", 1)? {
+        0 => None,
+        n => Some(n),
+    };
+
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding {listen}"))?;
+    println!("listening on {}", listener.local_addr()?);
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+
+    // params sink default: remotes without an engine have nothing to load
+    // weights into — accept and drop the blob (the ack CRC still proves
+    // what arrived), which is exactly right for the toy backend
+    let mut drop_params = |_which: &str, _data: &[u8]| Ok(());
+    match backend_kind {
+        "toy" => {
+            let mut backend = if stage == "reward" {
+                let mut b = crate::transport::ToyRewardBackend::new();
+                Backend::Reward(Box::new(move |req| b.handle(req)))
+            } else {
+                let mut b = crate::transport::ToyRefBackend::new();
+                Backend::Ref(Box::new(move |req| b.handle(req)))
+            };
+            serve(&listener, &mut backend, &mut drop_params, max_conns)
+        }
+        "engine" => {
+            let dir = args.flag("artifacts").unwrap_or("artifacts");
+            let engine = std::sync::Arc::new(crate::runtime::Engine::load(dir)?);
+            let (mut backend, mut on_params) =
+                crate::coordinator::worker::engine_serve_backend(engine, &stage)?;
+            serve(&listener, &mut backend, &mut *on_params, max_conns)
+        }
+        other => bail!("unknown backend {other:?} (want engine|toy)"),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -171,6 +171,21 @@ pub struct TrainConfig {
     /// no longer keep pace with actor decoding.
     pub reward_replicas: usize,
     pub ref_replicas: usize,
+    /// How many stage replicas live on *remote* nodes, reached over the
+    /// framed-TCP transport instead of an in-process worker thread.  Must
+    /// equal the number of entries in `connect_addrs`; remotes take the
+    /// highest replica indices of their stage's pool.  0 = all in-process.
+    pub remote_replicas: usize,
+    /// `remote-stage` serve mode: address to listen on (e.g.
+    /// "127.0.0.1:7701").  Ignored by the training loop itself.
+    pub listen_addr: String,
+    /// Comma-separated `stage@host:port` endpoints hosting remote replicas,
+    /// e.g. "reward@10.0.0.2:7701,ref@10.0.0.3:7702".  Empty = no remotes.
+    pub connect_addrs: String,
+    /// Remote liveness probe period in milliseconds (>= 1).  A replica that
+    /// misses a ping/pong round trip within the per-send deadline is
+    /// retired and its lanes replayed onto a survivor.
+    pub heartbeat_ms: u64,
     /// Prompt admission: `step` (legacy step-synchronous refill),
     /// `saturated` (rolling admission, prompt always available), or
     /// `poisson` (rolling admission under simulated traffic).
@@ -213,6 +228,10 @@ impl Default for TrainConfig {
             stage_queue_depth: 2,
             reward_replicas: 1,
             ref_replicas: 1,
+            remote_replicas: 0,
+            listen_addr: String::new(),
+            connect_addrs: String::new(),
+            heartbeat_ms: 500,
             admission_mode: AdmissionMode::Step,
             admission_queue_depth: 64,
             admission_rate: 1.0,
@@ -263,6 +282,14 @@ impl TrainConfig {
         set!(stage_queue_depth, as_usize);
         set!(reward_replicas, as_usize);
         set!(ref_replicas, as_usize);
+        set!(remote_replicas, as_usize);
+        set!(heartbeat_ms, as_u64);
+        if let Some(v) = get("listen_addr") {
+            cfg.listen_addr = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("connect_addrs") {
+            cfg.connect_addrs = v.as_str()?.to_string();
+        }
         if let Some(v) = get("admission_mode") {
             cfg.admission_mode = AdmissionMode::parse(v.as_str()?)?;
         }
@@ -327,6 +354,48 @@ impl TrainConfig {
             bail!(
                 "stage replica counts must be >= 1 (reward_replicas {}, ref_replicas {})",
                 self.reward_replicas, self.ref_replicas
+            );
+        }
+        if self.heartbeat_ms == 0 {
+            bail!("heartbeat_ms must be >= 1");
+        }
+        // remote placement: connect_addrs is the source of truth for where
+        // remote replicas live; remote_replicas is the declared head-count.
+        // They must agree, and each stage's remote share must fit its pool.
+        let (reward_addrs, ref_addrs) =
+            crate::transport::split_connect_addrs(&self.connect_addrs)?;
+        let n_remote = reward_addrs.len() + ref_addrs.len();
+        if n_remote != self.remote_replicas {
+            bail!(
+                "connect_addrs lists {n_remote} endpoint(s) but remote_replicas = {} \
+                 (they must agree)",
+                self.remote_replicas
+            );
+        }
+        if reward_addrs.len() > self.reward_replicas {
+            bail!(
+                "{} remote reward endpoints > reward_replicas {}",
+                reward_addrs.len(), self.reward_replicas
+            );
+        }
+        if ref_addrs.len() > self.ref_replicas {
+            bail!(
+                "{} remote ref endpoints > ref_replicas {}",
+                ref_addrs.len(), self.ref_replicas
+            );
+        }
+        if !reward_addrs.is_empty() && !(self.mode.intra_enabled() && self.stream_reward) {
+            bail!(
+                "remote reward replicas need a streaming reward stage \
+                 (mode {:?} / stream_reward {})",
+                self.mode.name(), self.stream_reward
+            );
+        }
+        if !ref_addrs.is_empty() && !(self.mode.ref_stream_enabled() && self.stream_ref) {
+            bail!(
+                "remote ref replicas need a streaming ref stage \
+                 (mode {:?} / stream_ref {})",
+                self.mode.name(), self.stream_ref
             );
         }
         if self.admission_queue_depth == 0 {
@@ -519,6 +588,63 @@ mod tests {
         let cfg = TrainConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.reward_replicas, 2);
         assert_eq!(cfg.ref_replicas, 3);
+    }
+
+    #[test]
+    fn remote_knobs_parse_and_validate() {
+        let doc = parse::parse(
+            "[run]\nremote_replicas = 2\nreward_replicas = 2\nref_replicas = 2\n\
+             connect_addrs = \"reward@10.0.0.2:7701,ref@10.0.0.3:7702\"\n\
+             heartbeat_ms = 250",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.remote_replicas, 2);
+        assert_eq!(cfg.heartbeat_ms, 250);
+        assert_eq!(cfg.connect_addrs, "reward@10.0.0.2:7701,ref@10.0.0.3:7702");
+
+        // head-count disagreement
+        let cfg = TrainConfig {
+            connect_addrs: "reward@h:1".into(),
+            remote_replicas: 2,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        // per-stage share exceeds the pool
+        let cfg = TrainConfig {
+            connect_addrs: "reward@h:1,reward@h:2".into(),
+            remote_replicas: 2,
+            reward_replicas: 1,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        // remote reward replicas need a streaming reward stage
+        let cfg = TrainConfig {
+            connect_addrs: "reward@h:1".into(),
+            remote_replicas: 1,
+            stream_reward: false,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        // remote ref replicas need a ref-streaming mode
+        let cfg = TrainConfig {
+            connect_addrs: "ref@h:1".into(),
+            remote_replicas: 1,
+            mode: Mode::OppoNoRef,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = TrainConfig { heartbeat_ms: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        // a well-formed remote split validates
+        let cfg = TrainConfig {
+            connect_addrs: "reward@h:1,ref@h:2".into(),
+            remote_replicas: 2,
+            reward_replicas: 2,
+            ref_replicas: 2,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

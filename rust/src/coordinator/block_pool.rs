@@ -36,7 +36,12 @@ pub struct BlockPool {
 
 impl BlockPool {
     /// `pool_blocks` counts the scratch block; usable capacity is one less.
-    pub fn new(lanes: usize, block_size: usize, blocks_per_lane: usize, pool_blocks: usize) -> Self {
+    pub fn new(
+        lanes: usize,
+        block_size: usize,
+        blocks_per_lane: usize,
+        pool_blocks: usize,
+    ) -> Self {
         assert!(block_size > 0 && blocks_per_lane > 0);
         assert!(pool_blocks >= 2, "pool needs scratch block 0 plus at least one real block");
         BlockPool {

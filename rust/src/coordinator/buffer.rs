@@ -25,6 +25,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::worker::{Pick, StreamChunk};
 use crate::data::tasks::Prompt;
 use crate::model::sequence::{SeqPhase, Sequence};
 
@@ -269,6 +270,100 @@ impl SeqBuffer {
         }
         out.sort_by_key(|(stamp, _)| *stamp);
         out.into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// Build the next streamed `[G, C]` chunk: up to `chunk` unstreamed
+    /// tokens per resident lane, PAD-filled where idle, with a pick at
+    /// every sequence whose *final* token lands in this chunk.  Advances
+    /// the shared stream cursor, so call exactly once per fan-out round.
+    /// `None` when no lane has anything left to stream.
+    pub fn build_stream_chunk(&mut self, chunk: usize) -> Option<StreamChunk> {
+        let lanes = self.lanes;
+        let mut tokens = vec![0i32; lanes * chunk];
+        let mut start = vec![0i32; lanes];
+        let mut n_valid = vec![0i32; lanes];
+        let mut picks = Vec::new();
+        let mut any = false;
+        for seq in self.seqs.iter_mut() {
+            if seq.phase == SeqPhase::Queued {
+                continue;
+            }
+            let lane = seq.lane;
+            let total = seq.total_len();
+            let streamed = seq.streamed;
+            start[lane] = streamed as i32;
+            let nv = total.saturating_sub(streamed).min(chunk);
+            if nv == 0 {
+                continue;
+            }
+            let full = seq.full_tokens();
+            tokens[lane * chunk..lane * chunk + nv].copy_from_slice(&full[streamed..streamed + nv]);
+            n_valid[lane] = nv as i32;
+            if seq.is_finished() && streamed + nv == total {
+                picks.push(Pick { lane, idx_in_chunk: nv - 1 });
+            }
+            seq.streamed += nv;
+            any = true;
+        }
+        any.then_some(StreamChunk { c: chunk, tokens, start, n_valid, picks })
+    }
+
+    /// Replay iterator for failover: rebuild the already-streamed chunk
+    /// sequence of `lanes_to_replay` from the retained tokens, **without**
+    /// touching the stream cursor.  Round *t* carries each lane's tokens
+    /// `[t·C, min((t+1)·C, streamed))` with `start = t·C`, so the replay
+    /// starts at position 0 — the lane-recycling reset path the stage
+    /// kernels already support — and ends exactly where live streaming
+    /// left off, letting future chunks continue seamlessly on the
+    /// surviving replica.  With `with_picks`, a fully-streamed finished
+    /// sequence re-emits its final-token pick (its in-flight score died
+    /// with the replica).  Lanes without a resident sequence are skipped.
+    pub fn replay_chunks(
+        &self,
+        lanes_to_replay: &[usize],
+        chunk: usize,
+        with_picks: bool,
+    ) -> Vec<StreamChunk> {
+        let g = self.lanes;
+        let max_streamed = lanes_to_replay
+            .iter()
+            .filter_map(|&l| self.by_lane(l))
+            .map(|s| s.streamed)
+            .max()
+            .unwrap_or(0);
+        let rounds = max_streamed.div_ceil(chunk);
+        let mut out = Vec::with_capacity(rounds);
+        for t in 0..rounds {
+            let s0 = t * chunk;
+            let mut tokens = vec![0i32; g * chunk];
+            let mut start = vec![0i32; g];
+            let mut n_valid = vec![0i32; g];
+            let mut picks = Vec::new();
+            let mut any = false;
+            for &lane in lanes_to_replay {
+                let Some(seq) = self.by_lane(lane) else { continue };
+                if s0 >= seq.streamed {
+                    continue;
+                }
+                let nv = (seq.streamed - s0).min(chunk);
+                let full = seq.full_tokens();
+                tokens[lane * chunk..lane * chunk + nv].copy_from_slice(&full[s0..s0 + nv]);
+                start[lane] = s0 as i32;
+                n_valid[lane] = nv as i32;
+                if with_picks
+                    && seq.is_finished()
+                    && seq.streamed == seq.total_len()
+                    && s0 + nv == seq.streamed
+                {
+                    picks.push(Pick { lane, idx_in_chunk: nv - 1 });
+                }
+                any = true;
+            }
+            if any {
+                out.push(StreamChunk { c: chunk, tokens, start, n_valid, picks });
+            }
+        }
+        out
     }
 
     /// Consistency check used by the property tests.  Note: `len` may

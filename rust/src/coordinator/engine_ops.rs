@@ -394,6 +394,14 @@ impl RewardOps {
         Ok(Self { engine, reward })
     }
 
+    /// Build from a raw param blob instead of the local `params_reward.bin` —
+    /// the serve-mode path, where the coordinator distributed the weights
+    /// over the wire at replica spawn.
+    pub fn with_params(engine: Arc<Engine>, blob: &[u8]) -> Result<Self> {
+        let reward = ParamSet::from_bytes(&engine, blob)?;
+        Ok(Self { engine, reward })
+    }
+
     fn g(&self) -> usize {
         self.engine.manifest().shape.lanes
     }
@@ -512,6 +520,13 @@ pub struct RefOps {
 impl RefOps {
     pub fn new(engine: Arc<Engine>) -> Result<Self> {
         let refm = ParamSet::load(&engine, "ref")?;
+        Ok(Self { engine, refm })
+    }
+
+    /// Serve-mode constructor: upload a wire-distributed param blob (see
+    /// [`RewardOps::with_params`]).
+    pub fn with_params(engine: Arc<Engine>, blob: &[u8]) -> Result<Self> {
+        let refm = ParamSet::from_bytes(&engine, blob)?;
         Ok(Self { engine, refm })
     }
 

@@ -46,7 +46,7 @@ use crate::coordinator::chunkctl::ChunkController;
 use crate::coordinator::delta::{DeltaController, Policy};
 use crate::coordinator::engine_ops::{ActorState, ChunkOut, Ops};
 use crate::coordinator::worker::{
-    Pick, RefSink, RewardReq, RewardResp, RewardWorker, StreamChunk, StreamSink,
+    RefSink, RefWorker, RewardReq, RewardResp, RewardWorker, StreamChunk, StreamSink,
 };
 use crate::data::queue::{Arrivals, PromptQueue, QueuedPrompt};
 use crate::data::tasks::{rule_reward, Task};
@@ -56,7 +56,7 @@ use crate::metrics::{PromptLatency, RunLog, StageTiming, StepRecord};
 use crate::model::rollout::{PpoBatch, RolloutAssembler};
 use crate::model::sequence::{SeqPhase, Sequence};
 use crate::ppo::gae::masked_mean;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ParamSet};
 
 /// A fully-scored rollout waiting for its (possibly delayed) update —
 /// used by the async staleness-k baseline.
@@ -198,8 +198,42 @@ impl OppoScheduler {
         // split: artifacts without the paged entry family run the dense
         // per-lane path bit-identically to before
         let paged = engine.manifest().paged_supported();
+        // remote replica placement: `connect_addrs` splits into per-stage
+        // address lists; remotes take the *highest* replica indices of each
+        // pool, and the coordinator ships the stage's params over the wire
+        // at spawn (digest-verified one-shot distribution)
+        let (reward_addrs, ref_addrs) =
+            crate::transport::split_connect_addrs(&cfg.connect_addrs)?;
+        if !reward_addrs.is_empty() || !ref_addrs.is_empty() {
+            ensure!(
+                !paged,
+                "remote replicas are not supported with paged artifacts (the \
+                 block table is host-local); regenerate dense artifacts or \
+                 drop connect_addrs"
+            );
+        }
+        let opts = crate::transport::ConnectOpts {
+            heartbeat_ms: cfg.heartbeat_ms.max(1),
+            ..Default::default()
+        };
         if cfg.mode.intra_enabled() && cfg.stream_reward {
-            let pool = if paged {
+            let pool = if !reward_addrs.is_empty() {
+                ensure!(
+                    reward_addrs.len() <= cfg.reward_replicas,
+                    "{} remote reward addrs but only {} reward replicas",
+                    reward_addrs.len(),
+                    cfg.reward_replicas
+                );
+                let blob = Arc::new(ParamSet::raw_bytes(&engine, "reward")?);
+                RewardWorker::spawn_replicated_remote(
+                    engine.clone(),
+                    cfg.reward_replicas - reward_addrs.len(),
+                    &reward_addrs,
+                    cfg.stage_queue_depth,
+                    &opts,
+                    Some(blob),
+                )?
+            } else if paged {
                 RewardWorker::spawn_replicated_paged(
                     engine.clone(),
                     cfg.reward_replicas,
@@ -218,7 +252,23 @@ impl OppoScheduler {
         }
         if cfg.mode.ref_stream_enabled() && cfg.stream_ref {
             if engine.manifest().ref_prefill_supported() {
-                let pool = if paged {
+                let pool = if !ref_addrs.is_empty() {
+                    ensure!(
+                        ref_addrs.len() <= cfg.ref_replicas,
+                        "{} remote ref addrs but only {} ref replicas",
+                        ref_addrs.len(),
+                        cfg.ref_replicas
+                    );
+                    let blob = Arc::new(ParamSet::raw_bytes(&engine, "ref")?);
+                    RefSink::from_worker(RefWorker::spawn_replicated_remote(
+                        engine.clone(),
+                        cfg.ref_replicas - ref_addrs.len(),
+                        &ref_addrs,
+                        cfg.stage_queue_depth,
+                        &opts,
+                        Some(blob),
+                    )?)
+                } else if paged {
                     RefSink::spawn_replicated_paged(
                         engine.clone(),
                         cfg.ref_replicas,
@@ -780,9 +830,16 @@ impl OppoScheduler {
             st.lane_slots += m.lanes;
             st.idle_lane_slots += m.lanes - live_count;
             {
-                let Self { sinks, buffer, .. } = self;
+                // fault-tolerant collect: a dead replica surfaces as a
+                // `ReplicaFailure`, and its lanes are rerouted + replayed
+                // from the retained chunk stream before the loop continues
+                let Self { sinks, buffer, block_pool, .. } = self;
+                let lanes = buffer.lanes();
                 for sink in sinks.iter_mut() {
-                    sink.collect_ready(buffer)?;
+                    while let Some(fail) = sink.collect_ready_ft(buffer)? {
+                        let table = block_pool.as_ref().map(|p| p.flat_table(lanes));
+                        sink.failover(buffer, &fail, chunk, table.as_deref())?;
+                    }
                 }
             }
             st.gen_tokens += self.process_chunk(&out, chunk)?;
@@ -826,41 +883,10 @@ impl OppoScheduler {
 
     /// Build the next streamed chunk: up to `chunk` unstreamed tokens per
     /// lane, PAD-filled where idle.  Advances the shared stream cursor, so
-    /// call exactly once per fan-out round.
+    /// call exactly once per fan-out round.  (Lives on [`SeqBuffer`] so the
+    /// failover path can replay retained chunks with the same layout.)
     fn build_stream_chunk(&mut self, chunk: usize) -> Result<Option<StreamChunk>> {
-        let m = self.engine.manifest().shape.clone();
-        let mut tokens = vec![0i32; m.lanes * chunk];
-        let mut start = vec![0i32; m.lanes];
-        let mut n_valid = vec![0i32; m.lanes];
-        let mut picks = Vec::new();
-        let mut any = false;
-        for seq in self.buffer.iter_mut() {
-            if seq.phase == SeqPhase::Queued {
-                continue;
-            }
-            let lane = seq.lane;
-            let total = seq.total_len();
-            let streamed = seq.streamed;
-            start[lane] = streamed as i32;
-            let nv = total.saturating_sub(streamed).min(chunk);
-            if nv == 0 {
-                continue;
-            }
-            let full = seq.full_tokens();
-            for j in 0..nv {
-                tokens[lane * chunk + j] = full[streamed + j];
-            }
-            n_valid[lane] = nv as i32;
-            if seq.is_finished() && streamed + nv == total {
-                picks.push(Pick { lane, idx_in_chunk: nv - 1 });
-            }
-            seq.streamed += nv;
-            any = true;
-        }
-        if !any {
-            return Ok(None);
-        }
-        Ok(Some(StreamChunk { c: chunk, tokens, start, n_valid, picks }))
+        Ok(self.buffer.build_stream_chunk(chunk))
     }
 
     /// End of Stage 2: drain the remaining unstreamed tokens of finished
@@ -873,9 +899,13 @@ impl OppoScheduler {
         }
         loop {
             {
-                let Self { sinks, buffer, .. } = self;
+                let Self { sinks, buffer, block_pool, .. } = self;
+                let lanes = buffer.lanes();
                 for sink in sinks.iter_mut() {
-                    sink.join(buffer)?;
+                    while let Some(fail) = sink.join_ft(buffer)? {
+                        let table = block_pool.as_ref().map(|p| p.flat_table(lanes));
+                        sink.failover(buffer, &fail, chunk, table.as_deref())?;
+                    }
                 }
             }
             let outstanding = self.buffer.iter().any(|s| {

@@ -188,6 +188,48 @@ impl<Req: Send + 'static, Resp: Send + 'static> StageWorker<Req, Resp> {
         }
     }
 
+    /// Non-blocking receive that hands back per-request handler errors as
+    /// values instead of bailing — the failover path needs to know *which*
+    /// request failed without tearing down the whole receive loop.
+    pub fn try_recv_result(
+        &mut self,
+    ) -> Result<Option<(u64, std::result::Result<Resp, String>)>> {
+        if self.in_flight == 0 {
+            return Ok(None);
+        }
+        match self.rx.try_recv() {
+            Ok((tag, resp)) => {
+                self.in_flight -= 1;
+                Ok(Some((tag, resp)))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => bail!("stage {} worker hung up", self.name),
+        }
+    }
+
+    /// Blocking flavour of [`try_recv_result`](Self::try_recv_result).
+    pub fn recv_result(&mut self) -> Result<(u64, std::result::Result<Resp, String>)> {
+        ensure!(self.in_flight > 0, "stage {}: recv with nothing in flight", self.name);
+        let (tag, resp) = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("stage {} worker hung up", self.name))?;
+        self.in_flight -= 1;
+        Ok((tag, resp))
+    }
+
+    /// Abandon every in-flight request: drain whatever responses already
+    /// arrived (discarding them) and zero the in-flight count.  Used when a
+    /// replica is retired — its queued work is lost by definition and will
+    /// be replayed elsewhere; the worker thread itself keeps answering (and
+    /// being ignored) until dropped.
+    pub fn abandon_in_flight(&mut self) -> usize {
+        let abandoned = self.in_flight;
+        while self.rx.try_recv().is_ok() {}
+        self.in_flight = 0;
+        abandoned
+    }
+
     /// Cumulative stats handle.
     pub fn stats(&self) -> &Arc<StageStats> {
         &self.stats
@@ -260,8 +302,19 @@ impl<Req, Resp> Drop for StageWorker<Req, Resp> {
 /// * **Per-replica stats** — every replica keeps its own [`StageStats`];
 ///   [`timing_delta`](Self::timing_delta) sums them into one pool-level
 ///   [`StageTiming`] row (`replicas` records the pool size).
+/// * **Failover routing** — [`route`](Self::retire) starts as the identity
+///   (slot *s* → replica *s*) and is rewritten when a replica is retired:
+///   its slots re-home onto a survivor, which then receives those lanes'
+///   replayed chunks and all their future traffic.  Rerouting only works on
+///   the masked full-shape path (a compacted `[G/N, C]` grid has a fixed
+///   row ↔ lane binding baked into its KV state), which callers enforce.
 pub struct StagePool<Req, Resp> {
     workers: Vec<StageWorker<Req, Resp>>,
+    /// slot → replica.  A lane's slot is `lane % route.len()`; the routing
+    /// rule is `route[lane % slots]`.  Identity until a retire.
+    route: Vec<usize>,
+    /// replicas permanently removed from service (transport death)
+    dead: Vec<bool>,
 }
 
 impl<Req: Send + 'static, Resp: Send + 'static> StagePool<Req, Resp> {
@@ -284,7 +337,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> StagePool<Req, Resp> {
         let workers = (0..replicas)
             .map(|r| StageWorker::spawn(name, queue_depth, factory(r)))
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { workers })
+        Ok(Self { workers, route: (0..replicas).collect(), dead: vec![false; replicas] })
     }
 
     pub fn name(&self) -> &'static str {
@@ -296,8 +349,61 @@ impl<Req: Send + 'static, Resp: Send + 'static> StagePool<Req, Resp> {
     }
 
     /// The routing rule: which replica owns `lane`'s KV/seam state.
+    /// `lane % slots` picks the slot, the route table picks the replica —
+    /// identical to plain `lane % replicas` until a retire rewrites it.
     pub fn replica_for_lane(&self, lane: usize) -> usize {
-        lane % self.workers.len()
+        self.route[lane % self.route.len()]
+    }
+
+    /// The slots currently routed to `replica` (empty once retired).
+    pub fn slots_of(&self, replica: usize) -> Vec<usize> {
+        (0..self.route.len()).filter(|&s| self.route[s] == replica).collect()
+    }
+
+    /// Is this replica still in service?
+    pub fn is_alive(&self, replica: usize) -> bool {
+        !self.dead[replica]
+    }
+
+    /// Replicas still in service.
+    pub fn alive_count(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
+    }
+
+    /// Has any retire rewritten the identity routing?
+    pub fn rerouted(&self) -> bool {
+        self.route.iter().enumerate().any(|(s, &r)| s != r)
+    }
+
+    /// Permanently remove `replica` from service: its slots re-home onto
+    /// the first surviving replica, its in-flight requests are abandoned
+    /// (the caller replays the lost lane data), and it will never be
+    /// submitted to again.  Returns `(survivor, rerouted_slots)` — the
+    /// slots whose lanes the caller must now replay onto the survivor.
+    pub fn retire(&mut self, replica: usize) -> Result<(usize, Vec<usize>)> {
+        ensure!(replica < self.workers.len(), "retire: replica {replica} out of range");
+        ensure!(!self.dead[replica], "retire: replica {replica} already retired");
+        let survivor = (0..self.workers.len())
+            .find(|&r| r != replica && !self.dead[r])
+            .with_context(|| {
+                format!("stage {}: replica {replica} died with no survivor", self.name())
+            })?;
+        self.dead[replica] = true;
+        let mut rerouted = Vec::new();
+        for (slot, r) in self.route.iter_mut().enumerate() {
+            if *r == replica {
+                *r = survivor;
+                rerouted.push(slot);
+            }
+        }
+        let abandoned = self.workers[replica].abandon_in_flight();
+        log::warn!(
+            "stage {}: retired replica {replica} -> survivor {survivor} \
+             ({} slots rerouted, {abandoned} in-flight requests abandoned)",
+            self.name(),
+            rerouted.len()
+        );
+        Ok((survivor, rerouted))
     }
 
     /// Enqueue on one replica; blocks only when that replica's bounded
@@ -308,6 +414,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> StagePool<Req, Resp> {
             "replica {replica} out of range (pool has {})",
             self.workers.len()
         );
+        ensure!(!self.dead[replica], "stage {}: submit to retired replica {replica}", self.name());
         self.workers[replica].submit(req)
     }
 
@@ -324,6 +431,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> StagePool<Req, Resp> {
             "replica {replica} out of range (pool has {})",
             self.workers.len()
         );
+        ensure!(!self.dead[replica], "stage {}: submit to retired replica {replica}", self.name());
         self.workers[replica].try_submit(req)
     }
 
@@ -365,11 +473,45 @@ impl<Req: Send + 'static, Resp: Send + 'static> StagePool<Req, Resp> {
     /// the replica index.  Responses stay in submission order *per replica*.
     pub fn try_recv_any(&mut self) -> Result<Option<(usize, u64, Resp)>> {
         for (r, w) in self.workers.iter_mut().enumerate() {
+            if self.dead[r] {
+                continue;
+            }
             if let Some((tag, resp)) = w.try_recv()? {
                 return Ok(Some((r, tag, resp)));
             }
         }
         Ok(None)
+    }
+
+    /// Like [`try_recv_any`](Self::try_recv_any) but per-request handler
+    /// errors come back as values tagged with their replica — the failover
+    /// path's detection point.
+    pub fn try_recv_any_result(
+        &mut self,
+    ) -> Result<Option<(usize, u64, std::result::Result<Resp, String>)>> {
+        for (r, w) in self.workers.iter_mut().enumerate() {
+            if self.dead[r] {
+                continue;
+            }
+            if let Some((tag, resp)) = w.try_recv_result()? {
+                return Ok(Some((r, tag, resp)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Blocking receive from one replica with the per-request error as a
+    /// value (see [`try_recv_any_result`](Self::try_recv_any_result)).
+    pub fn recv_from_result(
+        &mut self,
+        replica: usize,
+    ) -> Result<(u64, std::result::Result<Resp, String>)> {
+        ensure!(
+            replica < self.workers.len(),
+            "replica {replica} out of range (pool has {})",
+            self.workers.len()
+        );
+        self.workers[replica].recv_result()
     }
 
     /// Blocking receive from one replica (the flush join drains each

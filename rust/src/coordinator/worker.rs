@@ -107,14 +107,28 @@ impl StreamChunk {
     /// counts).  With `n == 1` this is the identity, which keeps a
     /// one-replica pool bit-compatible with the old single-worker path.
     pub fn masked_for_replica(&self, r: usize, n: usize) -> Option<ReplicaPart> {
+        self.masked_for_slots(&[r], n)
+    }
+
+    /// Route-aware masked split: the replica owns lane `l` iff `l`'s slot
+    /// (`l % n_slots`) is in `slots`.  With the identity route each replica
+    /// owns exactly its own slot and this is [`masked_for_replica`]
+    /// (Self::masked_for_replica); after a failover reroute a survivor owns
+    /// the dead replica's slots too, so its part — including replayed
+    /// chunks — covers both lane sets while retired replicas (empty
+    /// `slots`) get `None`.
+    pub fn masked_for_slots(&self, slots: &[usize], n_slots: usize) -> Option<ReplicaPart> {
+        if slots.is_empty() {
+            return None;
+        }
         let lane_map: Vec<usize> = (0..self.lanes()).collect();
-        if n <= 1 {
+        if n_slots <= 1 {
             return Some(ReplicaPart { chunk: self.clone(), lane_map });
         }
         let mut part = self.clone();
         let mut any = false;
         for (lane, nv) in part.n_valid.iter_mut().enumerate() {
-            if lane % n == r {
+            if slots.contains(&(lane % n_slots)) {
                 any = any || *nv > 0;
             } else {
                 *nv = 0;
@@ -123,7 +137,7 @@ impl StreamChunk {
         if !any {
             return None;
         }
-        part.picks.retain(|p| p.lane % n == r);
+        part.picks.retain(|p| slots.contains(&(p.lane % n_slots)));
         Some(ReplicaPart { chunk: part, lane_map })
     }
 
@@ -226,6 +240,14 @@ struct RewardHandler {
     paged: bool,
 }
 
+impl RewardHandler {
+    fn new(engine: Arc<Engine>, rows: usize, paged: bool) -> Result<Self> {
+        let ops = RewardOps::new(engine)?;
+        let state = if paged { ops.fresh_paged_state()? } else { ops.fresh_state_rows(rows)? };
+        Ok(Self { ops, state, rows, paged })
+    }
+}
+
 impl StageHandler for RewardHandler {
     type Req = RewardReq;
     type Resp = RewardResp;
@@ -275,6 +297,26 @@ impl StageHandler for RewardHandler {
             RewardReq::ScoreFull { tokens, last_idx } => {
                 Ok(RewardResp::FullScores(self.ops.score_full(&tokens, &last_idx)?))
             }
+        }
+    }
+}
+
+/// One replica of a mixed local/remote reward pool: in-process compute or
+/// a [`RemoteReplica`](crate::transport::RemoteReplica) behind the framed
+/// TCP transport — indistinguishable to the pool either way.
+enum RewardBackend {
+    Local(RewardHandler),
+    Remote(crate::transport::RemoteReplica),
+}
+
+impl StageHandler for RewardBackend {
+    type Req = RewardReq;
+    type Resp = RewardResp;
+
+    fn handle(&mut self, req: RewardReq) -> Result<RewardResp> {
+        match self {
+            RewardBackend::Local(h) => h.handle(req),
+            RewardBackend::Remote(c) => c.reward(&req),
         }
     }
 }
@@ -342,14 +384,77 @@ impl RewardWorker {
         let pool = StagePool::spawn("reward", replicas, queue_depth, |_replica| {
             let engine = engine.clone();
             let rows = sliced_rows.unwrap_or(g);
-            move || {
-                let ops = RewardOps::new(engine)?;
-                let state =
-                    if paged { ops.fresh_paged_state()? } else { ops.fresh_state_rows(rows)? };
-                Ok(RewardHandler { ops, state, rows, paged })
-            }
+            move || RewardHandler::new(engine, rows, paged)
         })?;
         Ok(Self { pool, sliced_rows, paged })
+    }
+
+    /// Wrap an already-spawned pool (remote/mixed spawn paths and tests).
+    /// The pool is treated as masked full-shape and dense — the only split
+    /// the failover reroute supports.
+    pub fn from_pool(pool: StagePool<RewardReq, RewardResp>) -> Self {
+        Self { pool, sliced_rows: None, paged: false }
+    }
+
+    /// Spawn a pool whose replicas are all remote (`addrs[r]` hosts replica
+    /// `r` behind a `remote-stage` listener).  Engine-free: the remote end
+    /// owns the model.  Remote pools are always masked full-shape — failover
+    /// reroutes lanes between replicas, which the compacted grid's fixed
+    /// row ↔ lane binding cannot express.
+    pub fn spawn_remote_pool(
+        addrs: &[String],
+        queue_depth: usize,
+        opts: &crate::transport::ConnectOpts,
+    ) -> Result<Self> {
+        ensure!(!addrs.is_empty(), "remote reward pool needs at least one address");
+        let pool = StagePool::spawn("reward", addrs.len(), queue_depth, |replica| {
+            let addr = addrs[replica].clone();
+            let opts = opts.clone();
+            move || {
+                let client = crate::transport::RemoteReplica::connect(
+                    &addr, "reward", replica, None, &opts,
+                )?;
+                Ok(crate::transport::RemoteRewardHandler { client })
+            }
+        })?;
+        Ok(Self::from_pool(pool))
+    }
+
+    /// Spawn a mixed pool: `local` in-process replicas (indices
+    /// `0..local`) plus one remote replica per address (the highest
+    /// indices).  `params` is the raw reward parameter blob distributed to
+    /// every remote at connect, digest-verified so remote replicas provably
+    /// score with the same weights as local ones.  Mixed pools are always
+    /// masked full-shape (see [`spawn_remote_pool`](Self::spawn_remote_pool)).
+    pub fn spawn_replicated_remote(
+        engine: Arc<Engine>,
+        local: usize,
+        addrs: &[String],
+        queue_depth: usize,
+        opts: &crate::transport::ConnectOpts,
+        params: Option<Arc<Vec<u8>>>,
+    ) -> Result<Self> {
+        let total = local + addrs.len();
+        ensure!(total >= 1, "mixed reward pool needs at least one replica");
+        let g = engine.manifest().shape.lanes;
+        let pool = StagePool::spawn("reward", total, queue_depth, |replica| {
+            let engine = engine.clone();
+            let opts = opts.clone();
+            let addr = (replica >= local).then(|| addrs[replica - local].clone());
+            let params = params.clone();
+            move || {
+                if let Some(addr) = addr {
+                    let blob = params.as_ref().map(|b| ("reward", b.as_slice()));
+                    let client = crate::transport::RemoteReplica::connect(
+                        &addr, "reward", replica, blob, &opts,
+                    )?;
+                    Ok(RewardBackend::Remote(client))
+                } else {
+                    Ok(RewardBackend::Local(RewardHandler::new(engine, g, false)?))
+                }
+            }
+        })?;
+        Ok(Self::from_pool(pool))
     }
 
     pub fn replicas(&self) -> usize {
@@ -359,6 +464,24 @@ impl RewardWorker {
     /// Compacted rows per replica when the pool runs sliced entries.
     pub fn sliced_rows(&self) -> Option<usize> {
         self.sliced_rows
+    }
+
+    /// Slots the pool's route currently sends to `replica`.
+    pub fn slots_of(&self, replica: usize) -> Vec<usize> {
+        self.pool.slots_of(replica)
+    }
+
+    pub fn is_alive(&self, replica: usize) -> bool {
+        self.pool.is_alive(replica)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.pool.alive_count()
+    }
+
+    /// Retire a dead replica (see [`StagePool::retire`]).
+    pub fn retire(&mut self, replica: usize) -> Result<(usize, Vec<usize>)> {
+        self.pool.retire(replica)
     }
 
     /// Does this pool run the paged entry family?
@@ -400,6 +523,23 @@ impl RewardWorker {
     /// Non-blocking: first ready response from any replica.
     pub fn try_recv_any(&mut self) -> Result<Option<(usize, RewardResp)>> {
         Ok(self.pool.try_recv_any()?.map(|(r, _, resp)| (r, resp)))
+    }
+
+    /// Non-blocking receive with per-request errors as values (failover
+    /// detection point).
+    pub fn try_recv_any_result(
+        &mut self,
+    ) -> Result<Option<(usize, std::result::Result<RewardResp, String>)>> {
+        Ok(self.pool.try_recv_any_result()?.map(|(r, _, resp)| (r, resp)))
+    }
+
+    /// Blocking receive from one replica with the per-request error as a
+    /// value.
+    pub fn recv_from_result(
+        &mut self,
+        replica: usize,
+    ) -> Result<std::result::Result<RewardResp, String>> {
+        self.pool.recv_from_result(replica).map(|(_, r)| r)
     }
 
     pub fn in_flight(&self) -> usize {
@@ -451,6 +591,14 @@ struct RefHandler {
     paged: bool,
 }
 
+impl RefHandler {
+    fn new(engine: Arc<Engine>, rows: usize, paged: bool) -> Result<Self> {
+        let ops = RefOps::new(engine)?;
+        let state = if paged { ops.fresh_paged_state()? } else { ops.fresh_state_rows(rows)? };
+        Ok(Self { ops, state, rows, paged })
+    }
+}
+
 impl StageHandler for RefHandler {
     type Req = RefReq;
     type Resp = RefResp;
@@ -482,6 +630,24 @@ impl StageHandler for RefHandler {
                     &table,
                 )?))
             }
+        }
+    }
+}
+
+/// One replica of a mixed local/remote ref pool (see [`RewardBackend`]).
+enum RefBackend {
+    Local(RefHandler),
+    Remote(crate::transport::RemoteReplica),
+}
+
+impl StageHandler for RefBackend {
+    type Req = RefReq;
+    type Resp = RefResp;
+
+    fn handle(&mut self, req: RefReq) -> Result<RefResp> {
+        match self {
+            RefBackend::Local(h) => h.handle(req),
+            RefBackend::Remote(c) => c.reference(&req),
         }
     }
 }
@@ -539,18 +705,89 @@ impl RefWorker {
         let pool = StagePool::spawn("ref", replicas, queue_depth, |_replica| {
             let engine = engine.clone();
             let rows = sliced_rows.unwrap_or(g);
-            move || {
-                let ops = RefOps::new(engine)?;
-                let state =
-                    if paged { ops.fresh_paged_state()? } else { ops.fresh_state_rows(rows)? };
-                Ok(RefHandler { ops, state, rows, paged })
-            }
+            move || RefHandler::new(engine, rows, paged)
         })?;
         Ok(Self { pool, sliced_rows, paged })
     }
 
+    /// Wrap an already-spawned pool (remote/mixed spawn paths and tests) —
+    /// masked full-shape and dense (see [`RewardWorker::from_pool`]).
+    pub fn from_pool(pool: StagePool<RefReq, RefResp>) -> Self {
+        Self { pool, sliced_rows: None, paged: false }
+    }
+
+    /// Spawn an all-remote ref pool (see [`RewardWorker::spawn_remote_pool`]).
+    pub fn spawn_remote_pool(
+        addrs: &[String],
+        queue_depth: usize,
+        opts: &crate::transport::ConnectOpts,
+    ) -> Result<Self> {
+        ensure!(!addrs.is_empty(), "remote ref pool needs at least one address");
+        let pool = StagePool::spawn("ref", addrs.len(), queue_depth, |replica| {
+            let addr = addrs[replica].clone();
+            let opts = opts.clone();
+            move || {
+                let client =
+                    crate::transport::RemoteReplica::connect(&addr, "ref", replica, None, &opts)?;
+                Ok(crate::transport::RemoteRefHandler { client })
+            }
+        })?;
+        Ok(Self::from_pool(pool))
+    }
+
+    /// Spawn a mixed local/remote ref pool (see
+    /// [`RewardWorker::spawn_replicated_remote`]).
+    pub fn spawn_replicated_remote(
+        engine: Arc<Engine>,
+        local: usize,
+        addrs: &[String],
+        queue_depth: usize,
+        opts: &crate::transport::ConnectOpts,
+        params: Option<Arc<Vec<u8>>>,
+    ) -> Result<Self> {
+        let total = local + addrs.len();
+        ensure!(total >= 1, "mixed ref pool needs at least one replica");
+        let g = engine.manifest().shape.lanes;
+        let pool = StagePool::spawn("ref", total, queue_depth, |replica| {
+            let engine = engine.clone();
+            let opts = opts.clone();
+            let addr = (replica >= local).then(|| addrs[replica - local].clone());
+            let params = params.clone();
+            move || {
+                if let Some(addr) = addr {
+                    let blob = params.as_ref().map(|b| ("ref", b.as_slice()));
+                    let client = crate::transport::RemoteReplica::connect(
+                        &addr, "ref", replica, blob, &opts,
+                    )?;
+                    Ok(RefBackend::Remote(client))
+                } else {
+                    Ok(RefBackend::Local(RefHandler::new(engine, g, false)?))
+                }
+            }
+        })?;
+        Ok(Self::from_pool(pool))
+    }
+
     pub fn replicas(&self) -> usize {
         self.pool.replicas()
+    }
+
+    /// Slots the pool's route currently sends to `replica`.
+    pub fn slots_of(&self, replica: usize) -> Vec<usize> {
+        self.pool.slots_of(replica)
+    }
+
+    pub fn is_alive(&self, replica: usize) -> bool {
+        self.pool.is_alive(replica)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.pool.alive_count()
+    }
+
+    /// Retire a dead replica (see [`StagePool::retire`]).
+    pub fn retire(&mut self, replica: usize) -> Result<(usize, Vec<usize>)> {
+        self.pool.retire(replica)
     }
 
     /// Compacted rows per replica when the pool runs sliced entries.
@@ -592,6 +829,23 @@ impl RefWorker {
 
     pub fn try_recv_any(&mut self) -> Result<Option<(usize, RefResp)>> {
         Ok(self.pool.try_recv_any()?.map(|(r, _, resp)| (r, resp)))
+    }
+
+    /// Non-blocking receive with per-request errors as values (failover
+    /// detection point).
+    pub fn try_recv_any_result(
+        &mut self,
+    ) -> Result<Option<(usize, std::result::Result<RefResp, String>)>> {
+        Ok(self.pool.try_recv_any_result()?.map(|(r, _, resp)| (r, resp)))
+    }
+
+    /// Blocking receive from one replica with the per-request error as a
+    /// value.
+    pub fn recv_from_result(
+        &mut self,
+        replica: usize,
+    ) -> Result<std::result::Result<RefResp, String>> {
+        self.pool.recv_from_result(replica).map(|(_, r)| r)
     }
 
     pub fn in_flight(&self) -> usize {
@@ -658,6 +912,12 @@ impl RefSink {
         Ok(Self { worker, meta })
     }
 
+    /// Wrap an already-spawned worker (remote/mixed spawn paths and tests).
+    pub fn from_worker(worker: RefWorker) -> Self {
+        let meta = (0..worker.replicas()).map(|_| VecDeque::new()).collect();
+        Self { worker, meta }
+    }
+
     fn apply(&mut self, replica: usize, buf: &mut SeqBuffer, logps: Vec<f32>) -> Result<()> {
         let meta = self.meta[replica]
             .pop_front()
@@ -681,6 +941,16 @@ impl RefSink {
         }
         Ok(())
     }
+}
+
+/// A replica's per-request failure surfaced by the `*_ft` receive paths —
+/// the scheduler hands it to [`StreamSink::failover`] instead of aborting
+/// the step.
+#[derive(Debug)]
+pub struct ReplicaFailure {
+    pub stage: &'static str,
+    pub replica: usize,
+    pub msg: String,
 }
 
 /// Scheduler-side handle to one active downstream stage.  The step loop
@@ -710,6 +980,14 @@ impl StreamSink {
         }
     }
 
+    /// Replicas still alive (failover retires dead ones permanently).
+    pub fn alive_count(&self) -> usize {
+        match self {
+            StreamSink::Reward(w) => w.alive_count(),
+            StreamSink::Ref(s) => s.worker.alive_count(),
+        }
+    }
+
     /// Submit one streamed chunk to this stage: one sub-request per replica
     /// that owns any valid lane in the chunk (typed per-stage request),
     /// delivered through the pool's two-phase fan-out — a busy replica
@@ -724,7 +1002,15 @@ impl StreamSink {
                 let sliced = w.sliced_rows().is_some();
                 let mut parts = Vec::new();
                 for r in 0..n {
-                    let Some(part) = ck.for_replica(r, n, sliced) else { continue };
+                    // sliced pools never reroute (fixed row ↔ lane binding);
+                    // masked pools split by the route so a failover survivor
+                    // picks up the dead replica's slots transparently
+                    let part = if sliced {
+                        ck.for_replica(r, n, true)
+                    } else {
+                        ck.masked_for_slots(&w.slots_of(r), n)
+                    };
+                    let Some(part) = part else { continue };
                     let entry = if sliced {
                         format!("reward_prefill_chunk_g{}_c{}", part.lane_map.len(), part.chunk.c)
                     } else {
@@ -749,7 +1035,12 @@ impl StreamSink {
                 let sliced = s.worker.sliced_rows().is_some();
                 let mut parts = Vec::new();
                 for r in 0..n {
-                    let Some(part) = ck.for_replica(r, n, sliced) else { continue };
+                    let part = if sliced {
+                        ck.for_replica(r, n, true)
+                    } else {
+                        ck.masked_for_slots(&s.worker.slots_of(r), n)
+                    };
+                    let Some(part) = part else { continue };
                     let entry = if sliced {
                         format!("ref_prefill_chunk_g{}_c{}", part.lane_map.len(), part.chunk.c)
                     } else {
@@ -801,7 +1092,7 @@ impl StreamSink {
                 let n = w.replicas();
                 let mut parts = Vec::new();
                 for r in 0..n {
-                    let Some(part) = ck.for_replica(r, n, false) else { continue };
+                    let Some(part) = ck.masked_for_slots(&w.slots_of(r), n) else { continue };
                     parts.push((
                         r,
                         RewardReq::StreamPaged {
@@ -821,7 +1112,9 @@ impl StreamSink {
                 let n = s.worker.replicas();
                 let mut parts = Vec::new();
                 for r in 0..n {
-                    let Some(part) = ck.for_replica(r, n, false) else { continue };
+                    let Some(part) = ck.masked_for_slots(&s.worker.slots_of(r), n) else {
+                        continue;
+                    };
                     s.meta[r].push_back(RefMeta {
                         start: part.chunk.start.clone(),
                         n_valid: part.chunk.n_valid.clone(),
@@ -890,6 +1183,177 @@ impl StreamSink {
         Ok(())
     }
 
+    /// Can this stage survive the loss of a replica?  Requires the masked
+    /// full-shape split (a compacted grid's row ↔ lane binding cannot be
+    /// rerouted) and at least one other live replica to re-home onto.
+    pub fn failover_capable(&self) -> bool {
+        match self {
+            StreamSink::Reward(w) => w.sliced_rows().is_none() && w.alive_count() > 1,
+            StreamSink::Ref(s) => s.worker.sliced_rows().is_none() && s.worker.alive_count() > 1,
+        }
+    }
+
+    /// [`collect_ready`](Self::collect_ready) with failure surfacing: a
+    /// per-request error comes back as a [`ReplicaFailure`] when the stage
+    /// can fail over, so the caller can retire + replay and keep the step
+    /// alive; without a failover path it propagates as an error, as before.
+    pub fn collect_ready_ft(&mut self, buf: &mut SeqBuffer) -> Result<Option<ReplicaFailure>> {
+        let capable = self.failover_capable();
+        match self {
+            StreamSink::Reward(w) => {
+                while let Some((replica, resp)) = w.try_recv_any_result()? {
+                    match resp {
+                        Ok(resp) => apply_reward(buf, resp)?,
+                        Err(msg) if capable => {
+                            return Ok(Some(ReplicaFailure { stage: "reward", replica, msg }))
+                        }
+                        Err(msg) => bail!("reward stage replica {replica}: {msg}"),
+                    }
+                }
+            }
+            StreamSink::Ref(s) => {
+                while let Some((replica, resp)) = s.worker.try_recv_any_result()? {
+                    match resp {
+                        Ok(RefResp::StreamLogps(lp)) => s.apply(replica, buf, lp)?,
+                        Ok(other) => bail!("unexpected ref response {other:?}"),
+                        Err(msg) => {
+                            // the failed request's meta must still leave the
+                            // FIFO so later responses stay aligned
+                            s.meta[replica].pop_front();
+                            if capable {
+                                return Ok(Some(ReplicaFailure { stage: "ref", replica, msg }));
+                            }
+                            bail!("ref stage replica {replica}: {msg}");
+                        }
+                    }
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// [`join`](Self::join) with failure surfacing (see
+    /// [`collect_ready_ft`](Self::collect_ready_ft)).  On a failure the
+    /// join stops early — the caller runs failover, then joins again.
+    pub fn join_ft(&mut self, buf: &mut SeqBuffer) -> Result<Option<ReplicaFailure>> {
+        let capable = self.failover_capable();
+        match self {
+            StreamSink::Reward(w) => {
+                for r in 0..w.replicas() {
+                    while w.in_flight_on(r) > 0 {
+                        match w.recv_from_result(r)? {
+                            Ok(resp) => apply_reward(buf, resp)?,
+                            Err(msg) if capable => {
+                                return Ok(Some(ReplicaFailure {
+                                    stage: "reward",
+                                    replica: r,
+                                    msg,
+                                }))
+                            }
+                            Err(msg) => bail!("reward stage replica {r}: {msg}"),
+                        }
+                    }
+                }
+            }
+            StreamSink::Ref(s) => {
+                for r in 0..s.worker.replicas() {
+                    while s.worker.in_flight_on(r) > 0 {
+                        match s.worker.recv_from_result(r)? {
+                            Ok(RefResp::StreamLogps(lp)) => s.apply(r, buf, lp)?,
+                            Ok(other) => bail!("unexpected ref response {other:?}"),
+                            Err(msg) => {
+                                s.meta[r].pop_front();
+                                if capable {
+                                    return Ok(Some(ReplicaFailure {
+                                        stage: "ref",
+                                        replica: r,
+                                        msg,
+                                    }));
+                                }
+                                bail!("ref stage replica {r}: {msg}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Re-home a dead replica's lanes onto a survivor: retire it in the
+    /// pool (rerouting its slots, abandoning its in-flight work), roll the
+    /// affected lanes' stage progress back, and replay their retained
+    /// chunks from the buffer.  The route-aware split in
+    /// [`submit_chunk`](Self::submit_chunk) delivers the replayed chunks
+    /// only to the survivor, whose kernels rebuild KV/seam state from
+    /// position 0 exactly as for a recycled lane — future live chunks then
+    /// continue seamlessly from the stream cursor.  Reward lanes that
+    /// already hold their score receive no further chunks, so they are not
+    /// replayed; unscored lanes replay `with_picks` so a score lost
+    /// in flight is re-emitted at the final position.  Pass the block
+    /// table on paged pools.
+    pub fn failover(
+        &mut self,
+        buf: &mut SeqBuffer,
+        fail: &ReplicaFailure,
+        chunk: usize,
+        table: Option<&[i32]>,
+    ) -> Result<()> {
+        ensure!(
+            self.failover_capable(),
+            "{} stage: failover requested without a failover path",
+            self.name()
+        );
+        ensure!(
+            self.paged() == table.is_some(),
+            "{} stage: failover table must match the pool's paged mode",
+            self.name()
+        );
+        let n_slots = self.replicas();
+        let (lanes, with_picks) = match self {
+            StreamSink::Reward(w) => {
+                let (_survivor, slots) = w.retire(fail.replica)?;
+                let lanes: Vec<usize> = buf
+                    .iter()
+                    .filter(|s| slots.contains(&(s.lane % n_slots)) && s.rm_score.is_none())
+                    .map(|s| s.lane)
+                    .collect();
+                (lanes, true)
+            }
+            StreamSink::Ref(s) => {
+                let (_survivor, slots) = s.worker.retire(fail.replica)?;
+                // in-flight metas of the dead replica die with it
+                s.meta[fail.replica].clear();
+                let mut lanes = Vec::new();
+                for seq in buf.iter_mut() {
+                    if slots.contains(&(seq.lane % n_slots)) {
+                        // the replay rebuilds the lane's log-probs from
+                        // position 0 (apply's continuity check requires it)
+                        seq.ref_logp.clear();
+                        lanes.push(seq.lane);
+                    }
+                }
+                (lanes, false)
+            }
+        };
+        let replay = buf.replay_chunks(&lanes, chunk, with_picks);
+        log::warn!(
+            "{} stage: replaying {} retained chunk(s) for {} lane(s) after replica {} died ({})",
+            self.name(),
+            replay.len(),
+            lanes.len(),
+            fail.replica,
+            fail.msg
+        );
+        for ck in &replay {
+            match table {
+                Some(t) => self.submit_chunk_paged(ck, t)?,
+                None => self.submit_chunk(ck)?,
+            }
+        }
+        Ok(())
+    }
+
     /// Does this stage hold everything it needs for `seq`?  Checked for
     /// finished sequences when deciding whether the flush loop must keep
     /// streaming.
@@ -905,6 +1369,61 @@ impl StreamSink {
             StreamSink::Reward(w) => w.timing_delta(),
             StreamSink::Ref(s) => s.worker.timing_delta(),
         }
+    }
+}
+
+/// Build the `remote-stage` serve backend for one engine-backed replica
+/// (full-shape dense rows — remote pools are always masked).  Returns the
+/// request processor plus the params sink the serve loop feeds: weights
+/// normally arrive over the wire at handshake and (re)build the handler;
+/// if the coordinator skips distribution, the first request falls back to
+/// the node-local `params_<stage>.bin`.
+pub fn engine_serve_backend(
+    engine: Arc<Engine>,
+    stage: &str,
+) -> Result<(crate::transport::Backend, Box<dyn FnMut(&str, &[u8]) -> Result<()> + Send>)> {
+    use std::sync::Mutex;
+    let g = engine.manifest().shape.lanes;
+    match stage {
+        "reward" => {
+            let slot: Arc<Mutex<Option<RewardHandler>>> = Arc::new(Mutex::new(None));
+            let (s1, e1) = (slot.clone(), engine.clone());
+            let on_params = Box::new(move |which: &str, data: &[u8]| -> Result<()> {
+                ensure!(which == "reward", "reward server got {which:?} params");
+                let ops = RewardOps::with_params(e1.clone(), data)?;
+                let state = ops.fresh_state_rows(g)?;
+                *s1.lock().unwrap() = Some(RewardHandler { ops, state, rows: g, paged: false });
+                Ok(())
+            });
+            let backend = crate::transport::Backend::Reward(Box::new(move |req| {
+                let mut guard = slot.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some(RewardHandler::new(engine.clone(), g, false)?);
+                }
+                guard.as_mut().unwrap().handle(req)
+            }));
+            Ok((backend, on_params))
+        }
+        "ref" => {
+            let slot: Arc<Mutex<Option<RefHandler>>> = Arc::new(Mutex::new(None));
+            let (s1, e1) = (slot.clone(), engine.clone());
+            let on_params = Box::new(move |which: &str, data: &[u8]| -> Result<()> {
+                ensure!(which == "ref", "ref server got {which:?} params");
+                let ops = RefOps::with_params(e1.clone(), data)?;
+                let state = ops.fresh_state_rows(g)?;
+                *s1.lock().unwrap() = Some(RefHandler { ops, state, rows: g, paged: false });
+                Ok(())
+            });
+            let backend = crate::transport::Backend::Ref(Box::new(move |req| {
+                let mut guard = slot.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some(RefHandler::new(engine.clone(), g, false)?);
+                }
+                guard.as_mut().unwrap().handle(req)
+            }));
+            Ok((backend, on_params))
+        }
+        other => bail!("unknown stage {other:?} (want reward|ref)"),
     }
 }
 

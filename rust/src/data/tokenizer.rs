@@ -44,7 +44,8 @@ impl Tokenizer {
     pub fn builtin(vocab: usize) -> Self {
         let mut table: Vec<String> =
             ["<pad>", "<bos>", "<eos>"].iter().map(|s| s.to_string()).collect();
-        table.extend(" 0123456789abcdefghijklmnopqrstuvwxyz+-*/=?.,:;#|()[]<>".chars().map(String::from));
+        let ascii = " 0123456789abcdefghijklmnopqrstuvwxyz+-*/=?.,:;#|()[]<>";
+        table.extend(ascii.chars().map(String::from));
         let mut i = 0;
         while table.len() < vocab {
             table.push(format!("<unused{i}>"));
@@ -151,7 +152,8 @@ mod tests {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
         if let Ok(text) = std::fs::read_to_string(path) {
             let manifest = crate::util::json::parse(&text).unwrap();
-            let from_manifest = Tokenizer::from_manifest(manifest.get("tokenizer").unwrap()).unwrap();
+            let from_manifest =
+                Tokenizer::from_manifest(manifest.get("tokenizer").unwrap()).unwrap();
             let builtin = Tokenizer::builtin(from_manifest.vocab());
             assert_eq!(builtin.table, from_manifest.table);
         }

@@ -50,6 +50,8 @@ pub fn fig2a() -> Vec<Row> {
             tp: 1.0,
             software_efficiency: 0.5,
             iter_overhead_s: 2e-4,
+            link_gbps: 0.0,
+            link_latency_s: 0.0,
         };
         let batch = 16.0;
         let ctx = 768.0;
@@ -83,7 +85,10 @@ pub fn fig2b() -> Vec<Row> {
                     .cell("p90", stats::percentile(&xs, 90.0))
                     .cell("p99", stats::percentile(&xs, 99.0))
                     .cell("max", stats::max(&xs))
-                    .cell("tail_p99/p50", stats::percentile(&xs, 99.0) / stats::percentile(&xs, 50.0)),
+                    .cell(
+                        "tail_p99/p50",
+                        stats::percentile(&xs, 99.0) / stats::percentile(&xs, 50.0),
+                    ),
             );
         }
     }

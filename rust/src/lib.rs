@@ -33,6 +33,7 @@ pub mod model;
 pub mod ppo;
 pub mod runtime;
 pub mod sim;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type.

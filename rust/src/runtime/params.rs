@@ -19,6 +19,13 @@ pub struct ParamSet {
 impl ParamSet {
     /// Load `params_<which>.bin` (which ∈ actor|reward|ref) onto the device.
     pub fn load(engine: &Engine, which: &str) -> Result<Self> {
+        Self::from_bytes(engine, &Self::raw_bytes(engine, which)?)
+    }
+
+    /// The raw on-disk blob for one model's parameters — the unit the
+    /// transport layer distributes to remote replicas (digest-verified, so
+    /// every node provably loads identical weights).
+    pub fn raw_bytes(engine: &Engine, which: &str) -> Result<Vec<u8>> {
         let m = engine.manifest();
         let file = m
             .params_files
@@ -31,6 +38,16 @@ impl ParamSet {
                 "{}: {} bytes on disk, manifest says {}",
                 path.display(), bytes.len(), m.params_bytes()
             );
+        }
+        Ok(bytes)
+    }
+
+    /// Upload a raw parameter blob (disk layout) onto the device — the
+    /// receive half of remote param distribution.
+    pub fn from_bytes(engine: &Engine, bytes: &[u8]) -> Result<Self> {
+        let m = engine.manifest();
+        if bytes.len() != m.params_bytes() {
+            bail!("param blob is {} bytes, manifest says {}", bytes.len(), m.params_bytes());
         }
         let mut bufs = Vec::with_capacity(m.param_table.len());
         for spec in &m.param_table {

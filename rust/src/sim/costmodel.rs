@@ -28,10 +28,20 @@ pub struct ModelSpec {
 }
 
 impl ModelSpec {
-    pub const QWEN25_7B: ModelSpec =
-        ModelSpec { name: "Qwen2.5-7B", params: 7.6e9, n_layers: 28.0, hidden: 3584.0, n_heads: 28.0 };
-    pub const QWEN25_3B: ModelSpec =
-        ModelSpec { name: "Qwen2.5-3B", params: 3.1e9, n_layers: 36.0, hidden: 2048.0, n_heads: 16.0 };
+    pub const QWEN25_7B: ModelSpec = ModelSpec {
+        name: "Qwen2.5-7B",
+        params: 7.6e9,
+        n_layers: 28.0,
+        hidden: 3584.0,
+        n_heads: 28.0,
+    };
+    pub const QWEN25_3B: ModelSpec = ModelSpec {
+        name: "Qwen2.5-3B",
+        params: 3.1e9,
+        n_layers: 36.0,
+        hidden: 2048.0,
+        n_heads: 16.0,
+    };
 
     /// bf16 weight bytes.
     pub fn weight_bytes(&self) -> f64 {
@@ -55,6 +65,12 @@ pub struct CostModel {
     pub software_efficiency: f64,
     /// fixed per-kernel-launch / scheduling overhead per decode iteration
     pub iter_overhead_s: f64,
+    /// inter-node link bandwidth in Gbit/s for *remote* stage replicas
+    /// reached over the framed-TCP transport; 0 ⇒ all replicas in-process
+    /// (chunk hand-off stays zero-copy and free)
+    pub link_gbps: f64,
+    /// one-way link latency per framed message, seconds
+    pub link_latency_s: f64,
 }
 
 impl CostModel {
@@ -113,6 +129,38 @@ impl CostModel {
     /// overlap on independent execution resources.
     pub fn masked_prefill(&self, tokens: f64, mean_ctx: f64) -> f64 {
         self.prefill(tokens, mean_ctx)
+    }
+
+    /// Wall seconds to move one streamed chunk of `tokens` tokens to a
+    /// remote replica and its per-position results back (i32 out + f32
+    /// back ⇒ 8 bytes per token), including two one-way message latencies.
+    /// 0 when no link is configured (in-process hand-off is zero-copy).
+    pub fn chunk_transfer(&self, tokens: f64) -> f64 {
+        if self.link_gbps <= 0.0 {
+            return 0.0;
+        }
+        2.0 * self.link_latency_s + 8.0 * tokens / (self.link_gbps / 8.0 * 1e9)
+    }
+
+    /// Per-replica wall seconds for a **remote** chunk-streamed prefill:
+    /// remote pools cannot use lane-sliced grids (failover reroutes lanes
+    /// between replicas, which the compacted grid's fixed row ↔ lane
+    /// binding cannot express), so each replica pays the full masked grid
+    /// plus the wire cost of every chunk it consumes.
+    pub fn remote_masked_prefill(&self, tokens: f64, mean_ctx: f64, chunk_tokens: f64) -> f64 {
+        let n_chunks = (tokens / chunk_tokens.max(1.0)).ceil().max(1.0);
+        self.masked_prefill(tokens, mean_ctx) + n_chunks * self.chunk_transfer(chunk_tokens)
+    }
+
+    /// Extra wall seconds a mid-stream replica failure pays: the survivor
+    /// re-executes the dead replica's `replay_tokens` retained tokens
+    /// through the same remote masked path (chunk replay from the
+    /// coordinator's sequence buffer).
+    pub fn replay_overhead(&self, replay_tokens: f64, mean_ctx: f64, chunk_tokens: f64) -> f64 {
+        if replay_tokens <= 0.0 {
+            return 0.0;
+        }
+        self.remote_masked_prefill(replay_tokens, mean_ctx, chunk_tokens)
     }
 
     fn hidden_sq(&self) -> f64 {
@@ -181,7 +229,13 @@ mod tests {
             tp: 1.0,
             software_efficiency: 0.5,
             iter_overhead_s: 2e-4,
+            link_gbps: 0.0,
+            link_latency_s: 0.0,
         }
+    }
+
+    fn cm_linked() -> CostModel {
+        CostModel { link_gbps: 100.0, link_latency_s: 5e-5, ..cm() }
     }
 
     #[test]
@@ -264,6 +318,42 @@ mod tests {
             paged_lanes > dense_lanes,
             "paged {paged_lanes} must exceed the dense lane bound {dense_lanes}"
         );
+    }
+
+    #[test]
+    fn chunk_transfer_prices_latency_plus_bandwidth() {
+        let m = cm();
+        assert_eq!(m.chunk_transfer(4096.0), 0.0, "no link configured ⇒ free");
+        let l = cm_linked();
+        let t = l.chunk_transfer(4096.0);
+        let expect = 2.0 * 5e-5 + 8.0 * 4096.0 / (100.0 / 8.0 * 1e9);
+        assert!((t - expect).abs() < 1e-15, "t={t} expect={expect}");
+        // latency dominates small chunks; bandwidth dominates big ones
+        assert!(l.chunk_transfer(16.0) < 2.0 * l.chunk_transfer(8.0));
+        assert!(l.chunk_transfer(2e9) > 100.0 * l.chunk_transfer(2e7));
+    }
+
+    #[test]
+    fn remote_masked_prefill_adds_wire_cost_and_never_slices() {
+        let l = cm_linked();
+        let (tokens, ctx, chunk) = (16_384.0, 512.0, 512.0);
+        let local = l.masked_prefill(tokens, ctx);
+        let remote = l.remote_masked_prefill(tokens, ctx, chunk);
+        assert!(remote > local, "remote {remote} must exceed local masked {local}");
+        let wire = (tokens / chunk) * l.chunk_transfer(chunk);
+        assert!((remote - local - wire).abs() < 1e-12 * remote.max(1.0));
+        // the remote arm pays the full masked grid: a 4-replica local
+        // sliced pool beats one remote replica on compute alone
+        assert!(l.sliced_prefill(tokens, ctx, 4.0) < remote);
+    }
+
+    #[test]
+    fn replay_overhead_scales_with_retained_tokens() {
+        let l = cm_linked();
+        assert_eq!(l.replay_overhead(0.0, 512.0, 512.0), 0.0);
+        let half = l.replay_overhead(4096.0, 512.0, 512.0);
+        let full = l.replay_overhead(8192.0, 512.0, 512.0);
+        assert!(full > half && half > 0.0);
     }
 
     #[test]

@@ -127,6 +127,16 @@ pub struct SimConfig {
     /// context instead of a worst-case `prompt + max_len` row, which is
     /// what `peak_kv_bytes` measures and rolling admission scales against.
     pub kv_block_tokens: f64,
+    /// Remote reward replicas (the coordinator's `connect_addrs` arm):
+    /// > 0 switches the streamed reward pool to remote pricing — masked
+    /// full-shape grids (remote pools cannot lane-slice; failover reroutes
+    /// lanes, which a compacted grid's fixed row ↔ lane binding cannot
+    /// express) plus a framed round trip per streamed chunk over the link.
+    pub remote_replicas: usize,
+    /// inter-node link bandwidth in Gbit/s for the remote arm
+    pub link_gbps: f64,
+    /// one-way link latency per framed message, seconds
+    pub link_latency_s: f64,
 }
 
 impl SimConfig {
@@ -143,7 +153,19 @@ impl SimConfig {
             admission: SimAdmission::Step,
             admission_queue_depth: 256,
             kv_block_tokens: 0.0,
+            remote_replicas: 0,
+            link_gbps: 100.0,
+            link_latency_s: 5e-5,
         }
+    }
+
+    /// Host the streamed reward pool on `n` remote replicas over a link.
+    pub fn remote(mut self, n: usize, link_gbps: f64, link_latency_s: f64) -> Self {
+        assert!(link_gbps > 0.0, "the remote arm needs a positive link bandwidth");
+        self.remote_replicas = n;
+        self.link_gbps = link_gbps;
+        self.link_latency_s = link_latency_s;
+        self
     }
 
     /// Switch KV accounting to paged blocks of `block_tokens` tokens.
@@ -446,6 +468,8 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         tp: 1.0,
         software_efficiency: su.gen_eff * pipeline_gen_eff_factor(pipeline),
         iter_overhead_s: su.iter_overhead_s,
+        link_gbps: 0.0,
+        link_latency_s: 0.0,
     };
     let score_cm = CostModel {
         model: su.model,
@@ -453,6 +477,8 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         tp: su.cluster.n_score.max(1) as f64,
         software_efficiency: su.score_eff,
         iter_overhead_s: 0.0,
+        link_gbps: cfg.link_gbps,
+        link_latency_s: cfg.link_latency_s,
     };
     let train_cm = CostModel {
         model: su.model,
@@ -460,6 +486,8 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         tp: 1.0,
         software_efficiency: su.train_eff,
         iter_overhead_s: 0.0,
+        link_gbps: 0.0,
+        link_latency_s: 0.0,
     };
 
     let b = su.batch;
@@ -681,10 +709,17 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         let replicas = if intra { cfg.reward_replicas.max(1) as f64 } else { 1.0 };
         let reward_prefill_work =
             if su.use_reward_model { score_cm.prefill(total_tokens, mean_seq) } else { 0.0 };
-        let reward_prefill = if su.use_reward_model {
-            score_cm.sliced_prefill(total_tokens, mean_seq, replicas)
-        } else {
+        let reward_prefill = if !su.use_reward_model {
             0.0
+        } else if intra && cfg.remote_replicas > 0 {
+            // remote pools run masked full-shape grids — failover reroutes a
+            // dead replica's lanes onto a survivor, which a compacted grid's
+            // fixed row ↔ lane binding cannot express — so the pool overlaps
+            // but does not divide FLOPs, and every streamed chunk pays a
+            // framed round trip over the link.
+            score_cm.remote_masked_prefill(total_tokens, mean_seq, cfg.chunk_tokens)
+        } else {
+            score_cm.sliced_prefill(total_tokens, mean_seq, replicas)
         };
         // third pipeline stage: reference-model prefill, costed separately
         // from the actor-colocated value prefill (their sum equals the old
@@ -906,6 +941,8 @@ pub fn kv_lane_bounds(cfg: &SimConfig, block_tokens: f64) -> (f64, f64) {
         tp: 1.0,
         software_efficiency: su.gen_eff,
         iter_overhead_s: su.iter_overhead_s,
+        link_gbps: 0.0,
+        link_latency_s: 0.0,
     };
     let per_gpu = (su.cluster.gpu.mem_gb * 1e9 - su.model.weight_bytes()).max(0.0);
     let budget = per_gpu * su.cluster.n_gen as f64;
@@ -1126,6 +1163,28 @@ mod tests {
     }
 
     #[test]
+    fn remote_reward_arm_pays_wire_cost_but_keeps_the_overlap_win() {
+        let base = SimConfig::new(presets::stackex_7b_h200(), 60, 31);
+        let lat = |c: &SimConfig| steady_state_latency(&simulate(Pipeline::oppo(), c));
+        let mut local = base.clone();
+        local.reward_replicas = 2;
+        let mut remote = base.clone().remote(2, 100.0, 5e-5);
+        remote.reward_replicas = 2;
+        let (l, r) = (lat(&local), lat(&remote));
+        // masked full-shape grids + per-chunk framing: the remote pool
+        // overlaps but does not divide FLOPs, so it can only be slower
+        assert!(r >= l, "remote arm cannot beat local slicing: {l} -> {r}");
+        // ...yet still far better than giving up the intra-step overlap
+        let trl = steady_state_latency(&simulate(Pipeline::TrlSequential, &base));
+        assert!(r < trl, "remote streaming must still beat sequential: {r} vs {trl}");
+        // a fatter link converges toward the local masked cost
+        let mut fat = base.clone().remote(2, 100_000.0, 1e-7);
+        fat.reward_replicas = 2;
+        let f = lat(&fat);
+        assert!(f <= r, "more bandwidth never slows the step: {r} -> {f}");
+    }
+
+    #[test]
     fn deterministic_per_seed() {
         let a = quick(Pipeline::oppo(), 30, 9);
         let b = quick(Pipeline::oppo(), 30, 9);
@@ -1216,7 +1275,10 @@ mod tests {
     fn rolling_is_deterministic_per_seed() {
         let su = presets::traffic_7b_h200();
         let rate = su.arrival_rate;
-        let mk = || simulate(Pipeline::oppo(), &SimConfig::new(presets::traffic_7b_h200(), 25, 41).rolling_poisson(rate));
+        let mk = || {
+            let cfg = SimConfig::new(presets::traffic_7b_h200(), 25, 41).rolling_poisson(rate);
+            simulate(Pipeline::oppo(), &cfg)
+        };
         let a = mk();
         let b = mk();
         for (x, y) in a.records.iter().zip(&b.records) {

@@ -1,0 +1,254 @@
+//! `RemoteReplica` — the coordinator-side handle to one remote stage
+//! replica, shaped as a [`StageHandler`] so it slots into a [`StagePool`]
+//! beside in-process replicas and the `lane % replicas` routing cannot
+//! tell them apart.
+//!
+//! Failure semantics (the contract the failover path builds on):
+//!
+//! * **connect**: bounded exponential backoff (`attempts` tries) — a
+//!   replica that is not up at spawn is a spawn error, not a run error;
+//! * **per-send deadline**: every request runs under read/write timeouts;
+//!   a stalled replica is indistinguishable from a dead one and is treated
+//!   as dead;
+//! * **heartbeat**: a background thread pings the *idle* connection every
+//!   `heartbeat_ms` (it skips the beat when a request holds the socket —
+//!   traffic is its own liveness proof), so a silently dropped peer flips
+//!   the replica to dead between requests instead of at the next send;
+//! * **death is permanent**: a mid-stream transport fault poisons the
+//!   replica (`dead` flag) because its KV/seam state is unrecoverable —
+//!   there is no transparent reconnect.  Every subsequent request fails
+//!   fast, the pool retires the replica, and its lanes are re-homed onto
+//!   a survivor by replaying their retained chunks (see
+//!   `StreamSink::failover`).
+//!
+//! A handler error on the server (`ErrMsg` frame) is *not* death: it
+//! propagates as the per-request error, exactly like an in-process
+//! handler error, and the connection keeps serving.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{crc32, read_frame, write_frame};
+use super::wire::{self, kind, Hello, Params};
+use crate::coordinator::worker::{RefReq, RefResp, RewardReq, RewardResp};
+
+/// Connection tuning for one remote replica.
+#[derive(Clone, Debug)]
+pub struct ConnectOpts {
+    /// connect attempts before giving up (exponential backoff between)
+    pub attempts: u32,
+    /// first backoff; doubles per retry
+    pub base_backoff_ms: u64,
+    /// per-send write deadline
+    pub send_timeout_ms: u64,
+    /// per-request response deadline (covers the remote prefill itself)
+    pub recv_timeout_ms: u64,
+    /// idle-connection heartbeat period; 0 disables the heartbeat thread
+    pub heartbeat_ms: u64,
+}
+
+impl Default for ConnectOpts {
+    fn default() -> Self {
+        Self {
+            attempts: 5,
+            base_backoff_ms: 50,
+            send_timeout_ms: 5_000,
+            recv_timeout_ms: 30_000,
+            heartbeat_ms: 500,
+        }
+    }
+}
+
+struct Inner {
+    stream: Mutex<TcpStream>,
+    dead: AtomicBool,
+    addr: String,
+    nonce: AtomicU64,
+}
+
+impl Inner {
+    fn mark_dead(&self, why: &str) {
+        if !self.dead.swap(true, Ordering::SeqCst) {
+            log::warn!("remote replica {} marked dead: {why}", self.addr);
+        }
+    }
+
+    /// One request/response exchange under the socket lock.  Any transport
+    /// fault poisons the replica before returning the error.
+    fn exchange(&self, send_kind: u8, payload: &[u8], want: u8) -> Result<Vec<u8>> {
+        if self.dead.load(Ordering::SeqCst) {
+            bail!("remote replica {} is dead", self.addr);
+        }
+        let mut stream = self.stream.lock().unwrap_or_else(|e| e.into_inner());
+        if self.dead.load(Ordering::SeqCst) {
+            bail!("remote replica {} is dead", self.addr);
+        }
+        let result = (|| -> Result<(u8, Vec<u8>)> {
+            write_frame(&mut *stream, send_kind, payload)?;
+            read_frame(&mut *stream)
+        })();
+        match result {
+            Ok((k, resp)) if k == want => Ok(resp),
+            Ok((k, resp)) if k == kind::ERR => {
+                // per-request handler error; the connection stays healthy
+                bail!("remote {}: {}", self.addr, wire::decode_err(&resp)?)
+            }
+            Ok((k, _)) => {
+                self.mark_dead(&format!("protocol violation: frame kind {k}, wanted {want}"));
+                bail!("remote replica {} protocol violation (kind {k})", self.addr)
+            }
+            Err(e) => {
+                self.mark_dead(&format!("{e:#}"));
+                bail!("remote replica {} connection lost: {e:#}", self.addr)
+            }
+        }
+    }
+}
+
+/// Client handle to one remote stage replica (see module docs).
+pub struct RemoteReplica {
+    inner: Arc<Inner>,
+    /// duplicate handle used only to `shutdown` the socket on drop, which
+    /// unblocks a heartbeat stuck in a blocking read without waiting out
+    /// its deadline
+    shutdown_handle: Option<TcpStream>,
+    hb_stop: Arc<AtomicBool>,
+    hb_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RemoteReplica {
+    /// Connect with bounded backoff, handshake the stage name, and (when
+    /// `params` is given) distribute the parameter blob, verifying the
+    /// server's digest ack against the local bytes.
+    pub fn connect(
+        addr: &str,
+        stage: &str,
+        replica: usize,
+        params: Option<(&str, &[u8])>,
+        opts: &ConnectOpts,
+    ) -> Result<Self> {
+        let mut last_err = None;
+        let mut stream = None;
+        for attempt in 0..opts.attempts.max(1) {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    let backoff = opts.base_backoff_ms.saturating_mul(1 << attempt.min(6));
+                    std::thread::sleep(Duration::from_millis(backoff));
+                }
+            }
+        }
+        let stream = stream.with_context(|| {
+            format!(
+                "connecting to remote {stage} replica at {addr} ({} attempts): {:?}",
+                opts.attempts, last_err
+            )
+        })?;
+        stream.set_nodelay(true).ok();
+        stream.set_write_timeout(Some(Duration::from_millis(opts.send_timeout_ms.max(1)))).ok();
+        stream.set_read_timeout(Some(Duration::from_millis(opts.recv_timeout_ms.max(1)))).ok();
+        let shutdown_handle = stream.try_clone().ok();
+        let inner = Arc::new(Inner {
+            stream: Mutex::new(stream),
+            dead: AtomicBool::new(false),
+            addr: addr.to_string(),
+            nonce: AtomicU64::new(0),
+        });
+
+        // handshake before the heartbeat starts (single-threaded socket use)
+        let hello = Hello { stage: stage.to_string(), replica: replica as u32 };
+        inner
+            .exchange(kind::HELLO, &wire::encode_hello(&hello), kind::HELLO_ACK)
+            .context("stage handshake")?;
+        if let Some((which, data)) = params {
+            let p = Params { which: which.to_string(), data: data.to_vec() };
+            let ack = inner
+                .exchange(kind::PARAMS, &wire::encode_params(&p), kind::PARAMS_ACK)
+                .context("param distribution")?;
+            let remote_crc = wire::decode_params_ack(&ack)?;
+            let local_crc = crc32(data);
+            if remote_crc != local_crc {
+                bail!(
+                    "param digest mismatch for {which:?}: local {local_crc:#010x}, \
+                     remote {remote_crc:#010x} — replica would score with different weights"
+                );
+            }
+        }
+
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let hb_thread = (opts.heartbeat_ms > 0).then(|| {
+            let (inner2, stop2) = (inner.clone(), hb_stop.clone());
+            let period = Duration::from_millis(opts.heartbeat_ms);
+            std::thread::spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    std::thread::sleep(period);
+                    if stop2.load(Ordering::SeqCst) || inner2.dead.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // only beat an *idle* connection: an in-flight request
+                    // holds the lock and is its own liveness proof
+                    let Ok(mut stream) = inner2.stream.try_lock() else { continue };
+                    let nonce = inner2.nonce.fetch_add(1, Ordering::Relaxed);
+                    let beat = (|| -> Result<()> {
+                        write_frame(&mut *stream, kind::PING, &wire::encode_nonce(nonce))?;
+                        let (k, payload) = read_frame(&mut *stream)?;
+                        if k != kind::PONG || wire::decode_nonce(&payload)? != nonce {
+                            bail!("bad pong");
+                        }
+                        Ok(())
+                    })();
+                    if let Err(e) = beat {
+                        inner2.mark_dead(&format!("heartbeat failed: {e:#}"));
+                        break;
+                    }
+                }
+            })
+        });
+        Ok(Self { inner, shutdown_handle, hb_stop, hb_thread })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.inner.addr
+    }
+
+    /// Has a transport fault permanently poisoned this replica?
+    pub fn is_dead(&self) -> bool {
+        self.inner.dead.load(Ordering::SeqCst)
+    }
+
+    /// One reward request against the remote replica.
+    pub fn reward(&self, req: &RewardReq) -> Result<RewardResp> {
+        let payload = wire::encode_reward_req(req);
+        let resp = self.inner.exchange(kind::REWARD_REQ, &payload, kind::REWARD_RESP)?;
+        wire::decode_reward_resp(&resp)
+    }
+
+    /// One ref request against the remote replica.
+    pub fn reference(&self, req: &RefReq) -> Result<RefResp> {
+        let resp =
+            self.inner.exchange(kind::REF_REQ, &wire::encode_ref_req(req), kind::REF_RESP)?;
+        wire::decode_ref_resp(&resp)
+    }
+}
+
+impl Drop for RemoteReplica {
+    fn drop(&mut self) {
+        self.hb_stop.store(true, Ordering::SeqCst);
+        self.inner.dead.store(true, Ordering::SeqCst);
+        // unblock a heartbeat mid-read instead of waiting out its deadline
+        if let Some(s) = &self.shutdown_handle {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(t) = self.hb_thread.take() {
+            let _ = t.join();
+        }
+    }
+}

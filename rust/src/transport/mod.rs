@@ -1,0 +1,117 @@
+//! Multi-node stage transport: remote replica pools over framed TCP.
+//!
+//! The replica pools (`coordinator::stage::StagePool`) scale reward/ref
+//! scoring within one process; this module puts a wire behind the same
+//! submit/recv facade so replicas can live on remote nodes.  The layering:
+//!
+//! * [`frame`] — length-prefixed binary frames (versioned header, crc32);
+//! * [`wire`] — payload codec for the coordinator's own
+//!   `RewardReq`/`RewardResp`/`RefReq`/`RefResp` types plus connection
+//!   control (handshake, param distribution, heartbeat, per-request
+//!   errors);
+//! * [`client`] — [`RemoteReplica`], a connection handle with bounded
+//!   reconnect-backoff, per-send deadlines, and an idle heartbeat;
+//! * [`server`] — the `remote-stage` serve loop hosting one replica
+//!   behind a TCP listener;
+//! * [`toy`] — deterministic engine-free backends so the whole path
+//!   (including failover and chunk replay) runs under tier-1 tests.
+//!
+//! The in-process replica path is untouched: chunks still move zero-copy
+//! through the stage channels; only replicas configured via
+//! `connect_addrs` pay the serialization.  [`RemoteRewardHandler`] /
+//! [`RemoteRefHandler`] adapt a [`RemoteReplica`] to the [`StageHandler`]
+//! trait, so a `StagePool` can mix local and remote replicas and the
+//! `lane % replicas` routing — and everything above it — cannot tell them
+//! apart.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod toy;
+pub mod wire;
+
+pub use client::{ConnectOpts, RemoteReplica};
+pub use server::{serve, Backend, ServerHandle};
+pub use toy::{ToyRefBackend, ToyRewardBackend};
+
+use anyhow::Result;
+
+use crate::coordinator::stage::StageHandler;
+use crate::coordinator::worker::{RefReq, RefResp, RewardReq, RewardResp};
+
+/// `StageHandler` adapter: one remote reward replica behind the pool's
+/// worker thread.  Requests serialize onto the wire; the per-send
+/// deadline bounds how long a dead peer can stall the stage queue.
+pub struct RemoteRewardHandler {
+    pub client: RemoteReplica,
+}
+
+impl StageHandler for RemoteRewardHandler {
+    type Req = RewardReq;
+    type Resp = RewardResp;
+
+    fn handle(&mut self, req: RewardReq) -> Result<RewardResp> {
+        self.client.reward(&req)
+    }
+}
+
+/// `StageHandler` adapter for a remote ref replica.
+pub struct RemoteRefHandler {
+    pub client: RemoteReplica,
+}
+
+impl StageHandler for RemoteRefHandler {
+    type Req = RefReq;
+    type Resp = RefResp;
+
+    fn handle(&mut self, req: RefReq) -> Result<RefResp> {
+        self.client.reference(&req)
+    }
+}
+
+/// Parse one `stage@host:port` entry of the `connect_addrs` config knob.
+pub fn parse_stage_addr(entry: &str) -> Result<(&str, &str)> {
+    let (stage, addr) = entry
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("connect_addrs entry {entry:?} is not stage@host:port"))?;
+    anyhow::ensure!(
+        stage == "reward" || stage == "ref",
+        "connect_addrs entry {entry:?}: stage must be reward or ref"
+    );
+    anyhow::ensure!(
+        addr.contains(':') && !addr.ends_with(':'),
+        "connect_addrs entry {entry:?}: address must be host:port"
+    );
+    Ok((stage, addr))
+}
+
+/// Split a comma-separated `connect_addrs` value into per-stage address
+/// lists `(reward, ref)`.
+pub fn split_connect_addrs(spec: &str) -> Result<(Vec<String>, Vec<String>)> {
+    let mut reward = Vec::new();
+    let mut reference = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (stage, addr) = parse_stage_addr(entry)?;
+        match stage {
+            "reward" => reward.push(addr.to_string()),
+            _ => reference.push(addr.to_string()),
+        }
+    }
+    Ok((reward, reference))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_addr_parsing() {
+        let (rw, rf) =
+            split_connect_addrs("reward@10.0.0.2:7070, ref@10.0.0.3:7071,reward@n4:7070").unwrap();
+        assert_eq!(rw, vec!["10.0.0.2:7070", "n4:7070"]);
+        assert_eq!(rf, vec!["10.0.0.3:7071"]);
+        assert!(split_connect_addrs("critic@x:1").is_err());
+        assert!(split_connect_addrs("reward@nohost").is_err());
+        assert!(split_connect_addrs("").unwrap().0.is_empty());
+    }
+}

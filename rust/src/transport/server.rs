@@ -1,0 +1,232 @@
+//! The `remote-stage` serve loop: host one stage replica behind a TCP
+//! listener.
+//!
+//! One connection at a time — a remote replica has exactly one coordinator
+//! (its `StagePool` slot), so concurrent connections would mean two
+//! coordinators mutating one KV/seam state.  When a connection ends the
+//! loop accepts the next one, so a coordinator that reconnects at spawn
+//! (bounded backoff) finds the replica again.
+//!
+//! Request handling is strictly serial per connection (one frame in, one
+//! frame out), which is all the client ever does: the *pipelining* of
+//! multiple in-flight chunks happens coordinator-side in the
+//! `StageWorker`'s bounded queue, exactly as for in-process replicas.
+//! Handler errors go back as `ErrMsg` frames and the connection stays up —
+//! they surface coordinator-side as per-request stage errors, the same
+//! contract as in-process handlers.  Only transport faults (EOF, bad
+//! frame, timeout) end the connection.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{crc32, read_frame, write_frame};
+use super::wire::{self, kind};
+use crate::coordinator::worker::{RefReq, RefResp, RewardReq, RewardResp};
+
+/// What a serve loop hosts: one stage's request processor plus a hook for
+/// the one-shot parameter distribution at handshake.
+pub enum Backend {
+    Reward(Box<dyn FnMut(RewardReq) -> Result<RewardResp> + Send>),
+    Ref(Box<dyn FnMut(RefReq) -> Result<RefResp> + Send>),
+}
+
+impl Backend {
+    pub fn stage(&self) -> &'static str {
+        match self {
+            Backend::Reward(_) => "reward",
+            Backend::Ref(_) => "ref",
+        }
+    }
+}
+
+/// Callback invoked with the distributed parameter blob (`which`, raw
+/// bytes).  Returning an error refuses the handshake.  The ack always
+/// carries the CRC-32 of the received bytes, which the client checks
+/// against its local copy — digest equality is the "identical params"
+/// proof.
+pub type ParamsSink<'a> = dyn FnMut(&str, &[u8]) -> Result<()> + Send + 'a;
+
+/// Serve one established connection to completion.  Returns `Ok` on a
+/// clean client disconnect (EOF before a frame), `Err` on a transport
+/// fault mid-stream.
+pub fn serve_conn(
+    stream: &mut TcpStream,
+    backend: &mut Backend,
+    on_params: &mut ParamsSink,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut hello_seen = false;
+    loop {
+        let (k, payload) = match read_frame(stream) {
+            Ok(f) => f,
+            Err(e) => {
+                // EOF at a frame boundary is the client closing cleanly
+                let msg = format!("{e:#}");
+                if msg.contains("truncated frame (header)") {
+                    return Ok(());
+                }
+                return Err(e.context("reading request frame"));
+            }
+        };
+        match k {
+            kind::HELLO => {
+                let hello = wire::decode_hello(&payload)?;
+                if hello.stage != backend.stage() {
+                    let msg = format!(
+                        "stage mismatch: this server hosts {:?}, client wants {:?}",
+                        backend.stage(),
+                        hello.stage
+                    );
+                    write_frame(stream, kind::ERR, &wire::encode_err(&msg))?;
+                    bail!("{msg}");
+                }
+                hello_seen = true;
+                write_frame(stream, kind::HELLO_ACK, &[])?;
+            }
+            kind::PARAMS => {
+                let p = wire::decode_params(&payload)?;
+                match on_params(&p.which, &p.data) {
+                    Ok(()) => write_frame(
+                        stream,
+                        kind::PARAMS_ACK,
+                        &wire::encode_params_ack(crc32(&p.data)),
+                    )?,
+                    Err(e) => {
+                        let msg = format!("params rejected: {e:#}");
+                        write_frame(stream, kind::ERR, &wire::encode_err(&msg))?;
+                        bail!("{msg}");
+                    }
+                }
+            }
+            kind::PING => {
+                write_frame(stream, kind::PONG, &payload)?;
+            }
+            kind::REWARD_REQ => {
+                if !hello_seen {
+                    bail!("request before handshake");
+                }
+                let Backend::Reward(handler) = backend else {
+                    write_frame(stream, kind::ERR, &wire::encode_err("not a reward server"))?;
+                    continue;
+                };
+                let req = wire::decode_reward_req(&payload)?;
+                match handler(req) {
+                    Ok(resp) => {
+                        write_frame(stream, kind::REWARD_RESP, &wire::encode_reward_resp(&resp))?
+                    }
+                    Err(e) => write_frame(stream, kind::ERR, &wire::encode_err(&format!("{e:#}")))?,
+                }
+            }
+            kind::REF_REQ => {
+                if !hello_seen {
+                    bail!("request before handshake");
+                }
+                let Backend::Ref(handler) = backend else {
+                    write_frame(stream, kind::ERR, &wire::encode_err("not a ref server"))?;
+                    continue;
+                };
+                let req = wire::decode_ref_req(&payload)?;
+                match handler(req) {
+                    Ok(resp) => {
+                        write_frame(stream, kind::REF_RESP, &wire::encode_ref_resp(&resp))?
+                    }
+                    Err(e) => write_frame(stream, kind::ERR, &wire::encode_err(&format!("{e:#}")))?,
+                }
+            }
+            other => bail!("unexpected frame kind {other} from client"),
+        }
+    }
+}
+
+/// Blocking accept-and-serve loop for the CLI `remote-stage` mode.
+/// `max_conns` bounds how many connections are served before returning
+/// (`None` = forever) — tests and the loopback smoke use `Some(1)`.
+pub fn serve(
+    listener: &TcpListener,
+    backend: &mut Backend,
+    on_params: &mut ParamsSink,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let mut served = 0usize;
+    loop {
+        if let Some(max) = max_conns {
+            if served >= max {
+                return Ok(());
+            }
+        }
+        let (mut stream, peer) = listener.accept().context("accepting connection")?;
+        log::info!("remote-stage: serving {} for {peer}", backend.stage());
+        if let Err(e) = serve_conn(&mut stream, backend, on_params) {
+            log::warn!("remote-stage: connection from {peer} ended: {e:#}");
+        }
+        served += 1;
+    }
+}
+
+/// A server running on its own thread — the test/bench harness form, with
+/// a kill switch for fault injection.
+pub struct ServerHandle {
+    pub addr: String,
+    conn: Arc<Mutex<Option<TcpStream>>>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Bind an ephemeral loopback port and serve `backend` on a thread.
+    /// Accepts any number of sequential connections until stopped.
+    pub fn spawn(mut backend: Backend) -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding loopback")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let conn: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (conn2, stop2) = (conn.clone(), stop.clone());
+        let thread = std::thread::Builder::new()
+            .name(format!("remote-{}", backend.stage()))
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((mut stream, _peer)) => {
+                            stream.set_nonblocking(false).ok();
+                            *conn2.lock().unwrap() = stream.try_clone().ok();
+                            let _ = serve_conn(
+                                &mut stream,
+                                &mut backend,
+                                &mut |_which, _data| Ok(()),
+                            );
+                            *conn2.lock().unwrap() = None;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Self { addr, conn, stop, thread: Some(thread) })
+    }
+
+    /// Fault injection: forcibly shut down the live connection (the client
+    /// sees a mid-stream transport fault) and stop accepting new ones —
+    /// the replica is dead, permanently.
+    pub fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(conn) = self.conn.lock().unwrap().as_ref() {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.kill();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

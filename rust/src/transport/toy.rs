@@ -1,0 +1,232 @@
+//! Deterministic CPU stage backends — engine-free remote replicas.
+//!
+//! The real remote-stage server hosts an engine-backed `RewardOps` /
+//! `RefOps` replica, which needs compiled artifacts.  These toy backends
+//! implement the *same streaming contract* as pure host arithmetic, so the
+//! transport layer — framing, routing, heartbeat, failover, chunk replay —
+//! is exercised end-to-end by tier-1 tests (and the CLI's
+//! `remote-stage --backend toy`) on any machine.
+//!
+//! Contract mirrored from the engine handlers, masked full-shape path:
+//!
+//! * per-row streaming state advances only where `n_valid > 0`;
+//! * a chunk must start exactly where the row's state left off
+//!   (`start == pos`) — **except** `start == 0`, which resets the row (the
+//!   lane-recycling path rolling admission already relies on, and exactly
+//!   what chunk replay after a failover produces);
+//! * reward: a score per position, deterministic in the full token prefix;
+//!   picks read scores at final-token positions, scattered through
+//!   `lane_map`;
+//! * ref: a log-prob per position, deterministic in (token, position).
+//!
+//! The discontinuity check makes these backends as order-strict as the
+//! real KV/seam state: a replay that skipped or reordered chunks would
+//! error, not silently produce matching scores.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::worker::{RefReq, RefResp, RewardReq, RewardResp};
+
+/// Deterministic per-position score: a decaying fold over the token
+/// prefix.  Everything stays in f32 so the value is bit-reproducible
+/// across runs and across replicas.
+fn fold(acc: f32, token: i32, pos: usize) -> f32 {
+    acc * 0.93f32 + (token as f32) * 1e-3 + (pos as f32) * 1e-4
+}
+
+fn score_of(acc: f32) -> f32 {
+    (acc * 0.11f32).sin()
+}
+
+/// Deterministic ref log-prob for (token, absolute position).
+fn ref_logp_of(token: i32, pos: usize) -> f32 {
+    -((token as f32) * 7e-4 + (pos as f32) * 3e-3 + 1.0).ln()
+}
+
+/// Engine-free reward replica: per-row `(pos, acc)` streaming state.
+#[derive(Default)]
+pub struct ToyRewardBackend {
+    rows: HashMap<usize, (usize, f32)>,
+}
+
+impl ToyRewardBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn handle(&mut self, req: RewardReq) -> Result<RewardResp> {
+        match req {
+            RewardReq::Reset => {
+                self.rows.clear();
+                Ok(RewardResp::ResetDone)
+            }
+            RewardReq::Stream { chunk, start, n_valid, picks, lane_map, .. }
+            | RewardReq::StreamPaged { chunk, start, n_valid, picks, lane_map, .. } => {
+                let rows = start.len();
+                ensure!(rows > 0 && chunk.len() % rows == 0, "malformed chunk grid");
+                let c = chunk.len() / rows;
+                let mut scores = vec![0f32; rows * c];
+                for row in 0..rows {
+                    let nv = n_valid[row] as usize;
+                    if nv == 0 {
+                        continue;
+                    }
+                    let st = start[row] as usize;
+                    let entry = self.rows.entry(row).or_insert((0, 0.0));
+                    if st == 0 {
+                        *entry = (0, 0.0); // lane recycled or chunk replay
+                    }
+                    let (pos, acc) = *entry;
+                    if st != pos {
+                        bail!("toy reward discontinuity on row {row}: at {pos}, chunk starts {st}");
+                    }
+                    let mut acc = acc;
+                    for j in 0..nv {
+                        acc = fold(acc, chunk[row * c + j], st + j);
+                        scores[row * c + j] = score_of(acc);
+                    }
+                    *entry = (st + nv, acc);
+                }
+                Ok(RewardResp::StreamScores(
+                    picks
+                        .iter()
+                        .map(|p| (lane_map[p.lane], scores[p.lane * c + p.idx_in_chunk]))
+                        .collect(),
+                ))
+            }
+            RewardReq::ScoreFull { tokens, last_idx } => {
+                // monolithic scoring over [G, S]: fold each row's prefix up
+                // to its final token — the dense cross-check for tests
+                let g = last_idx.len();
+                ensure!(g > 0 && tokens.len() % g == 0, "malformed full grid");
+                let s = tokens.len() / g;
+                let mut out = Vec::with_capacity(g);
+                for row in 0..g {
+                    let mut acc = 0f32;
+                    for j in 0..=(last_idx[row] as usize).min(s - 1) {
+                        acc = fold(acc, tokens[row * s + j], j);
+                    }
+                    out.push(score_of(acc));
+                }
+                Ok(RewardResp::FullScores(out))
+            }
+        }
+    }
+}
+
+/// Engine-free ref replica: per-row position cursor (the log-prob itself
+/// is position-local, but the cursor enforces stream continuity exactly
+/// like the real boundary-seam state).
+#[derive(Default)]
+pub struct ToyRefBackend {
+    rows: HashMap<usize, usize>,
+}
+
+impl ToyRefBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn handle(&mut self, req: RefReq) -> Result<RefResp> {
+        match req {
+            RefReq::Reset => {
+                self.rows.clear();
+                Ok(RefResp::ResetDone)
+            }
+            RefReq::Stream { chunk, start, n_valid, .. }
+            | RefReq::StreamPaged { chunk, start, n_valid, .. } => {
+                let rows = start.len();
+                ensure!(rows > 0 && chunk.len() % rows == 0, "malformed chunk grid");
+                let c = chunk.len() / rows;
+                let mut logps = vec![0f32; rows * c];
+                for row in 0..rows {
+                    let nv = n_valid[row] as usize;
+                    if nv == 0 {
+                        continue;
+                    }
+                    let st = start[row] as usize;
+                    let pos = self.rows.entry(row).or_insert(0);
+                    if st == 0 {
+                        *pos = 0;
+                    }
+                    if st != *pos {
+                        bail!("toy ref discontinuity on row {row}: at {pos}, chunk starts {st}");
+                    }
+                    for j in 0..nv {
+                        logps[row * c + j] = ref_logp_of(chunk[row * c + j], st + j);
+                    }
+                    *pos = st + nv;
+                }
+                Ok(RefResp::StreamLogps(logps))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::Pick;
+
+    #[test]
+    fn streamed_matches_full_and_enforces_continuity() {
+        let tokens: Vec<i32> = (1..=8).collect();
+        // stream one row in two chunks of 4; pick the final position
+        let mut b = ToyRewardBackend::new();
+        let r1 = b.handle(RewardReq::Stream {
+            entry: String::new(),
+            chunk: tokens[0..4].to_vec(),
+            start: vec![0],
+            n_valid: vec![4],
+            picks: vec![],
+            lane_map: vec![0],
+        });
+        assert!(r1.is_ok());
+        let RewardResp::StreamScores(s2) = b
+            .handle(RewardReq::Stream {
+                entry: String::new(),
+                chunk: tokens[4..8].to_vec(),
+                start: vec![4],
+                n_valid: vec![4],
+                picks: vec![Pick { lane: 0, idx_in_chunk: 3 }],
+                lane_map: vec![0],
+            })
+            .unwrap()
+        else {
+            panic!("expected scores")
+        };
+        let RewardResp::FullScores(full) =
+            b.handle(RewardReq::ScoreFull { tokens: tokens.clone(), last_idx: vec![7] }).unwrap()
+        else {
+            panic!("expected full scores")
+        };
+        assert_eq!(s2, vec![(0, full[0])]);
+        // continuity: skipping a chunk errors (state is at 8, start 12)
+        let err = b.handle(RewardReq::Stream {
+            entry: String::new(),
+            chunk: vec![1; 4],
+            start: vec![12],
+            n_valid: vec![4],
+            picks: vec![],
+            lane_map: vec![0],
+        });
+        assert!(err.is_err());
+        // start == 0 resets (replay path) and reproduces the same score
+        let RewardResp::StreamScores(replay) = b
+            .handle(RewardReq::Stream {
+                entry: String::new(),
+                chunk: tokens.clone(),
+                start: vec![0],
+                n_valid: vec![8],
+                picks: vec![Pick { lane: 0, idx_in_chunk: 7 }],
+                lane_map: vec![0],
+            })
+            .unwrap()
+        else {
+            panic!("expected scores")
+        };
+        assert_eq!(replay, vec![(0, full[0])]);
+    }
+}

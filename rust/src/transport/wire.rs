@@ -1,0 +1,460 @@
+//! Message payload codec for the stage wire — the typed layer above
+//! [`frame`](super::frame).
+//!
+//! One frame kind per message type; payloads are hand-rolled little-endian
+//! encodings (the offline crate set ships no serde).  The messages are the
+//! *actual* coordinator request/response types ([`RewardReq`],
+//! [`RewardResp`], [`RefReq`], [`RefResp`]) — a remote replica speaks the
+//! same vocabulary as an in-process one, so [`StagePool`] routing cannot
+//! tell them apart.  Control messages cover the connection lifecycle:
+//!
+//! * `Hello`/`HelloAck` — stage-name handshake (a reward client refusing a
+//!   ref server is a config error caught at connect, not mid-step);
+//! * `Params`/`ParamsAck` — one-shot parameter distribution at spawn: the
+//!   coordinator ships the raw `params_<stage>.bin` bytes, the server loads
+//!   them and acks with their CRC-32, and the client verifies the digest
+//!   against its local copy — proof both ends score with identical weights;
+//! * `Ping`/`Pong` — heartbeat (client-initiated, only on an idle
+//!   connection);
+//! * `ErrMsg` — a *per-request* handler error.  The connection stays up and
+//!   the error propagates through the stage channel exactly like an
+//!   in-process handler error; only transport faults kill the replica.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::worker::{Pick, RefReq, RefResp, RewardReq, RewardResp};
+
+/// Frame kind bytes (`frame::write_frame`'s `kind`).
+pub mod kind {
+    pub const HELLO: u8 = 1;
+    pub const HELLO_ACK: u8 = 2;
+    pub const PARAMS: u8 = 3;
+    pub const PARAMS_ACK: u8 = 4;
+    pub const PING: u8 = 5;
+    pub const PONG: u8 = 6;
+    pub const REWARD_REQ: u8 = 7;
+    pub const REWARD_RESP: u8 = 8;
+    pub const REF_REQ: u8 = 9;
+    pub const REF_RESP: u8 = 10;
+    pub const ERR: u8 = 11;
+}
+
+// ---------------------------------------------------------------------------
+// byte-level helpers
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn i32_vec(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn f32_vec(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn usize_vec(&mut self, v: &[usize]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&(x as u32).to_le_bytes());
+        }
+    }
+}
+
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "short payload: need {n} more bytes");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Length prefix for a sequence of `elem_bytes`-wide elements, bounded
+    /// by the remaining payload so a corrupt count cannot trigger a huge
+    /// allocation.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.buf.len() - self.pos,
+            "length prefix {n} overruns payload"
+        );
+        Ok(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).context("non-utf8 string field")
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.len_prefix(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn i32_vec(&mut self) -> Result<Vec<i32>> {
+        let n = self.len_prefix(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn usize_vec(&mut self) -> Result<Vec<usize>> {
+        let n = self.len_prefix(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+            .collect())
+    }
+
+    pub fn finish(self) -> Result<()> {
+        ensure!(self.pos == self.buf.len(), "{} trailing payload bytes", self.buf.len() - self.pos);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// control messages
+// ---------------------------------------------------------------------------
+
+/// Connection handshake: which stage the client expects to talk to and
+/// which replica slot it fills (diagnostics only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub stage: String,
+    pub replica: u32,
+}
+
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str(&h.stage);
+    w.u32(h.replica);
+    w.into_bytes()
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
+    let mut r = Reader::new(payload);
+    let h = Hello { stage: r.str()?, replica: r.u32()? };
+    r.finish()?;
+    Ok(h)
+}
+
+/// One-shot parameter distribution: `which` names the param set
+/// (reward|ref), `data` is the raw little-endian f32 blob in manifest
+/// order (the exact `params_<which>.bin` contents).
+pub struct Params {
+    pub which: String,
+    pub data: Vec<u8>,
+}
+
+pub fn encode_params(p: &Params) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str(&p.which);
+    w.bytes(&p.data);
+    w.into_bytes()
+}
+
+pub fn decode_params(payload: &[u8]) -> Result<Params> {
+    let mut r = Reader::new(payload);
+    let p = Params { which: r.str()?, data: r.bytes()? };
+    r.finish()?;
+    Ok(p)
+}
+
+pub fn encode_params_ack(crc: u32) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(crc);
+    w.into_bytes()
+}
+
+pub fn decode_params_ack(payload: &[u8]) -> Result<u32> {
+    let mut r = Reader::new(payload);
+    let crc = r.u32()?;
+    r.finish()?;
+    Ok(crc)
+}
+
+pub fn encode_nonce(nonce: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(nonce);
+    w.into_bytes()
+}
+
+pub fn decode_nonce(payload: &[u8]) -> Result<u64> {
+    let mut r = Reader::new(payload);
+    let n = r.u64()?;
+    r.finish()?;
+    Ok(n)
+}
+
+pub fn encode_err(msg: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str(msg);
+    w.into_bytes()
+}
+
+pub fn decode_err(payload: &[u8]) -> Result<String> {
+    let mut r = Reader::new(payload);
+    let m = r.str()?;
+    r.finish()?;
+    Ok(m)
+}
+
+// ---------------------------------------------------------------------------
+// stage requests / responses
+// ---------------------------------------------------------------------------
+
+fn put_picks(w: &mut Writer, picks: &[Pick]) {
+    w.u32(picks.len() as u32);
+    for p in picks {
+        w.u32(p.lane as u32);
+        w.u32(p.idx_in_chunk as u32);
+    }
+}
+
+fn get_picks(r: &mut Reader) -> Result<Vec<Pick>> {
+    let n = r.len_prefix(8)?;
+    let mut picks = Vec::with_capacity(n);
+    for _ in 0..n {
+        picks.push(Pick { lane: r.u32()? as usize, idx_in_chunk: r.u32()? as usize });
+    }
+    Ok(picks)
+}
+
+pub fn encode_reward_req(req: &RewardReq) -> Vec<u8> {
+    let mut w = Writer::new();
+    match req {
+        RewardReq::Stream { entry, chunk, start, n_valid, picks, lane_map } => {
+            w.u8(0);
+            w.str(entry);
+            w.i32_vec(chunk);
+            w.i32_vec(start);
+            w.i32_vec(n_valid);
+            put_picks(&mut w, picks);
+            w.usize_vec(lane_map);
+        }
+        RewardReq::StreamPaged { entry, chunk, start, n_valid, picks, lane_map, table } => {
+            w.u8(1);
+            w.str(entry);
+            w.i32_vec(chunk);
+            w.i32_vec(start);
+            w.i32_vec(n_valid);
+            put_picks(&mut w, picks);
+            w.usize_vec(lane_map);
+            w.i32_vec(table);
+        }
+        RewardReq::ScoreFull { tokens, last_idx } => {
+            w.u8(2);
+            w.i32_vec(tokens);
+            w.i32_vec(last_idx);
+        }
+        RewardReq::Reset => w.u8(3),
+    }
+    w.into_bytes()
+}
+
+pub fn decode_reward_req(payload: &[u8]) -> Result<RewardReq> {
+    let mut r = Reader::new(payload);
+    let req = match r.u8()? {
+        0 => RewardReq::Stream {
+            entry: r.str()?,
+            chunk: r.i32_vec()?,
+            start: r.i32_vec()?,
+            n_valid: r.i32_vec()?,
+            picks: get_picks(&mut r)?,
+            lane_map: r.usize_vec()?,
+        },
+        1 => RewardReq::StreamPaged {
+            entry: r.str()?,
+            chunk: r.i32_vec()?,
+            start: r.i32_vec()?,
+            n_valid: r.i32_vec()?,
+            picks: get_picks(&mut r)?,
+            lane_map: r.usize_vec()?,
+            table: r.i32_vec()?,
+        },
+        2 => RewardReq::ScoreFull { tokens: r.i32_vec()?, last_idx: r.i32_vec()? },
+        3 => RewardReq::Reset,
+        v => bail!("unknown RewardReq variant {v}"),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+pub fn encode_reward_resp(resp: &RewardResp) -> Vec<u8> {
+    let mut w = Writer::new();
+    match resp {
+        RewardResp::StreamScores(scores) => {
+            w.u8(0);
+            w.u32(scores.len() as u32);
+            for &(lane, score) in scores {
+                w.u32(lane as u32);
+                w.f32_vec(&[score]);
+            }
+        }
+        RewardResp::FullScores(scores) => {
+            w.u8(1);
+            w.f32_vec(scores);
+        }
+        RewardResp::ResetDone => w.u8(2),
+    }
+    w.into_bytes()
+}
+
+pub fn decode_reward_resp(payload: &[u8]) -> Result<RewardResp> {
+    let mut r = Reader::new(payload);
+    let resp = match r.u8()? {
+        0 => {
+            let n = r.len_prefix(8)?;
+            let mut scores = Vec::with_capacity(n);
+            for _ in 0..n {
+                let lane = r.u32()? as usize;
+                let v = r.f32_vec()?;
+                ensure!(v.len() == 1, "malformed StreamScores entry");
+                scores.push((lane, v[0]));
+            }
+            RewardResp::StreamScores(scores)
+        }
+        1 => RewardResp::FullScores(r.f32_vec()?),
+        2 => RewardResp::ResetDone,
+        v => bail!("unknown RewardResp variant {v}"),
+    };
+    r.finish()?;
+    Ok(resp)
+}
+
+pub fn encode_ref_req(req: &RefReq) -> Vec<u8> {
+    let mut w = Writer::new();
+    match req {
+        RefReq::Stream { entry, chunk, start, n_valid } => {
+            w.u8(0);
+            w.str(entry);
+            w.i32_vec(chunk);
+            w.i32_vec(start);
+            w.i32_vec(n_valid);
+        }
+        RefReq::StreamPaged { entry, chunk, start, n_valid, table } => {
+            w.u8(1);
+            w.str(entry);
+            w.i32_vec(chunk);
+            w.i32_vec(start);
+            w.i32_vec(n_valid);
+            w.i32_vec(table);
+        }
+        RefReq::Reset => w.u8(2),
+    }
+    w.into_bytes()
+}
+
+pub fn decode_ref_req(payload: &[u8]) -> Result<RefReq> {
+    let mut r = Reader::new(payload);
+    let req = match r.u8()? {
+        0 => RefReq::Stream {
+            entry: r.str()?,
+            chunk: r.i32_vec()?,
+            start: r.i32_vec()?,
+            n_valid: r.i32_vec()?,
+        },
+        1 => RefReq::StreamPaged {
+            entry: r.str()?,
+            chunk: r.i32_vec()?,
+            start: r.i32_vec()?,
+            n_valid: r.i32_vec()?,
+            table: r.i32_vec()?,
+        },
+        2 => RefReq::Reset,
+        v => bail!("unknown RefReq variant {v}"),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+pub fn encode_ref_resp(resp: &RefResp) -> Vec<u8> {
+    let mut w = Writer::new();
+    match resp {
+        RefResp::StreamLogps(lp) => {
+            w.u8(0);
+            w.f32_vec(lp);
+        }
+        RefResp::ResetDone => w.u8(1),
+    }
+    w.into_bytes()
+}
+
+pub fn decode_ref_resp(payload: &[u8]) -> Result<RefResp> {
+    let mut r = Reader::new(payload);
+    let resp = match r.u8()? {
+        0 => RefResp::StreamLogps(r.f32_vec()?),
+        1 => RefResp::ResetDone,
+        v => bail!("unknown RefResp variant {v}"),
+    };
+    r.finish()?;
+    Ok(resp)
+}
