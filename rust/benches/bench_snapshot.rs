@@ -1,4 +1,4 @@
-//! Pinned-seed performance snapshot → `BENCH_9.json`.
+//! Pinned-seed performance snapshot → `BENCH_10.json`.
 //!
 //! Runs the deterministic simulator on the paper's main preset at a fixed
 //! seed and emits a machine-readable snapshot of the metrics this repo's
@@ -12,7 +12,11 @@
 //! multi-node transport, a `transport` section pricing the remote-replica
 //! arm against its local sliced twin from the cost model's closed-form
 //! link terms (per-chunk wire cost, masked-grid penalty, chunk-replay
-//! failover overhead) alongside host-measured frame codec throughput.
+//! failover overhead) alongside host-measured frame codec throughput —
+//! and, new with learned controllers, a `learned_controller` section
+//! pricing the frozen Q-policy (trained at the CI-pinned
+//! `--episodes 50 --seed 0` setting) against the heuristic controllers on
+//! both benchmark presets, step throughput head to head.
 //! The sim and cost-model sections are bit-reproducible on any machine —
 //! same seed, same numbers — so the committed snapshot diffs cleanly
 //! against a re-run; the `host` section (peak RSS, hot-path timings,
@@ -22,7 +26,7 @@
 //! across PRs.
 //!
 //! Usage:
-//!   cargo bench --bench bench_snapshot              # writes ../BENCH_9.json
+//!   cargo bench --bench bench_snapshot              # writes ../BENCH_10.json
 //!   cargo bench --bench bench_snapshot -- --out /tmp/snap.json
 
 use std::time::Instant;
@@ -46,6 +50,11 @@ const LINK_GBPS: f64 = 100.0;
 const LINK_LATENCY_S: f64 = 5e-5;
 /// Remote reward pool size for the transport comparison.
 const REMOTE_POOL: f64 = 2.0;
+/// Controller training budget — the same pinned setting the CI train-smoke
+/// runs (`oppo train-controller --episodes 50 --seed 0`), so the committed
+/// block and the CI assertion price the identical frozen policy.
+const TRAIN_EPISODES: u64 = 50;
+const TRAIN_SEED: u64 = 0;
 
 fn cfg(reward_replicas: usize, ref_replicas: usize) -> SimConfig {
     let mut c = SimConfig::new(presets::stackex_7b_h200(), STEPS, SEED);
@@ -266,6 +275,19 @@ fn transport_block() -> Value {
     ])
 }
 
+/// The `learned_controller` section: train the Q-policy at the CI-pinned
+/// setting and price the frozen artifact against the heuristic controllers
+/// on both benchmark presets.  Pure sim — bit-reproducible anywhere.
+fn learned_controller_block() -> Value {
+    let (policy, report) = oppo::sim::train_qpolicy(TRAIN_EPISODES, TRAIN_SEED);
+    let mut doc = match report.to_json() {
+        Value::Obj(m) => m,
+        _ => unreachable!("TrainReport::to_json returns an object"),
+    };
+    doc.insert("artifact".into(), oppo::ctl::qpolicy::artifact_meta(&policy));
+    Value::Obj(doc)
+}
+
 fn main() {
     let mut out_path: Option<String> = None;
     let mut args = std::env::args().skip(1);
@@ -276,7 +298,7 @@ fn main() {
         // anything else (--bench, harness flags) is cargo's — ignore
     }
     let out_path = out_path
-        .unwrap_or_else(|| format!("{}/../BENCH_9.json", env!("CARGO_MANIFEST_DIR")));
+        .unwrap_or_else(|| format!("{}/../BENCH_10.json", env!("CARGO_MANIFEST_DIR")));
 
     let t0 = Instant::now();
     let mut rows = Vec::new();
@@ -339,6 +361,7 @@ fn main() {
     ]);
     let knee = min_replicas_actor_bound(&cfg(1, 1), KNEE_MAX, KNEE_TOL);
     let transport = transport_block();
+    let learned = learned_controller_block();
 
     let host = json::obj(vec![
         ("note", json::s("machine-dependent; refreshed by each local run")),
@@ -359,13 +382,14 @@ fn main() {
         ("scenarios", json::obj(svals)),
         ("sliced_knee_reward_replicas", json::num(knee as f64)),
         ("paged_kv", paged_kv),
-        ("transport", transport),
+        ("transport", transport.clone()),
+        ("learned_controller", learned.clone()),
         ("host", host),
     ]);
     let text = json::to_string(&doc) + "\n";
     std::fs::write(&out_path, &text).expect("write snapshot");
 
-    print_table("BENCH_9 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
+    print_table("BENCH_10 snapshot (stackex-7b-h200, seed 600, last-half means)", &rows);
     println!("sliced knee: {knee} reward replicas (tol {KNEE_TOL})");
     println!(
         "paged kv: peak {paged_peak} vs dense {dense_peak} ({:.0}% reduction), \
@@ -383,6 +407,13 @@ fn main() {
             get("replay_overhead_frac"),
             get("frame_encode_mb_s"),
         );
+    }
+    if let Ok(arms) = learned.get("arms").and_then(|a| a.as_arr()) {
+        for arm in arms {
+            let name = arm.get("preset").and_then(|v| v.as_str()).unwrap_or("?");
+            let speedup = arm.get("speedup").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            println!("learned controller vs heuristic on {name}: {speedup:.4}x");
+        }
     }
     println!("wrote {out_path}");
 }

@@ -5,6 +5,7 @@
 //! oppo train    [--config FILE] [--set k=v ...]    real-compute RLHF run
 //! oppo dpo      [--config FILE] [--set k=v ...]    DPO generalization run
 //! oppo simulate [--pipeline P] [--setup S] [--steps N] [--seed K]
+//! oppo train-controller [--episodes N] [--seed K] [--out FILE]
 //! oppo figures  [--only NAME]                      regenerate paper artifacts
 //! oppo info     [--artifacts DIR]                  inspect the AOT manifest
 //! ```
@@ -77,6 +78,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "dpo" => cmd_dpo(&args),
         "simulate" => cmd_simulate(&args),
+        "train-controller" => cmd_train_controller(&args),
         "figures" => cmd_figures(&args),
         "info" => cmd_info(&args),
         "remote-stage" => cmd_remote_stage(&args),
@@ -96,11 +98,19 @@ USAGE:
   oppo dpo      [--config FILE] [--set section.key=value ...]
   oppo simulate [--pipeline trl|oppo|oppo-no-intra|oppo-no-inter|areal|verl-dp|verl-dp-sp]
                 [--setup stackex-7b|stackex-3b|gsm8k-7b|opencoder-3b|multinode|table4]
-                [--steps N] [--seed K]
+                [--steps N] [--seed K] [--controller heuristic|learned] [--policy FILE]
+  oppo train-controller [--episodes N] [--seed K] [--out FILE]
   oppo figures  [--only fig2a|fig2b|fig2c|fig3|fig4|fig5|fig6|fig7a|fig7b|table1|table2|table3|table4]
   oppo info     [--artifacts DIR]
   oppo remote-stage --stage reward|ref --listen HOST:PORT
                 [--backend engine|toy] [--artifacts DIR] [--max-conns N]
+
+train-controller runs pinned-seed Q-learning inside the simulator (episodes
+alternate the stackex-7b and traffic presets), freezes the policy to a
+versioned artifact, and prices the learned arm against the heuristic
+controllers on both presets.  Deploy it with `controller = \"learned\"` +
+`controller_policy = FILE` in the run config, or
+`oppo simulate --controller learned --policy FILE`.
 
 remote-stage hosts one stage replica behind a framed-TCP listener; point a
 training run at it via run.connect_addrs = \"reward@HOST:PORT,...\" (with
@@ -172,7 +182,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let setup = setup_by_name(args.flag("setup").unwrap_or("stackex-7b"))?;
     let steps = args.flag_usize("steps", 120)?;
     let seed = args.flag_u64("seed", 11)?;
-    let log = simulate(pipeline, &SimConfig::new(setup.clone(), steps, seed));
+    let mut cfg = SimConfig::new(setup.clone(), steps, seed);
+    match args.flag("controller").unwrap_or("heuristic") {
+        "heuristic" => {}
+        "learned" => {
+            let path = args.flag("policy").context(
+                "--controller learned needs --policy FILE (train one with \
+                 `oppo train-controller`)",
+            )?;
+            cfg = cfg.learned(crate::ctl::QPolicy::load(path)?);
+        }
+        other => bail!("unknown controller {other:?} (want heuristic|learned)"),
+    }
+    let log = simulate(pipeline, &cfg);
     println!(
         "{} on {}: {} steps, steady-state latency {:.2}s, final reward {:.3}, \
          time-to-{:.2} {}",
@@ -235,6 +257,33 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if run("table4") {
         emit("table4", "Table 4 — framework comparison", tables::table4())?;
     }
+    Ok(())
+}
+
+/// `train-controller`: pinned-seed Q-learning in the simulator, frozen to
+/// a versioned artifact, plus a heuristic-vs-learned pricing pass on both
+/// benchmark presets.  The `arm` lines are stable and machine-parseable —
+/// the CI train-smoke greps them to assert the learned arm's step
+/// throughput is no worse than the heuristics'.
+fn cmd_train_controller(args: &Args) -> Result<()> {
+    let episodes = args.flag_u64("episodes", 50)?;
+    let seed = args.flag_u64("seed", 0)?;
+    let out = args.flag("out").unwrap_or("artifacts/controller_q.json");
+    anyhow::ensure!(episodes > 0, "--episodes must be positive");
+
+    let (policy, report) = crate::sim::train_qpolicy(episodes, seed);
+    println!(
+        "trained controller: episodes={} seed={} visited_cells={}",
+        report.episodes, report.seed, report.visited_cells
+    );
+    for arm in &report.arms {
+        println!(
+            "arm {}: heuristic_steps_per_s={:.6} learned_steps_per_s={:.6} speedup={:.4}",
+            arm.preset, arm.heuristic_steps_per_s, arm.learned_steps_per_s, arm.speedup
+        );
+    }
+    policy.save(out)?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -141,6 +141,14 @@ pub struct TrainConfig {
     pub adaptive_delta: bool,
     /// Chunk controller exploration period in steps (paper: "every 50").
     pub explore_every: usize,
+    /// Control-loop arm: `"heuristic"` (the paper's §3.1 chunk exploration
+    /// + §3.2 Δ trend controllers) or `"learned"` (a frozen Q-policy
+    /// trained in the simulator by `oppo train-controller`).  Both run
+    /// behind the same `Controller` trait; this flag is the A/B switch.
+    pub controller: String,
+    /// Path to the frozen policy artifact for `controller = "learned"`
+    /// (ignored by the heuristic arm).
+    pub controller_policy: Option<String>,
     /// Per-token KL penalty coefficient β (InstructGPT-style reward shaping).
     pub kl_beta: f64,
     /// Synthetic task: "arith" | "copy" | "sort" | "mixed".
@@ -216,6 +224,8 @@ impl Default for TrainConfig {
             adaptive_chunk: true,
             adaptive_delta: true,
             explore_every: 20,
+            controller: "heuristic".into(),
+            controller_policy: None,
             kl_beta: 0.02,
             task: "arith".into(),
             seed: 0,
@@ -271,6 +281,12 @@ impl TrainConfig {
         set!(adaptive_chunk, as_bool);
         set!(adaptive_delta, as_bool);
         set!(explore_every, as_usize);
+        if let Some(v) = get("controller") {
+            cfg.controller = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("controller_policy") {
+            cfg.controller_policy = Some(v.as_str()?.to_string());
+        }
         set!(kl_beta, as_f64);
         set!(seed, as_u64);
         set!(max_new_tokens, as_usize);
@@ -340,6 +356,20 @@ impl TrainConfig {
         }
         if self.window == 0 {
             bail!("window must be > 0");
+        }
+        match self.controller.as_str() {
+            "heuristic" => {}
+            "learned" => {
+                let has_policy =
+                    matches!(self.controller_policy.as_deref(), Some(p) if !p.is_empty());
+                if !has_policy {
+                    bail!(
+                        "controller = \"learned\" needs controller_policy = \"<artifact>\" \
+                         (train one with `oppo train-controller`)"
+                    );
+                }
+            }
+            c => bail!("unknown controller {c:?} (want heuristic|learned)"),
         }
         if !(0.0..=1.0).contains(&self.reward_model_weight) {
             bail!("reward_model_weight must be in [0,1]");
@@ -644,6 +674,27 @@ mod tests {
             ref_replicas: 2,
             ..Default::default()
         };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn controller_knobs_parse_and_validate() {
+        let doc = parse::parse(
+            "[run]\ncontroller = \"learned\"\ncontroller_policy = \"artifacts/q.json\"",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.controller, "learned");
+        assert_eq!(cfg.controller_policy.as_deref(), Some("artifacts/q.json"));
+
+        // the learned arm without an artifact path must fail fast
+        let cfg = TrainConfig { controller: "learned".into(), ..Default::default() };
+        assert!(cfg.validate().unwrap_err().to_string().contains("controller_policy"));
+        let cfg = TrainConfig { controller: "oracle".into(), ..Default::default() };
+        assert!(cfg.validate().is_err());
+        // heuristic (the default) ignores controller_policy entirely
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.controller, "heuristic");
         cfg.validate().unwrap();
     }
 

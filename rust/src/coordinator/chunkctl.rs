@@ -1,192 +1,7 @@
-//! Dynamic chunk-size controller — intra-step streaming adaptation (§3.1).
-//!
-//! The paper's observation: the chunk-size ↔ overlap-efficiency tradeoff is
-//! monotone and predictable (Fig. 7b is U-shaped in step time), and PPO runs
-//! for many steps, so cheap online exploration suffices.  "OPPO periodically
-//! (e.g., every 50 training steps) applies a few candidate chunk sizes
-//! across different steps and selects the best-performing configuration for
-//! subsequent windows."
-//!
-//! Implementation: a two-phase state machine.
-//!
-//! * **Exploit(c)** for `period` steps;
-//! * **Explore**: run `probes_per_candidate` steps at each candidate (they
-//!   must be sizes with pre-compiled executables), record mean step
-//!   latency, then exploit the argmin.
-//!
-//! Candidates are probed in order; measurement updates arrive via
-//! `observe_step(step_secs)` after every PPO step.
+//! Deprecated location shim (kept for one release): the dynamic
+//! chunk-size controller moved to [`crate::ctl::chunkctl`] when the
+//! controllers were unified behind the [`crate::ctl::Controller`] trait.
 
-/// Dynamic chunk-size controller.
-#[derive(Clone, Debug)]
-pub struct ChunkController {
-    candidates: Vec<usize>,
-    period: usize,
-    probes_per_candidate: usize,
-    adaptive: bool,
-    current: usize,
-    state: State,
-    /// adaptation log: (step, chosen_chunk) after each exploration round
-    pub history: Vec<(u64, usize)>,
-    steps_seen: u64,
-}
-
-#[derive(Clone, Debug)]
-enum State {
-    Exploit { steps_left: usize },
-    Explore { candidate_idx: usize, probe: usize, sums: Vec<f64> },
-}
-
-impl ChunkController {
-    pub fn new(
-        candidates: Vec<usize>,
-        initial: usize,
-        period: usize,
-        probes_per_candidate: usize,
-        adaptive: bool,
-    ) -> Self {
-        assert!(!candidates.is_empty());
-        assert!(candidates.contains(&initial), "initial chunk must be a candidate");
-        assert!(period >= candidates.len() * probes_per_candidate || !adaptive);
-        Self {
-            candidates,
-            period,
-            probes_per_candidate,
-            adaptive,
-            current: initial,
-            state: State::Exploit { steps_left: period },
-            history: Vec::new(),
-            steps_seen: 0,
-        }
-    }
-
-    /// The chunk size the *next* step should use.
-    pub fn chunk(&self) -> usize {
-        match &self.state {
-            State::Exploit { .. } => self.current,
-            State::Explore { candidate_idx, .. } => self.candidates[*candidate_idx],
-        }
-    }
-
-    /// Is the controller currently probing (step timings are measurements)?
-    pub fn exploring(&self) -> bool {
-        matches!(self.state, State::Explore { .. })
-    }
-
-    /// Report the wall-clock seconds of the step that just ran with
-    /// [`Self::chunk`]'s size.
-    pub fn observe_step(&mut self, step_secs: f64) {
-        self.steps_seen += 1;
-        if !self.adaptive {
-            return;
-        }
-        match &mut self.state {
-            State::Exploit { steps_left } => {
-                *steps_left -= 1;
-                if *steps_left == 0 {
-                    self.state = State::Explore {
-                        candidate_idx: 0,
-                        probe: 0,
-                        sums: vec![0.0; self.candidates.len()],
-                    };
-                }
-            }
-            State::Explore { candidate_idx, probe, sums } => {
-                sums[*candidate_idx] += step_secs;
-                *probe += 1;
-                if *probe >= self.probes_per_candidate {
-                    *probe = 0;
-                    *candidate_idx += 1;
-                    if *candidate_idx >= self.candidates.len() {
-                        // pick argmin mean latency
-                        let best = sums
-                            .iter()
-                            .enumerate()
-                            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                            .map(|(i, _)| i)
-                            .unwrap();
-                        self.current = self.candidates[best];
-                        self.history.push((self.steps_seen, self.current));
-                        self.state = State::Exploit { steps_left: self.period };
-                    }
-                }
-            }
-        }
-    }
-
-    pub fn candidates(&self) -> &[usize] {
-        &self.candidates
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// Synthetic latency model: U-shaped in chunk size with optimum at 16
-    /// (small chunks pay dispatch overhead, big chunks lose overlap —
-    /// Fig. 7b's shape).
-    fn latency(chunk: usize) -> f64 {
-        let c = chunk as f64;
-        1.0 + 8.0 / c + c / 24.0
-    }
-
-    #[test]
-    fn converges_to_best_candidate() {
-        let mut ctl = ChunkController::new(vec![4, 16, 64], 64, 6, 2, true);
-        for _ in 0..200 {
-            let c = ctl.chunk();
-            ctl.observe_step(latency(c));
-        }
-        assert_eq!(ctl.chunk(), 16);
-        assert!(!ctl.history.is_empty());
-        assert!(ctl.history.iter().rev().take(3).all(|&(_, c)| c == 16));
-    }
-
-    #[test]
-    fn explores_every_period() {
-        let mut ctl = ChunkController::new(vec![8, 16], 8, 4, 1, true);
-        let mut explored_steps = 0;
-        for _ in 0..40 {
-            if ctl.exploring() {
-                explored_steps += 1;
-            }
-            let c = ctl.chunk();
-            ctl.observe_step(latency(c));
-        }
-        // 2 candidates × 1 probe per round; rounds every 4 exploit steps
-        assert!(explored_steps >= 8, "explored {explored_steps}");
-    }
-
-    #[test]
-    fn non_adaptive_never_changes() {
-        let mut ctl = ChunkController::new(vec![8, 16], 16, 4, 1, false);
-        for _ in 0..50 {
-            let c = ctl.chunk();
-            assert_eq!(c, 16);
-            ctl.observe_step(latency(c));
-        }
-        assert!(ctl.history.is_empty());
-    }
-
-    #[test]
-    fn probes_each_candidate_equally() {
-        let mut ctl = ChunkController::new(vec![4, 8, 16], 4, 6, 2, true);
-        let mut probes = std::collections::HashMap::new();
-        for _ in 0..(6 + 3 * 2) {
-            if ctl.exploring() {
-                *probes.entry(ctl.chunk()).or_insert(0) += 1;
-            }
-            let c = ctl.chunk();
-            ctl.observe_step(latency(c));
-        }
-        assert_eq!(probes.len(), 3);
-        assert!(probes.values().all(|&n| n == 2), "{probes:?}");
-    }
-
-    #[test]
-    #[should_panic]
-    fn initial_must_be_candidate() {
-        ChunkController::new(vec![8, 16], 32, 10, 1, true);
-    }
-}
+/// Moved to [`crate::ctl::ChunkController`].
+#[deprecated(note = "the controllers moved: use crate::ctl::ChunkController")]
+pub type ChunkController = crate::ctl::ChunkController;

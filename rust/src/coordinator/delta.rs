@@ -1,195 +1,11 @@
-//! Dynamic Δ controller — inter-step overcommitment adaptation (§3.2).
-//!
-//! The paper specifies the controller twice, with *opposite signs*:
-//!
-//! * **Eq. (4)** (+ surrounding prose): reward slope `s_t > 0` ⇒ *increase*
-//!   Δ (training is healthy, buy throughput); `s_t <= 0` ⇒ *decrease*
-//!   toward `Δ_min` ("as training starts to converge … Δ naturally decays
-//!   toward Δ_min, preventing overcommitment to ensure convergence").
-//! * **Algorithm 1, lines 21-27**: `Δ ← clip(Δ − sign(d)·Δ_change, …)` —
-//!   literally the opposite direction.
-//!
-//! The prose argument and the ablation (Fig. 7a: dynamic Δ decays as rollout
-//! lengths stabilize) are only consistent with the Eq. (4) reading, so that
-//! is the default here; `Policy::Alg1Literal` implements the pseudocode
-//! verbatim for comparison (the discrepancy is called out in DESIGN.md and
-//! exercised by `benches/fig7_adaptation`).
-//!
-//! Step size follows Alg. 1's adaptive magnitude `max(1, Δ/4)`, and the
-//! window bookkeeping is Alg. 1's: act only when `2W` rewards accumulated,
-//! then keep the last `W`.
+//! Deprecated location shim (kept for one release): the dynamic Δ
+//! controller moved to [`crate::ctl::delta`] when the controllers were
+//! unified behind the [`crate::ctl::Controller`] trait.
 
-use crate::util::stats;
+/// Moved to [`crate::ctl::DeltaController`].
+#[deprecated(note = "the controllers moved: use crate::ctl::DeltaController")]
+pub type DeltaController = crate::ctl::DeltaController;
 
-/// Direction convention for the Δ update (see module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Policy {
-    /// Eq. (4): improving reward ⇒ grow Δ; flat/declining ⇒ shrink.
-    Eq4,
-    /// Algorithm 1 line 24, taken literally (opposite sign).
-    Alg1Literal,
-    /// Fixed Δ (the paper's fixed-Δ ablation arms, Fig. 7a).
-    Fixed,
-}
-
-/// Windowed-trend Δ controller.
-#[derive(Clone, Debug)]
-pub struct DeltaController {
-    delta: usize,
-    delta_min: usize,
-    delta_max: usize,
-    window: usize,
-    policy: Policy,
-    rewards: Vec<f64>,
-    /// adaptation log: (step_index, new_delta) for tests / benches
-    pub history: Vec<(u64, usize)>,
-}
-
-impl DeltaController {
-    pub fn new(
-        delta_init: usize,
-        delta_min: usize,
-        delta_max: usize,
-        window: usize,
-        policy: Policy,
-    ) -> Self {
-        assert!(delta_min <= delta_init && delta_init <= delta_max);
-        assert!(window >= 1);
-        Self {
-            delta: delta_init,
-            delta_min,
-            delta_max,
-            window,
-            policy,
-            rewards: Vec::new(),
-            history: Vec::new(),
-        }
-    }
-
-    pub fn delta(&self) -> usize {
-        self.delta
-    }
-
-    pub fn bounds(&self) -> (usize, usize) {
-        (self.delta_min, self.delta_max)
-    }
-
-    /// Feed one step's mean reward (Alg. 1 line 18); maybe adapt Δ
-    /// (lines 21-27).  Returns the (possibly unchanged) Δ.
-    pub fn observe(&mut self, step: u64, mean_reward: f64) -> usize {
-        self.rewards.push(mean_reward);
-        if self.policy == Policy::Fixed {
-            return self.delta;
-        }
-        let w = self.window;
-        if self.rewards.len() >= 2 * w {
-            let n = self.rewards.len();
-            let recent = stats::mean(&self.rewards[n - w..]);
-            let previous = stats::mean(&self.rewards[n - 2 * w..n - w]);
-            let d = recent - previous;
-            let change = (self.delta / 4).max(1);
-            let signed: isize = match (self.policy, d > 0.0) {
-                (Policy::Eq4, true) => change as isize, // improving → grow
-                (Policy::Eq4, false) => -(change as isize),
-                (Policy::Alg1Literal, true) => -(change as isize),
-                (Policy::Alg1Literal, false) => change as isize,
-                (Policy::Fixed, _) => 0,
-            };
-            let new = (self.delta as isize + signed)
-                .clamp(self.delta_min as isize, self.delta_max as isize) as usize;
-            if new != self.delta {
-                self.history.push((step, new));
-            }
-            self.delta = new;
-            // Alg. 1 line 26: keep only the trailing window
-            self.rewards.drain(..n - w);
-        }
-        self.delta
-    }
-
-    /// Number of rewards currently buffered (test hook).
-    pub fn window_fill(&self) -> usize {
-        self.rewards.len()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn grows_while_improving_eq4() {
-        let mut c = DeltaController::new(2, 0, 8, 3, Policy::Eq4);
-        for step in 0..30 {
-            c.observe(step, step as f64 * 0.1); // strictly improving
-        }
-        assert!(c.delta() > 2, "delta {}", c.delta());
-        assert!(c.delta() <= 8);
-    }
-
-    #[test]
-    fn decays_to_min_at_convergence_eq4() {
-        let mut c = DeltaController::new(6, 1, 8, 3, Policy::Eq4);
-        for step in 0..40 {
-            c.observe(step, 4.0); // flat — converged
-        }
-        assert_eq!(c.delta(), 1, "Δ must decay to Δ_min at convergence");
-    }
-
-    #[test]
-    fn alg1_literal_is_opposite() {
-        let mut up = DeltaController::new(4, 0, 8, 3, Policy::Eq4);
-        let mut dn = DeltaController::new(4, 0, 8, 3, Policy::Alg1Literal);
-        for step in 0..18 {
-            up.observe(step, step as f64);
-            dn.observe(step, step as f64);
-        }
-        assert!(up.delta() > 4);
-        assert!(dn.delta() < 4);
-    }
-
-    #[test]
-    fn fixed_policy_never_moves() {
-        let mut c = DeltaController::new(4, 0, 8, 2, Policy::Fixed);
-        for step in 0..50 {
-            c.observe(step, (step as f64).sin());
-        }
-        assert_eq!(c.delta(), 4);
-        assert!(c.history.is_empty());
-    }
-
-    #[test]
-    fn bounds_are_respected() {
-        let mut c = DeltaController::new(8, 0, 8, 2, Policy::Eq4);
-        for step in 0..40 {
-            c.observe(step, step as f64); // improving forever
-        }
-        assert_eq!(c.delta(), 8);
-        let mut c = DeltaController::new(0, 0, 8, 2, Policy::Eq4);
-        for step in 0..40 {
-            c.observe(step, -(step as f64));
-        }
-        assert_eq!(c.delta(), 0);
-    }
-
-    #[test]
-    fn step_magnitude_is_adaptive() {
-        // Δ = 8 → change = max(1, 2) = 2 per adaptation
-        let mut c = DeltaController::new(8, 0, 16, 2, Policy::Eq4);
-        for step in 0..4 {
-            c.observe(step, -(step as f64));
-        }
-        assert_eq!(c.delta(), 6);
-    }
-
-    #[test]
-    fn window_bookkeeping_matches_alg1() {
-        let mut c = DeltaController::new(2, 0, 8, 4, Policy::Eq4);
-        for step in 0..7 {
-            c.observe(step, 0.0);
-        }
-        assert_eq!(c.window_fill(), 7); // not yet 2W
-        c.observe(7, 0.0); // hits 2W = 8 → adapt + truncate to W
-        assert_eq!(c.window_fill(), 4);
-    }
-}
+/// Moved to [`crate::ctl::Policy`].
+#[deprecated(note = "the controllers moved: use crate::ctl::Policy")]
+pub type Policy = crate::ctl::Policy;

@@ -5,8 +5,10 @@
 //!   fixed-size physical blocks plus per-lane block tables, so rolling
 //!   admission gates on free blocks instead of worst-case dense KV;
 //! * [`buffer`] — Algorithm 1's `B + Δ` FIFO sequence buffer;
-//! * [`delta`] — the dynamic Δ controller (Eq. 4 / Alg. 1 l.21-27);
-//! * [`chunkctl`] — the dynamic chunk-size controller (§3.1);
+//! * [`delta`] / [`chunkctl`] — deprecated location shims: the dynamic Δ
+//!   and chunk-size controllers moved to [`crate::ctl`] behind the
+//!   unified `Controller` trait (the scheduler now talks only to the
+//!   trait);
 //! * [`engine_ops`] — typed wrappers over the AOT entry points with
 //!   device-resident state (actor, reward, and reference flavours);
 //! * [`stage`] — the generic pipeline-stage worker: tagged requests,
@@ -32,7 +34,8 @@ pub mod worker;
 
 pub use block_pool::BlockPool;
 pub use buffer::SeqBuffer;
-pub use chunkctl::ChunkController;
-pub use delta::{DeltaController, Policy};
+// controller re-exports: kept so `coordinator::{ChunkController, ...}`
+// paths from before the `crate::ctl` move keep compiling for one release
+pub use crate::ctl::{ChunkController, DeltaController, Policy};
 pub use scheduler::OppoScheduler;
 pub use stage::{StageHandler, StagePool, StageStats, StageWorker};

@@ -42,9 +42,11 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::config::{Mode, TrainConfig};
 use crate::coordinator::block_pool::BlockPool;
 use crate::coordinator::buffer::SeqBuffer;
-use crate::coordinator::chunkctl::ChunkController;
-use crate::coordinator::delta::{DeltaController, Policy};
 use crate::coordinator::engine_ops::{ActorState, ChunkOut, Ops};
+use crate::ctl::{
+    ChunkController, Controller, DeltaController, HeuristicController, KnobBounds, KnobState,
+    LearnedController, Policy, QPolicy, StepTelemetry,
+};
 use crate::coordinator::worker::{
     RefSink, RefWorker, RewardReq, RewardResp, RewardWorker, StreamChunk, StreamSink,
 };
@@ -82,8 +84,15 @@ pub struct OppoScheduler {
     queue: PromptQueue,
     tokenizer: Tokenizer,
     buffer: SeqBuffer,
-    delta_ctl: DeltaController,
-    chunk_ctl: ChunkController,
+    /// the control loop (heuristic or learned, per `cfg.controller`): one
+    /// [`StepTelemetry`] in per step, one [`crate::ctl::ControlActions`] out
+    ctl: Box<dyn Controller + Send>,
+    /// chunk size the next step runs with, cached from `ctl.actions()`
+    cur_chunk: usize,
+    /// overcommit Δ the next step runs with, cached from `ctl.actions()`
+    cur_delta: usize,
+    /// previous step's mean batch score (telemetry `reward_trend` input)
+    last_mean_score: f64,
     assembler: RolloutAssembler,
     actor_state: ActorState,
     /// paged-KV allocator (`Some` iff the artifacts ship the paged entry
@@ -171,20 +180,69 @@ impl OppoScheduler {
         } else {
             Policy::Fixed
         };
-        let delta_ctl =
-            DeltaController::new(delta_init, delta_min, delta_max, cfg.window, delta_policy);
-
         let probes = 1;
         let adaptive_chunk = cfg.adaptive_chunk
             && cfg.mode.intra_enabled()
             && cfg.explore_every >= m.chunk_sizes.len() * probes;
-        let chunk_ctl = ChunkController::new(
-            m.chunk_sizes.clone(),
-            cfg.chunk_size,
-            cfg.explore_every.max(m.chunk_sizes.len() * probes),
-            probes,
-            adaptive_chunk,
-        );
+
+        // both arms answer through the same `Controller` trait; which one
+        // is behind the box is decided once, here, by `cfg.controller`
+        let ctl: Box<dyn Controller + Send> = match cfg.controller.as_str() {
+            "learned" => {
+                let path = cfg.controller_policy.as_deref().context(
+                    "controller = \"learned\" needs controller_policy \
+                     (train one with `oppo train-controller`)",
+                )?;
+                let policy = QPolicy::load(path)?;
+                // start from the configured chunk size's slot in the
+                // compiled candidate set — the policy walks indices from
+                // there, exactly like the training environment did
+                let chunk_idx = m
+                    .chunk_sizes
+                    .iter()
+                    .position(|&c| c == cfg.chunk_size)
+                    .unwrap_or(m.chunk_sizes.len() / 2);
+                let bounds = KnobBounds {
+                    n_chunks: m.chunk_sizes.len(),
+                    delta_min,
+                    delta_max,
+                    // the runtime spawns its replica pools once at startup,
+                    // so the replica knob is pinned to the configured count
+                    min_replicas: cfg.reward_replicas,
+                    max_replicas: cfg.reward_replicas,
+                };
+                let initial = KnobState {
+                    chunk_idx,
+                    delta_level: crate::ctl::level_of(delta_init, &bounds),
+                    replicas: cfg.reward_replicas,
+                };
+                Box::new(LearnedController::new(
+                    policy,
+                    m.chunk_sizes.clone(),
+                    bounds,
+                    initial,
+                )?)
+            }
+            _ => {
+                let delta_ctl = DeltaController::new(
+                    delta_init, delta_min, delta_max, cfg.window, delta_policy,
+                );
+                // construction-time manifest check: every candidate the
+                // controller may pick must have a compiled `c{C}` entry
+                let chunk_ctl = ChunkController::try_new(
+                    m.chunk_sizes.clone(),
+                    cfg.chunk_size,
+                    cfg.explore_every.max(m.chunk_sizes.len() * probes),
+                    probes,
+                    adaptive_chunk,
+                    &m.chunk_sizes,
+                )?;
+                Box::new(HeuristicController::full(chunk_ctl, delta_ctl))
+            }
+        };
+        let a0 = ctl.actions();
+        let cur_chunk = a0.chunk.unwrap_or(cfg.chunk_size);
+        let cur_delta = a0.delta.unwrap_or(delta_init);
 
         let ops = Ops::new(engine.clone(), cfg.seed)?;
 
@@ -305,7 +363,7 @@ impl OppoScheduler {
             )
         });
         let assembler = RolloutAssembler::new(m.s_max, cfg.kl_beta as f32);
-        let buffer = SeqBuffer::new(m.ppo_batch + delta_ctl.delta(), m.lanes);
+        let buffer = SeqBuffer::new(m.ppo_batch + cur_delta, m.lanes);
         let log = RunLog::new(cfg.mode.name(), &cfg.task, cfg.seed);
 
         Ok(Self {
@@ -317,8 +375,10 @@ impl OppoScheduler {
             queue,
             tokenizer,
             buffer,
-            delta_ctl,
-            chunk_ctl,
+            ctl,
+            cur_chunk,
+            cur_delta,
+            last_mean_score: 0.0,
             assembler,
             actor_state,
             block_pool,
@@ -341,11 +401,16 @@ impl OppoScheduler {
     }
 
     pub fn delta(&self) -> usize {
-        self.delta_ctl.delta()
+        self.cur_delta
     }
 
     pub fn chunk(&self) -> usize {
-        self.chunk_ctl.chunk()
+        self.cur_chunk
+    }
+
+    /// The active control loop (test / introspection hook).
+    pub fn controller(&self) -> &dyn Controller {
+        self.ctl.as_ref()
     }
 
     /// Names of the active streaming stages (test / introspection hook).
@@ -429,8 +494,8 @@ impl OppoScheduler {
                 wall_s: t0.elapsed().as_secs_f64(),
                 elapsed_s: self.started.elapsed().as_secs_f64(),
                 mean_score: pending.mean_score,
-                delta: self.delta_ctl.delta(),
-                chunk: self.chunk_ctl.chunk(),
+                delta: self.cur_delta,
+                chunk: self.cur_chunk,
                 finished: 0,
                 deferred: self.buffer.len(),
                 gen_tokens: 0,
@@ -448,13 +513,13 @@ impl OppoScheduler {
     pub fn run_step(&mut self, step: u64) -> Result<StepRecord> {
         let t0 = Instant::now();
         let b = self.engine.manifest().shape.ppo_batch;
-        let chunk = self.chunk_ctl.chunk();
+        let chunk = self.cur_chunk;
         let dropped_before = self.queue.dropped();
 
         // ---- Stage 1: fill the buffer to B + Δ (Alg. 1 l.3-5) ----
         // step boundary: last step's mid-step admits become batch-eligible
         self.buffer.promote_admitted();
-        self.buffer.set_capacity(b + self.delta_ctl.delta());
+        self.buffer.set_capacity(b + self.cur_delta);
         self.queue.advance_to(self.tick);
         while self.buffer.has_room() && self.pool_can_admit() && self.queue.has_prompt() {
             let Some(qp) = self.queue.pop(self.tick) else { break };
@@ -516,11 +581,7 @@ impl OppoScheduler {
         };
         self.last_selected = selected.clone();
 
-        // ---- dynamic control (Alg. 1 l.21-27 + §3.1) ----
-        let new_delta = self.delta_ctl.observe(step, mean_score as f64);
-        self.buffer.set_capacity(b + new_delta);
         let wall = t0.elapsed().as_secs_f64();
-        self.chunk_ctl.observe_step(wall);
 
         // per-stage busy/idle attribution for this step (pool rows sum
         // their replicas' counters)
@@ -537,13 +598,60 @@ impl OppoScheduler {
         let (busy, idle) =
             stages.iter().fold((0.0, 0.0), |(b, i), st| (b + st.busy_s, i + st.idle_s));
         let util = if busy > 0.0 { (busy / (busy + idle)).min(1.0) } else { 0.0 };
+        let lane_idle_frac = if gen.lane_slots > 0 {
+            gen.idle_lane_slots as f64 / gen.lane_slots as f64
+        } else {
+            0.0
+        };
+        let queue_dropped = (self.queue.dropped() - dropped_before) as usize;
+        let mut seq_lens: Vec<f64> =
+            selected.iter().map(|s| (s.prompt_len + s.response.len()) as f64).collect();
+        let mut queue_waits: Vec<f64> = prompt_latencies.iter().map(|l| l.queue_wait).collect();
+        let mut e2es: Vec<f64> = prompt_latencies.iter().map(|l| l.e2e).collect();
+
+        // ---- dynamic control (Alg. 1 l.21-27 + §3.1): one telemetry ----
+        // snapshot through the unified Controller API, whichever arm is live
+        let telemetry = StepTelemetry {
+            step,
+            wall_s: wall,
+            mean_reward: mean_score as f64,
+            reward_trend: if step == 0 {
+                0.0
+            } else {
+                mean_score as f64 - self.last_mean_score
+            },
+            util,
+            lane_idle_frac,
+            queue_depth: self.queue.len(),
+            queue_dropped,
+            finished: selected.len(),
+            gen_tokens,
+            chunk,
+            delta: self.cur_delta,
+            mean_seq_len: mean_or_zero(&seq_lens),
+            p95_seq_len: pct_sorted(&mut seq_lens, 95),
+            queue_wait_p99: pct_sorted(&mut queue_waits, 99),
+            e2e_p99: pct_sorted(&mut e2es, 99),
+        };
+        self.ctl.observe(&telemetry);
+        self.last_mean_score = mean_score as f64;
+        let actions = self.ctl.actions();
+        if let Some(c) = actions.chunk {
+            self.cur_chunk = c;
+        }
+        if let Some(d) = actions.delta {
+            self.cur_delta = d;
+        }
+        // (a reward_replicas opinion is ignored here by design: the runtime
+        // spawns its replica pools once at startup)
+        self.buffer.set_capacity(b + self.cur_delta);
 
         let rec = StepRecord {
             step,
             wall_s: wall,
             elapsed_s: self.started.elapsed().as_secs_f64(),
             mean_score: mean_score as f64,
-            delta: new_delta,
+            delta: self.cur_delta,
             chunk,
             finished: selected.len(),
             deferred: deferred_left,
@@ -552,13 +660,9 @@ impl OppoScheduler {
             util,
             stages,
             prompt_latencies,
-            lane_idle_frac: if gen.lane_slots > 0 {
-                gen.idle_lane_slots as f64 / gen.lane_slots as f64
-            } else {
-                0.0
-            },
+            lane_idle_frac,
             admitted_mid_step: gen.admitted_mid_step,
-            queue_dropped: (self.queue.dropped() - dropped_before) as usize,
+            queue_dropped,
             peak_kv_bytes: (gen.peak_kv_tokens
                 * self.engine.manifest().shape.kv_bytes_per_token()) as u64,
         };
@@ -1097,7 +1201,7 @@ impl OppoScheduler {
             let mut state = self.ops.fresh_actor_state(&tokens)?;
             self.ops.actor_prefill(&mut state, &tokens, &prompt_len, &reset)?;
 
-            let chunk = self.chunk_ctl.chunk();
+            let chunk = self.cur_chunk;
             let mut responses: Vec<Vec<i32>> = vec![Vec::new(); group.len()];
             let mut done = vec![false; group.len()];
             let mut pos: Vec<i32> = prompt_len.clone();
@@ -1135,4 +1239,22 @@ impl OppoScheduler {
     pub fn batch_reward(batch: &PpoBatch) -> f32 {
         masked_mean(&batch.rewards, &batch.mask)
     }
+}
+
+fn mean_or_zero(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Nearest-rank percentile over an unsorted slice (sorts in place; 0.0 when
+/// empty) — the telemetry's p95/p99 sequence-length and latency fields.
+fn pct_sorted(xs: &mut [f64], q: usize) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[(xs.len() - 1) * q / 100]
 }

@@ -1,0 +1,307 @@
+//! Pipeline controllers behind one `Controller` API.
+//!
+//! Before this module the scheduler threaded two ad-hoc call sites: the
+//! chunk controller took raw step seconds (`observe_step(step_secs)`) while
+//! the Δ controller took windowed rewards (`observe(step, mean_reward)`),
+//! and the simulator hand-rolled a third variant.  Every controller — the
+//! paper's heuristics (§3.1 chunk-size exploration, §3.2 / Alg. 1 Δ trend
+//! following) and the learned Q-policy arm — now consumes one typed
+//! [`StepTelemetry`] snapshot per step and emits one [`ControlActions`]
+//! verdict, so the scheduler, the simulator, and the training environment
+//! cannot drift apart in what they feed the control loop.
+//!
+//! * [`chunkctl`] — the dynamic chunk-size controller (§3.1);
+//! * [`delta`] — the dynamic Δ controller (Eq. 4 / Alg. 1 l.21-27);
+//! * [`qpolicy`] — the tabular Q-policy: state binning, the ε-greedy
+//!   learner, and the versioned frozen-artifact format;
+//! * [`HeuristicController`] — both paper heuristics composed behind the
+//!   trait (the `controller = "heuristic"` arm);
+//! * [`LearnedController`] — a frozen [`qpolicy::QPolicy`] replaying
+//!   greedy actions (the `controller = "learned"` arm).
+
+pub mod chunkctl;
+pub mod delta;
+pub mod qpolicy;
+
+pub use chunkctl::ChunkController;
+pub use delta::{DeltaController, Policy};
+pub use qpolicy::{delta_of, level_of, KnobBounds, KnobState, QAction, QPolicy};
+
+/// One step's worth of pipeline observations, assembled once by whoever
+/// owns the loop (the scheduler or the simulator) and fed to every
+/// controller.  Also the learned policy's environment observation — the
+/// sim trains on exactly what the runtime later reports.
+///
+/// Producers fill what they can measure and leave the rest at the
+/// `Default` zeros; consumers must tolerate missing (zero) fields.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepTelemetry {
+    /// PPO step index the snapshot describes.
+    pub step: u64,
+    /// Wall-clock seconds of the step (simulated seconds in the sim).
+    pub wall_s: f64,
+    /// Mean batch reward — the convergence proxy the Δ trend runs on.
+    pub mean_reward: f64,
+    /// `mean_reward` minus the previous step's (0.0 on the first step).
+    pub reward_trend: f64,
+    /// Downstream stage-worker utilization, busy/(busy+idle) in [0, 1].
+    pub util: f64,
+    /// Actor lane idle fraction during generation, in [0, 1].
+    pub lane_idle_frac: f64,
+    /// Prompts waiting in the admission queue after the step.
+    pub queue_depth: usize,
+    /// Prompts shed by the bounded queue during the step.
+    pub queue_dropped: usize,
+    /// Sequences that finished and entered the training batch.
+    pub finished: usize,
+    /// Tokens decoded during the step (all lanes).
+    pub gen_tokens: usize,
+    /// Chunk size the step ran with.
+    pub chunk: usize,
+    /// Overcommit Δ the step ran with.
+    pub delta: usize,
+    /// Mean finished-sequence length (prompt + response tokens).
+    pub mean_seq_len: f64,
+    /// 95th-percentile finished-sequence length.
+    pub p95_seq_len: f64,
+    /// Per-step p99 queue-wait among finished prompts (ticks or sim
+    /// seconds; 0.0 when not measured).
+    pub queue_wait_p99: f64,
+    /// Per-step p99 enqueue-to-finish latency (0.0 when not measured).
+    pub e2e_p99: f64,
+}
+
+/// A controller's knob verdict for the *next* step.  `None` means "no
+/// opinion — keep whatever the loop is using"; a `Some` chunk must come
+/// from the compiled candidate set and a `Some` Δ must respect the
+/// configured bounds (property-tested for every implementation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ControlActions {
+    /// Chunk size in tokens (an element of the candidate set).
+    pub chunk: Option<usize>,
+    /// Overcommit Δ.
+    pub delta: Option<usize>,
+    /// Reward-replica pool size.  Only the simulator can act on this
+    /// mid-run (the runtime spawns its pools once); the scheduler ignores
+    /// it by design.
+    pub reward_replicas: Option<usize>,
+}
+
+/// The unified control-loop interface: digest one step's telemetry, then
+/// report the knobs the next step should run with.
+pub trait Controller {
+    /// Feed the snapshot of the step that just finished.
+    fn observe(&mut self, t: &StepTelemetry);
+    /// Knobs for the next step (stable between `observe` calls).
+    fn actions(&self) -> ControlActions;
+}
+
+/// The paper's heuristics behind the trait: an optional [`ChunkController`]
+/// fed `wall_s` and an optional [`DeltaController`] fed `mean_reward`,
+/// exactly the two legacy call sites — composing them here is what lets
+/// the scheduler and the simulator talk only to [`Controller`].
+#[derive(Clone, Debug, Default)]
+pub struct HeuristicController {
+    chunk: Option<ChunkController>,
+    delta: Option<DeltaController>,
+}
+
+impl HeuristicController {
+    pub fn new(chunk: Option<ChunkController>, delta: Option<DeltaController>) -> Self {
+        Self { chunk, delta }
+    }
+
+    /// Both knobs under heuristic control (the scheduler's arm).
+    pub fn full(chunk: ChunkController, delta: DeltaController) -> Self {
+        Self { chunk: Some(chunk), delta: Some(delta) }
+    }
+
+    /// Δ-only control (the simulator's legacy arm: chunk size is a fixed
+    /// config knob there).
+    pub fn delta_only(delta: DeltaController) -> Self {
+        Self { chunk: None, delta: Some(delta) }
+    }
+
+    /// The wrapped chunk controller (introspection for tests/benches).
+    pub fn chunk_ctl(&self) -> Option<&ChunkController> {
+        self.chunk.as_ref()
+    }
+
+    /// The wrapped Δ controller (introspection for tests/benches).
+    pub fn delta_ctl(&self) -> Option<&DeltaController> {
+        self.delta.as_ref()
+    }
+}
+
+impl Controller for HeuristicController {
+    fn observe(&mut self, t: &StepTelemetry) {
+        if let Some(d) = &mut self.delta {
+            d.observe(t.step, t.mean_reward);
+        }
+        if let Some(c) = &mut self.chunk {
+            c.observe_step(t.wall_s);
+        }
+    }
+
+    fn actions(&self) -> ControlActions {
+        ControlActions {
+            chunk: self.chunk.as_ref().map(|c| c.chunk()),
+            delta: self.delta.as_ref().map(|d| d.delta()),
+            reward_replicas: None,
+        }
+    }
+}
+
+/// A frozen Q-policy replayed greedily: every step it bins the telemetry
+/// into a table state, looks up the argmax action, and nudges its knob
+/// state by the action's discrete adjustments — the same
+/// [`KnobState::apply`] the training environment used, so train-time and
+/// deploy-time action semantics cannot diverge.
+#[derive(Clone, Debug)]
+pub struct LearnedController {
+    policy: QPolicy,
+    bounds: KnobBounds,
+    /// chunk-size candidates (compiled `c{C}` entries at runtime; the
+    /// sweep grid in the sim), indexed by `knobs.chunk_idx`
+    candidates: Vec<usize>,
+    knobs: KnobState,
+}
+
+impl LearnedController {
+    /// `initial` must already satisfy `bounds`; `candidates` must be
+    /// non-empty and is the set `actions().chunk` draws from.
+    pub fn new(
+        policy: QPolicy,
+        candidates: Vec<usize>,
+        bounds: KnobBounds,
+        initial: KnobState,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!candidates.is_empty(), "learned controller needs chunk candidates");
+        anyhow::ensure!(
+            bounds.n_chunks == candidates.len(),
+            "policy bounds cover {} chunk candidates but {} were supplied",
+            bounds.n_chunks,
+            candidates.len()
+        );
+        let mut knobs = initial;
+        knobs.clamp(&bounds);
+        Ok(Self { policy, bounds, candidates, knobs })
+    }
+
+    /// Current knob state (test / introspection hook).
+    pub fn knobs(&self) -> &KnobState {
+        &self.knobs
+    }
+}
+
+impl Controller for LearnedController {
+    fn observe(&mut self, t: &StepTelemetry) {
+        let s = qpolicy::encode_state(t, &self.knobs, &self.bounds);
+        let a = self.policy.best_action(s);
+        self.knobs.apply(a, &self.bounds);
+    }
+
+    fn actions(&self) -> ControlActions {
+        ControlActions {
+            chunk: Some(self.candidates[self.knobs.chunk_idx.min(self.candidates.len() - 1)]),
+            delta: Some(self.knobs.delta(&self.bounds)),
+            reward_replicas: Some(self.knobs.replicas),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn telem(step: u64, wall_s: f64, reward: f64) -> StepTelemetry {
+        StepTelemetry { step, wall_s, mean_reward: reward, ..Default::default() }
+    }
+
+    #[test]
+    fn heuristic_merges_both_legacy_controllers() {
+        let chunk = ChunkController::new(vec![8, 16], 16, 4, 1, false);
+        let delta = DeltaController::new(2, 0, 8, 2, Policy::Eq4);
+        let mut h = HeuristicController::full(chunk, delta);
+        let a0 = h.actions();
+        assert_eq!(a0.chunk, Some(16));
+        assert_eq!(a0.delta, Some(2));
+        assert_eq!(a0.reward_replicas, None);
+        for step in 0..20 {
+            h.observe(&telem(step, 1.0, step as f64)); // improving reward
+        }
+        assert!(h.actions().delta.unwrap() > 2, "Δ should grow on an improving trend");
+        assert_eq!(h.actions().chunk, Some(16), "non-adaptive chunk never moves");
+    }
+
+    #[test]
+    fn heuristic_delta_only_has_no_chunk_opinion() {
+        let mut h =
+            HeuristicController::delta_only(DeltaController::new(1, 0, 4, 2, Policy::Fixed));
+        h.observe(&telem(0, 1.0, 0.5));
+        let a = h.actions();
+        assert_eq!(a.chunk, None);
+        assert_eq!(a.delta, Some(1));
+    }
+
+    #[test]
+    fn trait_matches_legacy_call_sites_exactly() {
+        // the trait port must be behaviorally invisible: drive the same
+        // reward/latency streams through both the raw controllers and the
+        // composed trait object and require identical knob trajectories
+        let mut raw_chunk = ChunkController::new(vec![4, 16, 64], 64, 6, 2, true);
+        let mut raw_delta = DeltaController::new(2, 0, 8, 3, Policy::Eq4);
+        let mut h = HeuristicController::full(
+            ChunkController::new(vec![4, 16, 64], 64, 6, 2, true),
+            DeltaController::new(2, 0, 8, 3, Policy::Eq4),
+        );
+        let mut rng = crate::util::rng::Rng::new(0xC011);
+        for step in 0..300u64 {
+            let wall = rng.range_f64(0.5, 2.0);
+            let reward = rng.normal();
+            raw_delta.observe(step, reward);
+            raw_chunk.observe_step(wall);
+            h.observe(&telem(step, wall, reward));
+            let a = h.actions();
+            assert_eq!(a.chunk, Some(raw_chunk.chunk()));
+            assert_eq!(a.delta, Some(raw_delta.delta()));
+        }
+    }
+
+    #[test]
+    fn learned_controller_stays_inside_bounds() {
+        let bounds = KnobBounds {
+            n_chunks: 3,
+            delta_min: 1,
+            delta_max: 5,
+            min_replicas: 1,
+            max_replicas: 2,
+        };
+        let policy = QPolicy::new(0, bounds.n_chunks);
+        let init = KnobState { chunk_idx: 1, delta_level: 2, replicas: 1 };
+        let mut c = LearnedController::new(policy, vec![8, 16, 32], bounds, init).unwrap();
+        for step in 0..100 {
+            c.observe(&telem(step, 1.0, 0.1 * step as f64));
+            let a = c.actions();
+            assert!([8, 16, 32].contains(&a.chunk.unwrap()));
+            let d = a.delta.unwrap();
+            assert!((1..=5).contains(&d), "Δ {d} escaped [1, 5]");
+            let r = a.reward_replicas.unwrap();
+            assert!((1..=2).contains(&r));
+        }
+    }
+
+    #[test]
+    fn learned_controller_rejects_candidate_mismatch() {
+        let bounds = KnobBounds {
+            n_chunks: 4,
+            delta_min: 0,
+            delta_max: 4,
+            min_replicas: 1,
+            max_replicas: 1,
+        };
+        let policy = QPolicy::new(0, bounds.n_chunks);
+        assert!(LearnedController::new(policy, vec![8, 16], bounds, KnobState::default())
+            .is_err());
+    }
+}

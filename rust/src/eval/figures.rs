@@ -263,7 +263,7 @@ pub fn fig7a() -> Vec<Row> {
     // Δ-update direction, for comparison against the Eq. (4) default
     let t_lit = stats::mean(&SEEDS.map(|seed| {
         let mut cfg = SimConfig::new(setup.clone(), steps + steps / 2, seed);
-        cfg.delta_policy = crate::coordinator::delta::Policy::Alg1Literal;
+        cfg.delta_policy = crate::ctl::Policy::Alg1Literal;
         let log = simulate(Pipeline::oppo(), &cfg);
         log.time_to_reward(setup.target_reward, 8)
             .unwrap_or_else(|| log.total_wall_s() * 1.5)

@@ -26,6 +26,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod ctl;
 pub mod data;
 pub mod eval;
 pub mod metrics;

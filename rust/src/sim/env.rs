@@ -1,0 +1,355 @@
+//! The simulator wrapped as a gym-style control environment, plus the
+//! Q-policy training loop behind `oppo train-controller`.
+//!
+//! [`PipelineEnv`] exposes the discrete-event simulator one PPO step at a
+//! time: the observation is the binned [`StepTelemetry`] state (the same
+//! encoding [`crate::ctl::LearnedController`] replays at deploy time), the
+//! action is a [`QAction`] — a discrete nudge to the chunk-size index, the
+//! overcommit Δ level, or the reward-replica count — and the reward is
+//! step throughput penalized by convergence-proxy regression.
+//! [`train_qpolicy`] runs pinned-seed ε-greedy tabular Q-learning with
+//! Dyna-Q planning across the two benchmark presets (`stackex_7b_h200`,
+//! `traffic_7b_h200`), freezes the policy, and prices the learned arm
+//! against the heuristic controllers on both — the trained artifact is
+//! only worth shipping if it wins where the heuristics already play.
+//!
+//! Two training tricks carry the sample budget (the CI smoke trains only
+//! 50 episodes): **Dyna-Q planning** replays [`N_PLAN`] model-simulated
+//! backups per real step, so each environment transition is squeezed for
+//! [`N_PLAN`]+1 value updates instead of one; **mixed starts** alternate
+//! deploy-state episodes (the knobs the frozen policy will actually start
+//! from) with exploring starts at random knob corners, so the table sees
+//! both the deployment trajectory and the wider knob space.
+
+use crate::ctl::qpolicy::{
+    encode_state, level_of, KnobBounds, KnobState, QAction, QPolicy, DELTA_LEVELS, N_ACTIONS,
+};
+use crate::sim::pipeline::{
+    chunk_candidates, learned_bounds, simulate, steady_state_latency, Pipeline, SimConfig,
+    SimCore, SimKnobs, DEFAULT_CHUNK_IDX,
+};
+use crate::sim::presets;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// Control steps per training episode (after the warm-up step).
+pub const EPISODE_STEPS: u64 = 400;
+/// Sim steps per pricing run (heuristic vs learned arms).
+pub const EVAL_STEPS: usize = 120;
+/// Weight of the convergence-proxy regression penalty in the env reward:
+/// a declining mean batch reward subtracts `λ · |trend|` from the step
+/// throughput, so the policy cannot buy speed with reward collapse.
+pub const REGRESSION_PENALTY: f64 = 10.0;
+/// Dyna-Q planning updates replayed from the learned model per real step.
+pub const N_PLAN: usize = 8;
+
+const ALPHA: f64 = 0.2;
+const GAMMA: f64 = 0.9;
+const EPS_START: f64 = 0.5;
+const EPS_END: f64 = 0.05;
+
+/// Gym-style wrapper over [`SimCore`]: `reset` rebuilds the simulator at a
+/// pinned seed, `step` applies one discrete knob adjustment and advances
+/// one PPO step.  States, actions, and knob clamping are shared with the
+/// deploy-time [`crate::ctl::LearnedController`], so the policy trains on
+/// exactly the dynamics it will replay.
+pub struct PipelineEnv {
+    pipeline: Pipeline,
+    cfg: SimConfig,
+    core: SimCore,
+    bounds: KnobBounds,
+    candidates: Vec<usize>,
+    knobs: KnobState,
+    episode_len: u64,
+}
+
+impl PipelineEnv {
+    pub fn new(pipeline: Pipeline, cfg: &SimConfig, episode_len: u64) -> Self {
+        let candidates = chunk_candidates(cfg);
+        let bounds = learned_bounds(cfg, candidates.len());
+        let mut env = Self {
+            pipeline,
+            cfg: cfg.clone(),
+            core: SimCore::new(pipeline, cfg),
+            bounds,
+            candidates,
+            knobs: KnobState::default(),
+            episode_len,
+        };
+        env.reset(cfg.seed);
+        env
+    }
+
+    /// Start a fresh episode at `seed` from the deploy-time initial knobs;
+    /// returns the initial state id.
+    pub fn reset(&mut self, seed: u64) -> usize {
+        self.reset_from(seed, None)
+    }
+
+    /// Start a fresh episode at `seed`, optionally from an explicit knob
+    /// state (exploring starts).  `None` uses the same initial knobs
+    /// [`crate::sim::pipeline::build_controller`] hands the deployed
+    /// learned arm.  One warm-up sim step runs under the starting knobs so
+    /// the first observation is real telemetry — the same alignment the
+    /// deploy loop has (act only after observing a completed step).
+    pub fn reset_from(&mut self, seed: u64, start: Option<KnobState>) -> usize {
+        let mut cfg = self.cfg.clone();
+        cfg.seed = seed;
+        self.core = SimCore::new(self.pipeline, &cfg);
+        self.knobs = start.unwrap_or(KnobState {
+            chunk_idx: DEFAULT_CHUNK_IDX,
+            delta_level: level_of((cfg.delta_max / 2).max(1), &self.bounds),
+            replicas: cfg.reward_replicas.max(1),
+        });
+        self.knobs.clamp(&self.bounds);
+        let knobs = self.sim_knobs();
+        self.core.step(&knobs);
+        self.state()
+    }
+
+    /// Binned state id of the latest telemetry under the current knobs.
+    pub fn state(&self) -> usize {
+        encode_state(self.core.telemetry(), &self.knobs, &self.bounds)
+    }
+
+    /// The chunk-size grid the env's chunk index walks.
+    pub fn candidates(&self) -> &[usize] {
+        &self.candidates
+    }
+
+    /// Knob bounds the env clamps every action into.
+    pub fn bounds(&self) -> &KnobBounds {
+        &self.bounds
+    }
+
+    fn sim_knobs(&self) -> SimKnobs {
+        let idx = self.knobs.chunk_idx.min(self.candidates.len() - 1);
+        SimKnobs {
+            chunk_tokens: self.candidates[idx] as f64,
+            delta: self.knobs.delta(&self.bounds),
+            reward_replicas: self.knobs.replicas,
+        }
+    }
+
+    /// Apply one discrete adjustment and advance one PPO step.  Returns
+    /// `(next_state, reward, done)`; `done` flips after `episode_len`
+    /// control steps (the warm-up step does not count).
+    pub fn step(&mut self, a: QAction) -> (usize, f64, bool) {
+        self.knobs.apply(a, &self.bounds);
+        let knobs = self.sim_knobs();
+        self.core.step(&knobs);
+        let t = self.core.telemetry();
+        let throughput = t.finished as f64 / t.wall_s.max(1e-9);
+        let regression = (-t.reward_trend).max(0.0);
+        let reward = throughput - REGRESSION_PENALTY * regression;
+        let done = self.core.steps_run() > self.episode_len;
+        (self.state(), reward, done)
+    }
+}
+
+/// One preset's heuristic-vs-learned pricing.
+#[derive(Clone, Debug)]
+pub struct ArmEval {
+    pub preset: String,
+    pub heuristic_steps_per_s: f64,
+    pub learned_steps_per_s: f64,
+    /// learned / heuristic step throughput (≥ 1.0 means the policy wins).
+    pub speedup: f64,
+}
+
+/// What a training run produced, for the CLI and the bench snapshot.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub episodes: u64,
+    pub seed: u64,
+    pub visited_cells: usize,
+    pub arms: Vec<ArmEval>,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Value {
+        let arms = self
+            .arms
+            .iter()
+            .map(|a| {
+                json::obj(vec![
+                    ("preset", json::s(&a.preset)),
+                    ("heuristic_steps_per_s", json::num(a.heuristic_steps_per_s)),
+                    ("learned_steps_per_s", json::num(a.learned_steps_per_s)),
+                    ("speedup", json::num(a.speedup)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("episodes", json::num(self.episodes as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("visited_cells", json::num(self.visited_cells as f64)),
+            ("arms", Value::Arr(arms)),
+        ])
+    }
+}
+
+/// The two presets the controller trains on and is priced against:
+/// step-boundary StackEx-7B and its rolling-Poisson traffic variant.
+pub fn training_configs(seed: u64) -> Vec<(String, SimConfig)> {
+    let stackex = SimConfig::new(presets::stackex_7b_h200(), EVAL_STEPS, seed);
+    let tsu = presets::traffic_7b_h200();
+    let rate = tsu.arrival_rate;
+    let traffic = SimConfig::new(tsu, EVAL_STEPS, seed).rolling_poisson(rate);
+    vec![("stackex_7b_h200".to_string(), stackex), ("traffic_7b_h200".to_string(), traffic)]
+}
+
+/// Pinned-seed tabular Dyna-Q over [`PipelineEnv`], alternating the two
+/// presets episode by episode and the start distribution every other
+/// episode pair, then a frozen-policy pricing pass.  Fully deterministic:
+/// the same `(episodes, seed)` produce a byte-identical policy artifact.
+pub fn train_qpolicy(episodes: u64, seed: u64) -> (QPolicy, TrainReport) {
+    let cfgs = training_configs(seed);
+    let n_chunks = chunk_candidates(&cfgs[0].1).len();
+    let mut policy = QPolicy::new(seed, n_chunks);
+    let mut rng = Rng::new(seed ^ 0x9C11);
+    let mut envs: Vec<PipelineEnv> = cfgs
+        .iter()
+        .map(|(_, c)| PipelineEnv::new(Pipeline::oppo(), c, EPISODE_STEPS))
+        .collect();
+
+    // Dyna-Q world model: per (state, action) a visit count, the running
+    // mean reward, and the last observed next state.
+    let mut model: Vec<Option<(u64, f64, usize)>> =
+        vec![None; crate::ctl::qpolicy::N_STATES * N_ACTIONS];
+    let mut seen: Vec<usize> = Vec::new();
+
+    for ep in 0..episodes {
+        let env = &mut envs[(ep % 2) as usize];
+        let ep_seed = seed ^ (0x51D2 + ep).wrapping_mul(0x9E3779B97F4A7C15);
+        // alternate deploy-state starts with exploring starts so the table
+        // covers both the deployment trajectory and random knob corners
+        let start = if (ep / 2) % 2 == 1 {
+            Some(KnobState {
+                chunk_idx: rng.range_usize(0, env.candidates().len()),
+                delta_level: rng.range_usize(0, DELTA_LEVELS),
+                replicas: rng
+                    .range_usize(env.bounds().min_replicas, env.bounds().max_replicas + 1),
+            })
+        } else {
+            None
+        };
+        let mut s = env.reset_from(ep_seed, start);
+        let eps =
+            EPS_START + (EPS_END - EPS_START) * (ep as f64 / (episodes.max(2) - 1) as f64);
+        for _ in 0..EPISODE_STEPS {
+            let a = policy.epsilon_greedy(s, eps, &mut rng);
+            let (s2, reward, _) = env.step(a);
+            policy.update(s, a, reward, s2, ALPHA, GAMMA);
+            let key = s * N_ACTIONS + a.index();
+            match &mut model[key] {
+                Some((n, ravg, next)) => {
+                    *n += 1;
+                    *ravg += (reward - *ravg) / *n as f64;
+                    *next = s2;
+                }
+                None => {
+                    model[key] = Some((1, reward, s2));
+                    seen.push(key);
+                }
+            }
+            for _ in 0..N_PLAN {
+                let planned = seen[rng.range_usize(0, seen.len())];
+                let (_, ravg, next) = model[planned].expect("seen keys are modeled");
+                policy.update(
+                    planned / N_ACTIONS,
+                    QAction::from_index(planned % N_ACTIONS),
+                    ravg,
+                    next,
+                    ALPHA,
+                    GAMMA,
+                );
+            }
+            s = s2;
+        }
+    }
+    policy.episodes = episodes;
+
+    let arms = cfgs
+        .iter()
+        .map(|(name, cfg)| {
+            let heuristic = steady_state_latency(&simulate(Pipeline::oppo(), cfg));
+            let learned = steady_state_latency(&simulate(
+                Pipeline::oppo(),
+                &cfg.clone().learned(policy.clone()),
+            ));
+            ArmEval {
+                preset: name.clone(),
+                heuristic_steps_per_s: 1.0 / heuristic.max(1e-12),
+                learned_steps_per_s: 1.0 / learned.max(1e-12),
+                speedup: heuristic / learned.max(1e-12),
+            }
+        })
+        .collect();
+
+    let report = TrainReport {
+        episodes,
+        seed,
+        visited_cells: policy.visited_cells(),
+        arms,
+    };
+    (policy, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_reset_is_deterministic() {
+        let cfg = SimConfig::new(presets::stackex_7b_h200(), 20, 7);
+        let mut env = PipelineEnv::new(Pipeline::oppo(), &cfg, 10);
+        let s0 = env.reset(42);
+        let mut trace = Vec::new();
+        for i in 0..10 {
+            let (s2, r, _) = env.step(QAction::from_index(i % N_ACTIONS));
+            trace.push((s2, r));
+        }
+        let s0b = env.reset(42);
+        assert_eq!(s0, s0b, "same seed must reproduce the initial state");
+        for (i, &(s2, r)) in trace.iter().enumerate() {
+            let (t2, q, _) = env.step(QAction::from_index(i % N_ACTIONS));
+            assert_eq!(s2, t2);
+            assert!((r - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn env_episode_terminates() {
+        let cfg = SimConfig::new(presets::stackex_7b_h200(), 20, 7);
+        let mut env = PipelineEnv::new(Pipeline::oppo(), &cfg, 5);
+        env.reset(1);
+        let mut done = false;
+        for _ in 0..5 {
+            done = env.step(QAction::NOOP).2;
+        }
+        assert!(done, "episode must finish after episode_len control steps");
+    }
+
+    #[test]
+    fn exploring_start_respects_bounds() {
+        let cfg = SimConfig::new(presets::stackex_7b_h200(), 20, 7);
+        let mut env = PipelineEnv::new(Pipeline::oppo(), &cfg, 5);
+        let wild = KnobState { chunk_idx: 99, delta_level: 99, replicas: 99 };
+        env.reset_from(3, Some(wild));
+        let s = env.state();
+        assert!(s < crate::ctl::qpolicy::N_STATES);
+    }
+
+    #[test]
+    fn tiny_training_run_is_deterministic_and_prices_both_presets() {
+        let (p1, r1) = train_qpolicy(4, 0);
+        let (p2, _) = train_qpolicy(4, 0);
+        assert_eq!(p1.to_artifact_string(), p2.to_artifact_string());
+        assert_eq!(r1.arms.len(), 2);
+        for arm in &r1.arms {
+            assert!(arm.heuristic_steps_per_s > 0.0);
+            assert!(arm.learned_steps_per_s > 0.0);
+        }
+    }
+}

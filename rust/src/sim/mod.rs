@@ -20,10 +20,14 @@
 //!   ablations + fixed Δ), async staleness-k, VeRL DP / DP+SP / fully-async
 //!   w/ SP, AReaL;
 //! * [`presets`] — the paper's four experimental setups, calibrated so the
-//!   TRL baseline's stage shares match the paper's reported behaviour.
+//!   TRL baseline's stage shares match the paper's reported behaviour;
+//! * [`env`] — the simulator wrapped as a gym-style environment
+//!   ([`env::PipelineEnv`]) plus the Q-policy training loop behind
+//!   `oppo train-controller`.
 
 pub mod cluster;
 pub mod costmodel;
+pub mod env;
 pub mod gpu;
 pub mod lengths;
 pub mod pipeline;
@@ -32,8 +36,11 @@ pub mod rewardmodel;
 
 pub use cluster::ClusterSetup;
 pub use costmodel::ModelSpec;
+pub use env::{train_qpolicy, PipelineEnv, TrainReport};
 pub use gpu::GpuSpec;
 pub use lengths::LengthModel;
-pub use pipeline::{kv_lane_bounds, simulate, Pipeline, SimAdmission, SimConfig};
+pub use pipeline::{
+    kv_lane_bounds, simulate, Pipeline, SimAdmission, SimConfig, SimController, SimCore, SimKnobs,
+};
 pub use presets::Setup;
 pub use rewardmodel::RewardCurve;

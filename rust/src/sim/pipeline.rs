@@ -22,7 +22,11 @@
 
 use std::collections::VecDeque;
 
-use crate::coordinator::delta::{DeltaController, Policy};
+use crate::ctl::qpolicy::{KnobBounds, KnobState, QPolicy};
+use crate::ctl::{
+    ControlActions, Controller, DeltaController, HeuristicController, LearnedController, Policy,
+    StepTelemetry,
+};
 use crate::metrics::{PromptLatency, RunLog, StageTiming, StepRecord};
 use crate::sim::costmodel::CostModel;
 use crate::sim::lengths::LengthModel;
@@ -88,6 +92,19 @@ impl SimAdmission {
     }
 }
 
+/// Which controller arm drives the per-step knobs (the A/B flag's sim
+/// counterpart).
+#[derive(Clone, Debug, Default)]
+pub enum SimController {
+    /// The paper's heuristics: Δ via [`DeltaController`] on the dynamic
+    /// OPPO arm, chunk size fixed at `chunk_tokens`, replicas fixed.
+    #[default]
+    Heuristic,
+    /// A frozen Q-policy replayed greedily over the same telemetry the
+    /// environment trained on (see `sim::env`).
+    Learned(QPolicy),
+}
+
 /// Simulation run parameters.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -100,7 +117,7 @@ pub struct SimConfig {
     pub delta_max: usize,
     pub window: usize,
     /// Δ-update direction convention (the paper specifies both; see
-    /// `coordinator::delta` module docs — Eq4 is the default)
+    /// `ctl::delta` module docs — Eq4 is the default)
     pub delta_policy: Policy,
     /// Replicated reward stage (the coordinator's `reward_replicas`):
     /// sequence-affine replicas prefill disjoint lane subsets concurrently
@@ -137,6 +154,8 @@ pub struct SimConfig {
     pub link_gbps: f64,
     /// one-way link latency per framed message, seconds
     pub link_latency_s: f64,
+    /// controller arm driving Δ / chunk / replica knobs per step
+    pub controller: SimController,
 }
 
 impl SimConfig {
@@ -156,7 +175,15 @@ impl SimConfig {
             remote_replicas: 0,
             link_gbps: 100.0,
             link_latency_s: 5e-5,
+            controller: SimController::Heuristic,
         }
+    }
+
+    /// Drive the run with a frozen learned policy instead of the
+    /// heuristics (the `controller = "learned"` arm).
+    pub fn learned(mut self, policy: QPolicy) -> Self {
+        self.controller = SimController::Learned(policy);
+        self
     }
 
     /// Host the streamed reward pool on `n` remote replicas over a link.
@@ -454,86 +481,199 @@ fn run_generation_rolling(
     )
 }
 
-/// Simulate `cfg.steps` PPO steps of `pipeline`; returns a [`RunLog`] whose
-/// `wall_s` is simulated seconds.
-pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
-    let su = &cfg.setup;
-    let mut rng = Rng::new(cfg.seed ^ 0x51D);
-    let mut reward = RewardProcess::new(su.reward, cfg.seed);
-    let mut log = RunLog::new(&pipeline.name(), su.name, cfg.seed);
+/// Per-step knob settings a controller arm resolved for one step — what
+/// [`SimCore::step`] actually runs with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimKnobs {
+    /// intra-step streaming chunk size in tokens
+    pub chunk_tokens: f64,
+    /// inter-step overcommit Δ (ignored by non-inter schedules)
+    pub delta: usize,
+    /// streamed reward-pool size
+    pub reward_replicas: usize,
+}
 
-    let gen_cm = CostModel {
-        model: su.model,
-        gpu: su.cluster.gpu,
-        tp: 1.0,
-        software_efficiency: su.gen_eff * pipeline_gen_eff_factor(pipeline),
-        iter_overhead_s: su.iter_overhead_s,
-        link_gbps: 0.0,
-        link_latency_s: 0.0,
-    };
-    let score_cm = CostModel {
-        model: su.model,
-        gpu: su.cluster.gpu,
-        tp: su.cluster.n_score.max(1) as f64,
-        software_efficiency: su.score_eff,
-        iter_overhead_s: 0.0,
-        link_gbps: cfg.link_gbps,
-        link_latency_s: cfg.link_latency_s,
-    };
-    let train_cm = CostModel {
-        model: su.model,
-        gpu: su.cluster.gpu,
-        tp: 1.0,
-        software_efficiency: su.train_eff,
-        iter_overhead_s: 0.0,
-        link_gbps: 0.0,
-        link_latency_s: 0.0,
-    };
+/// The simulator's stepping core: every loop-carried piece of the old
+/// monolithic `simulate` (cost models, carried lanes, the arrival queue,
+/// the reward process, the deterministic rng) behind a per-step API, so
+/// the control loop can be driven externally — by [`simulate`]'s
+/// controller arm, or one action at a time by `sim::env::PipelineEnv`
+/// during Q-policy training.  Each [`SimCore::step`] runs with explicit
+/// [`SimKnobs`] and publishes a [`StepTelemetry`] snapshot, the same type
+/// every [`Controller`] consumes.
+pub struct SimCore {
+    pipeline: Pipeline,
+    cfg: SimConfig,
+    rng: Rng,
+    reward: RewardProcess,
+    log: RunLog,
+    gen_cm: CostModel,
+    score_cm: CostModel,
+    train_cm: CostModel,
+    b: usize,
+    carried: Vec<GenSeq>,
+    fixed_delta: usize,
+    rolling: bool,
+    arr: ArrivalState,
+    next_id: u64,
+    max_row: f64,
+    elapsed: f64,
+    step: u64,
+    last_mean_score: f64,
+    telemetry: StepTelemetry,
+}
 
-    let b = su.batch;
-    let mut carried: Vec<GenSeq> = Vec::new();
-    let mut delta_ctl = match pipeline {
-        Pipeline::Oppo { inter: true, fixed_delta: None, .. } => Some(DeltaController::new(
-            (cfg.delta_max / 2).max(1),
-            0,
-            cfg.delta_max,
-            cfg.window,
-            cfg.delta_policy,
-        )),
-        _ => None,
-    };
-    let fixed_delta = match pipeline {
-        Pipeline::Oppo { inter: true, fixed_delta: Some(d), .. } => d,
-        _ => 0,
-    };
+impl SimCore {
+    pub fn new(pipeline: Pipeline, cfg: &SimConfig) -> Self {
+        let cfg = cfg.clone();
+        let su = &cfg.setup;
+        let mut rng = Rng::new(cfg.seed ^ 0x51D);
+        let reward = RewardProcess::new(su.reward, cfg.seed);
+        let log = RunLog::new(&pipeline.name(), su.name, cfg.seed);
 
-    let mut elapsed = 0.0;
-    // rolling admission applies to the schedules whose generation loop the
-    // coordinator owns; the VeRL/AReaL arms model other frameworks' fixed
-    // dispatch and keep step-boundary admission whatever the knob says
-    let rolling = cfg.admission.rolling()
-        && !matches!(
+        let gen_cm = CostModel {
+            model: su.model,
+            gpu: su.cluster.gpu,
+            tp: 1.0,
+            software_efficiency: su.gen_eff * pipeline_gen_eff_factor(pipeline),
+            iter_overhead_s: su.iter_overhead_s,
+            link_gbps: 0.0,
+            link_latency_s: 0.0,
+        };
+        let score_cm = CostModel {
+            model: su.model,
+            gpu: su.cluster.gpu,
+            tp: su.cluster.n_score.max(1) as f64,
+            software_efficiency: su.score_eff,
+            iter_overhead_s: 0.0,
+            link_gbps: cfg.link_gbps,
+            link_latency_s: cfg.link_latency_s,
+        };
+        let train_cm = CostModel {
+            model: su.model,
+            gpu: su.cluster.gpu,
+            tp: 1.0,
+            software_efficiency: su.train_eff,
+            iter_overhead_s: 0.0,
+            link_gbps: 0.0,
+            link_latency_s: 0.0,
+        };
+
+        let fixed_delta = match pipeline {
+            Pipeline::Oppo { inter: true, fixed_delta: Some(d), .. } => d,
+            _ => 0,
+        };
+        // rolling admission applies to the schedules whose generation loop
+        // the coordinator owns; the VeRL/AReaL arms model other frameworks'
+        // fixed dispatch and keep step-boundary admission whatever the knob
+        // says
+        let rolling = cfg.admission.rolling()
+            && !matches!(
+                pipeline,
+                Pipeline::VerlDp | Pipeline::VerlDpSp | Pipeline::VerlAsyncSp | Pipeline::AReal
+            );
+        let arr = match cfg.admission {
+            SimAdmission::RollingPoisson { rate } if rolling => {
+                ArrivalState::new(cfg.admission_queue_depth, rate, &mut rng)
+            }
+            _ => ArrivalState {
+                next: f64::INFINITY,
+                queue: VecDeque::new(),
+                depth: cfg.admission_queue_depth,
+                dropped: 0,
+            },
+        };
+        // densest possible KV row: a full prompt plus the longest decode
+        // the length model can emit — what a dense cache must reserve per
+        // lane
+        let max_row = su.prompt_len + su.lengths.max_len;
+        let b = su.batch;
+
+        Self {
             pipeline,
-            Pipeline::VerlDp | Pipeline::VerlDpSp | Pipeline::VerlAsyncSp | Pipeline::AReal
-        );
-    let mut arr = match cfg.admission {
-        SimAdmission::RollingPoisson { rate } if rolling => {
-            ArrivalState::new(cfg.admission_queue_depth, rate, &mut rng)
+            rng,
+            reward,
+            log,
+            gen_cm,
+            score_cm,
+            train_cm,
+            b,
+            carried: Vec::new(),
+            fixed_delta,
+            rolling,
+            arr,
+            next_id: 0,
+            max_row,
+            elapsed: 0.0,
+            step: 0,
+            last_mean_score: 0.0,
+            telemetry: StepTelemetry::default(),
+            cfg,
         }
-        _ => ArrivalState {
-            next: f64::INFINITY,
-            queue: VecDeque::new(),
-            depth: cfg.admission_queue_depth,
-            dropped: 0,
-        },
-    };
-    let mut next_id: u64 = 0;
-    // densest possible KV row: a full prompt plus the longest decode the
-    // length model can emit — what a dense cache must reserve per lane
-    let max_row = su.prompt_len + su.lengths.max_len;
+    }
 
-    for step in 0..cfg.steps as u64 {
-        let progress = step as f64 / su.total_steps.max(1) as f64;
+    /// Resolve a controller verdict against the config defaults: `None`
+    /// knobs fall back to `chunk_tokens` / the schedule's fixed Δ /
+    /// `reward_replicas` from the config.
+    pub fn knobs_from(&self, a: &ControlActions) -> SimKnobs {
+        SimKnobs {
+            chunk_tokens: a.chunk.map(|c| c as f64).unwrap_or(self.cfg.chunk_tokens),
+            delta: a.delta.unwrap_or(self.fixed_delta),
+            reward_replicas: a.reward_replicas.unwrap_or(self.cfg.reward_replicas),
+        }
+    }
+
+    /// Knobs with no controller opinions (the config defaults).
+    pub fn default_knobs(&self) -> SimKnobs {
+        self.knobs_from(&ControlActions::default())
+    }
+
+    /// Telemetry snapshot of the last completed step (zeros before the
+    /// first step).
+    pub fn telemetry(&self) -> &StepTelemetry {
+        &self.telemetry
+    }
+
+    /// Steps run so far.
+    pub fn steps_run(&self) -> u64 {
+        self.step
+    }
+
+    /// Consume the core, returning the accumulated run log.
+    pub fn finish(self) -> RunLog {
+        self.log
+    }
+
+    /// One PPO step of the schedule under the given knobs.
+    pub fn step(&mut self, knobs: &SimKnobs) {
+        let SimCore {
+            pipeline,
+            cfg,
+            rng,
+            reward,
+            log,
+            gen_cm,
+            score_cm,
+            train_cm,
+            b,
+            carried,
+            rolling,
+            arr,
+            next_id,
+            max_row,
+            elapsed,
+            step,
+            last_mean_score,
+            telemetry,
+            ..
+        } = self;
+        let pipeline = *pipeline;
+        let su = &cfg.setup;
+        let b = *b;
+        let rolling = *rolling;
+        let max_row = *max_row;
+        let step_idx = *step;
+        let progress = step_idx as f64 / su.total_steps.max(1) as f64;
         let dropped_before = arr.dropped;
 
         // ---- admit prompts ----
@@ -541,27 +681,23 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             Pipeline::Oppo { intra, inter, .. } => (intra, inter),
             _ => (false, false),
         };
-        let delta = if !inter {
-            0
-        } else if let Some(ctl) = &delta_ctl {
-            ctl.delta()
-        } else {
-            fixed_delta
-        };
+        // Δ only applies to inter-step overlap; the controller arm (or the
+        // schedule's fixed Δ) already resolved the value into the knobs
+        let delta = if inter { knobs.delta } else { 0 };
         if !rolling {
             let want = (b + delta).saturating_sub(carried.len());
             for _ in 0..want {
-                let len = su.lengths.sample(&mut rng, progress);
+                let len = su.lengths.sample(rng, progress);
                 carried.push(GenSeq {
                     remaining: len,
                     total_len: len,
                     prompt: su.prompt_len,
-                    enq_step: step,
-                    enq_t: elapsed,
-                    admit_t: elapsed,
-                    id: next_id,
+                    enq_step: step_idx,
+                    enq_t: *elapsed,
+                    admit_t: *elapsed,
+                    id: *next_id,
                 });
-                next_id += 1;
+                *next_id += 1;
             }
         }
 
@@ -574,20 +710,20 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         let mut roll_extra = RollExtra { admitted_mid: 0, latencies: Vec::new() };
         let (mut gen_time, gen_tokens, finished) = if rolling {
             let (out, extra) = run_generation_rolling(
-                &mut carried,
+                carried,
                 stop,
                 lanes,
-                &gen_cm,
+                gen_cm,
                 shards,
                 cfg.admission,
-                &mut arr,
+                arr,
                 &su.lengths,
                 progress,
                 su.prompt_len,
-                step,
-                elapsed,
-                &mut next_id,
-                &mut rng,
+                step_idx,
+                *elapsed,
+                next_id,
+                rng,
                 max_row,
                 cfg.kv_block_tokens,
             );
@@ -615,7 +751,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                             &mut shard,
                             n,
                             n.max(1),
-                            &gen_cm,
+                            gen_cm,
                             1.0,
                             max_row,
                             cfg.kv_block_tokens,
@@ -647,10 +783,10 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                     let stop_at = ((carried.len() * 97) / 100).max(1);
                     let n = carried.len().max(1);
                     let out = run_generation(
-                        &mut carried,
+                        carried,
                         stop_at,
                         n,
-                        &gen_cm,
+                        gen_cm,
                         shards,
                         max_row,
                         cfg.kv_block_tokens,
@@ -662,10 +798,10 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                 _ => {
                     let n = carried.len().max(1);
                     let out = run_generation(
-                        &mut carried,
+                        carried,
                         stop,
                         n,
-                        &gen_cm,
+                        gen_cm,
                         shards,
                         max_row,
                         cfg.kv_block_tokens,
@@ -692,7 +828,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                 .unwrap_or(mean_seq)
         };
         if intra && su.use_reward_model {
-            let n_chunks = (total_tokens / cfg.chunk_tokens).max(1.0);
+            let n_chunks = (total_tokens / knobs.chunk_tokens).max(1.0);
             gen_time += n_chunks * su.chunk_overhead_s;
             if su.cluster.colocated_scoring {
                 gen_time *= 1.0 + su.colocation_contention;
@@ -706,7 +842,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         // floor inside `sliced_prefill` caps the division.  Only the
         // *streamed* stages are pooled in the coordinator, so non-intra
         // schedules (monolithic scoring) keep a single worker.
-        let replicas = if intra { cfg.reward_replicas.max(1) as f64 } else { 1.0 };
+        let replicas = if intra { knobs.reward_replicas.max(1) as f64 } else { 1.0 };
         let reward_prefill_work =
             if su.use_reward_model { score_cm.prefill(total_tokens, mean_seq) } else { 0.0 };
         let reward_prefill = if !su.use_reward_model {
@@ -717,7 +853,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             // fixed row ↔ lane binding cannot express — so the pool overlaps
             // but does not divide FLOPs, and every streamed chunk pays a
             // framed round trip over the link.
-            score_cm.remote_masked_prefill(total_tokens, mean_seq, cfg.chunk_tokens)
+            score_cm.remote_masked_prefill(total_tokens, mean_seq, knobs.chunk_tokens)
         } else {
             score_cm.sliced_prefill(total_tokens, mean_seq, replicas)
         };
@@ -738,8 +874,8 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             // (a) the final chunk of the last straggler, and (b) sequences
             // shorter than one chunk, which cannot stream incrementally at
             // all — the Fig. 7b right-side penalty.
-            let coarse_frac = (0.8 * cfg.chunk_tokens / p95_seq).clamp(0.0, 1.0);
-            let last_chunk = score_cm.prefill(cfg.chunk_tokens.min(mean_seq), mean_seq);
+            let coarse_frac = (0.8 * knobs.chunk_tokens / p95_seq).clamp(0.0, 1.0);
+            let last_chunk = score_cm.prefill(knobs.chunk_tokens.min(mean_seq), mean_seq);
             let exposed = (reward_prefill * coarse_frac + last_chunk).min(reward_prefill);
             let hidden = (reward_prefill - exposed).min(gen_time);
             (reward_prefill - hidden, hidden)
@@ -814,7 +950,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
 
         // ---- reward process ----
         let deferrals: Vec<u64> =
-            finished.iter().map(|s| step.saturating_sub(s.enq_step)).collect();
+            finished.iter().map(|s| step_idx.saturating_sub(s.enq_step)).collect();
         let mean_deferral =
             deferrals.iter().sum::<u64>() as f64 / deferrals.len().max(1) as f64;
         for &d in &deferrals {
@@ -824,11 +960,7 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
         let bias = if inter { 0.01 * mean_deferral } else { 0.0 };
         let mean_score = reward.advance(staleness, bias);
 
-        if let Some(ctl) = &mut delta_ctl {
-            ctl.observe(step, mean_score);
-        }
-
-        elapsed += step_time;
+        *elapsed += step_time;
         // busy/idle follow the StageTiming contract: both are summed across
         // a pool's replicas, so a pooled row's wall budget is
         // replicas × step_time (keeps busy/(busy+idle) a true utilization)
@@ -840,13 +972,21 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             items,
         };
         let n_fin = finished.len() as u64;
+        let lane_idle_frac =
+            (lane_idle_s / (lanes as f64 * decode_wall).max(1e-12)).clamp(0.0, 1.0);
+        let queue_dropped = (arr.dropped - dropped_before) as usize;
+        let (queue_wait_p99, e2e_p99) = {
+            let mut qs: Vec<f64> = roll_extra.latencies.iter().map(|l| l.queue_wait).collect();
+            let mut es: Vec<f64> = roll_extra.latencies.iter().map(|l| l.e2e).collect();
+            (pct_sorted(&mut qs, 99), pct_sorted(&mut es, 99))
+        };
         log.push(StepRecord {
-            step,
+            step: step_idx,
             wall_s: step_time,
-            elapsed_s: elapsed,
+            elapsed_s: *elapsed,
             mean_score,
             delta,
-            chunk: cfg.chunk_tokens as usize,
+            chunk: knobs.chunk_tokens as usize,
             finished: finished.len(),
             deferred: carried.len(),
             gen_tokens: gen_tokens as usize,
@@ -860,12 +1000,33 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
                 stage_row("train", 1, train_time, 1),
             ],
             prompt_latencies: roll_extra.latencies,
-            lane_idle_frac: (lane_idle_s / (lanes as f64 * decode_wall).max(1e-12))
-                .clamp(0.0, 1.0),
+            lane_idle_frac,
             admitted_mid_step: roll_extra.admitted_mid,
-            queue_dropped: (arr.dropped - dropped_before) as usize,
+            queue_dropped,
             peak_kv_bytes: peak_kv as u64,
         });
+
+        // the observation every Controller implementation sees for this step
+        *telemetry = StepTelemetry {
+            step: step_idx,
+            wall_s: step_time,
+            mean_reward: mean_score,
+            reward_trend: if step_idx == 0 { 0.0 } else { mean_score - *last_mean_score },
+            util: util_val,
+            lane_idle_frac,
+            queue_depth: arr.queue.len(),
+            queue_dropped,
+            finished: n_fin as usize,
+            gen_tokens: gen_tokens as usize,
+            chunk: knobs.chunk_tokens as usize,
+            delta,
+            mean_seq_len: mean_seq,
+            p95_seq_len: p95_seq,
+            queue_wait_p99,
+            e2e_p99,
+        };
+        *last_mean_score = mean_score;
+        *step += 1;
 
         // non-inter pipelines never carry work across steps (except AReaL,
         // whose interrupted rollouts resume, and rolling admission, whose
@@ -874,7 +1035,91 @@ pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
             carried.clear();
         }
     }
-    log
+}
+
+/// In-place percentile over an unsorted slice (0 for an empty one).
+fn pct_sorted(xs: &mut [f64], q: usize) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[((xs.len() - 1) * q) / 100]
+}
+
+/// Widest reward-pool size the learned controller may explore when the
+/// config doesn't already ask for more.
+const MAX_LEARNED_REPLICAS: usize = 4;
+
+/// Index of the configured `chunk_tokens` inside [`chunk_candidates`] — the
+/// learned arm's starting chunk.
+pub const DEFAULT_CHUNK_IDX: usize = 2;
+
+/// Chunk-size grid the learned arm walks: the configured `chunk_tokens`
+/// bracketed by two halvings and two doublings (the Fig. 7b sweep axis),
+/// clamped at 1 token on the low end.
+pub fn chunk_candidates(cfg: &SimConfig) -> Vec<usize> {
+    let c = cfg.chunk_tokens.max(1.0) as usize;
+    vec![(c / 4).max(1), (c / 2).max(1), c, c * 2, c * 4]
+}
+
+/// Knob bounds the learned arm must respect under this config.
+pub fn learned_bounds(cfg: &SimConfig, n_chunks: usize) -> KnobBounds {
+    KnobBounds {
+        n_chunks,
+        delta_min: 0,
+        delta_max: cfg.delta_max,
+        min_replicas: 1,
+        max_replicas: cfg.reward_replicas.max(MAX_LEARNED_REPLICAS),
+    }
+}
+
+/// Build the controller arm [`simulate`] drives: the paper's heuristics
+/// (dynamic Δ for inter-enabled OPPO, config defaults otherwise) or a
+/// frozen learned Q-policy ([`SimController::Learned`]).
+pub fn build_controller(pipeline: Pipeline, cfg: &SimConfig) -> Box<dyn Controller> {
+    match &cfg.controller {
+        SimController::Learned(policy) => {
+            let candidates = chunk_candidates(cfg);
+            let bounds = learned_bounds(cfg, candidates.len());
+            let initial = KnobState {
+                chunk_idx: DEFAULT_CHUNK_IDX,
+                delta_level: crate::ctl::level_of((cfg.delta_max / 2).max(1), &bounds),
+                replicas: cfg.reward_replicas.max(1),
+            };
+            Box::new(
+                LearnedController::new(policy.clone(), candidates, bounds, initial)
+                    .expect("sim chunk grid always matches its bounds"),
+            )
+        }
+        SimController::Heuristic => match pipeline {
+            Pipeline::Oppo { inter: true, fixed_delta: None, .. } => {
+                Box::new(HeuristicController::delta_only(DeltaController::new(
+                    (cfg.delta_max / 2).max(1),
+                    0,
+                    cfg.delta_max,
+                    cfg.window,
+                    cfg.delta_policy,
+                )))
+            }
+            _ => Box::new(HeuristicController::default()),
+        },
+    }
+}
+
+/// Simulate `cfg.steps` PPO steps of `pipeline`; returns a [`RunLog`] whose
+/// `wall_s` is simulated seconds.  The control loop is explicit: a
+/// [`Controller`] (heuristic or learned, per `cfg.controller`) observes
+/// each step's [`StepTelemetry`] and its actions become the next step's
+/// [`SimKnobs`].
+pub fn simulate(pipeline: Pipeline, cfg: &SimConfig) -> RunLog {
+    let mut ctl = build_controller(pipeline, cfg);
+    let mut core = SimCore::new(pipeline, cfg);
+    for _ in 0..cfg.steps {
+        let knobs = core.knobs_from(&ctl.actions());
+        core.step(&knobs);
+        ctl.observe(core.telemetry());
+    }
+    core.finish()
 }
 
 /// Framework-level generation efficiency relative to the setup baseline

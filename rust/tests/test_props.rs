@@ -4,9 +4,9 @@
 use std::sync::{Arc, Mutex};
 
 use oppo::coordinator::buffer::SeqBuffer;
-use oppo::coordinator::chunkctl::ChunkController;
-use oppo::coordinator::delta::{DeltaController, Policy};
 use oppo::coordinator::stage::{StageHandler, StagePool};
+use oppo::ctl::{ChunkController, Controller, DeltaController, HeuristicController, Policy};
+use oppo::ctl::{KnobBounds, KnobState, LearnedController, QPolicy, StepTelemetry};
 use oppo::coordinator::worker::{Pick, ReplicaPart, StreamChunk};
 use oppo::data::tasks::{Prompt, TaskKind};
 use oppo::model::sequence::SeqPhase;
@@ -596,6 +596,96 @@ fn delta_controller_converges_under_synthetic_reward_phases() {
             }
             if c.delta() != *lo {
                 return Err(format!("plateau ended at Δ={} (min {lo})", c.delta()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Unified-controller contract: ANY action sequence from EITHER
+/// `Controller` implementation — the composed heuristics or a learned
+/// Q-policy with arbitrary trained table contents — keeps every `Some`
+/// chunk verdict inside the compiled candidate set and every `Some` Δ
+/// inside `[delta_min, delta_max]`, under arbitrary telemetry streams.
+#[test]
+fn any_controller_keeps_knobs_inside_compiled_bounds() {
+    use oppo::ctl::qpolicy::{QAction, N_ACTIONS, N_STATES};
+
+    forall(
+        Config { cases: 120, ..Default::default() },
+        "controller-trait-bounds",
+        |rng| {
+            let n = rng.range_usize(2, 6);
+            let cands: Vec<usize> = (0..n).map(|i| 8 << i).collect();
+            let initial = *rng.choice(&cands);
+            let lo = rng.range_usize(0, 3);
+            let hi = lo + rng.range_usize(1, 10);
+            let init_delta = lo + rng.range_usize(0, hi - lo + 1);
+            let w = rng.range_usize(1, 5);
+            let steps = rng.range_usize(20, 120);
+            let learned = rng.range_usize(0, 2) == 1;
+            let seed = rng.next_u64();
+            (cands, initial, lo, hi, init_delta, w, steps, learned, seed)
+        },
+        |(cands, initial, lo, hi, init_delta, w, steps, learned, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mut ctl: Box<dyn Controller> = if *learned {
+                // arbitrary trained table contents: the verdicts must stay
+                // legal no matter what training wrote into the Q-table
+                let mut policy = QPolicy::new(*seed, cands.len());
+                for _ in 0..rng.range_usize(0, 400) {
+                    let s = rng.range_usize(0, N_STATES);
+                    let a = QAction::from_index(rng.range_usize(0, N_ACTIONS));
+                    policy.update(s, a, rng.normal(), rng.range_usize(0, N_STATES), 0.3, 0.9);
+                }
+                let bounds = KnobBounds {
+                    n_chunks: cands.len(),
+                    delta_min: *lo,
+                    delta_max: *hi,
+                    min_replicas: 1,
+                    max_replicas: 4,
+                };
+                let chunk_idx = cands.iter().position(|c| c == initial).unwrap();
+                let init = KnobState {
+                    chunk_idx,
+                    delta_level: oppo::ctl::level_of(*init_delta, &bounds),
+                    replicas: 1,
+                };
+                Box::new(LearnedController::new(policy, cands.clone(), bounds, init).unwrap())
+            } else {
+                let probes = rng.range_usize(1, 3);
+                let period = cands.len() * probes + rng.range_usize(0, 10);
+                let policy = *rng.choice(&[Policy::Eq4, Policy::Alg1Literal, Policy::Fixed]);
+                Box::new(HeuristicController::full(
+                    ChunkController::new(cands.clone(), *initial, period, probes, true),
+                    DeltaController::new(*init_delta, *lo, *hi, *w, policy),
+                ))
+            };
+            for step in 0..*steps {
+                let t = StepTelemetry {
+                    step: step as u64,
+                    wall_s: rng.range_f64(0.05, 3.0),
+                    mean_reward: rng.normal(),
+                    reward_trend: rng.normal(),
+                    util: rng.range_f64(0.0, 1.0),
+                    lane_idle_frac: rng.range_f64(0.0, 1.0),
+                    queue_depth: rng.range_usize(0, 50),
+                    queue_dropped: rng.range_usize(0, 3),
+                    ..Default::default()
+                };
+                ctl.observe(&t);
+                let a = ctl.actions();
+                if let Some(c) = a.chunk {
+                    if !cands.contains(&c) {
+                        return Err(format!("chunk {c} has no compiled executable"));
+                    }
+                }
+                match a.delta {
+                    Some(d) if d < *lo || d > *hi => {
+                        return Err(format!("delta {d} escaped [{lo}, {hi}]"));
+                    }
+                    _ => {}
+                }
             }
             Ok(())
         },

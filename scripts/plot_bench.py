@@ -288,6 +288,47 @@ def check_latest(snaps):
                     errors.append(f"{path}: transport.{k} key missing")
                 elif tr[k] is not None and not isinstance(tr[k], (int, float)):
                     errors.append(f"{path}: transport.{k} neither null nor numeric")
+    if pr >= 10:
+        # learned-controller era: the snapshot must price the frozen
+        # Q-policy (trained at the CI-pinned episodes/seed) against the
+        # heuristic controllers on both benchmark presets, and the learned
+        # arm must match or beat heuristic step throughput on each — the
+        # same floor the CI train-smoke asserts on a fresh training run.
+        lc = doc.get("learned_controller")
+        if not isinstance(lc, dict):
+            errors.append(f"{path}: learned_controller block missing")
+        else:
+            for k in ("episodes", "seed", "visited_cells"):
+                if not isinstance(lc.get(k), (int, float)):
+                    errors.append(f"{path}: learned_controller.{k} missing/non-numeric")
+            art = lc.get("artifact")
+            if not isinstance(art, dict) or not isinstance(art.get("version"), (int, float)):
+                errors.append(f"{path}: learned_controller.artifact missing/invalid")
+            arms = lc.get("arms")
+            if not isinstance(arms, list):
+                errors.append(f"{path}: learned_controller.arms missing")
+            else:
+                seen = set()
+                for arm in arms:
+                    name = arm.get("preset", "?")
+                    seen.add(name)
+                    for k in ("heuristic_steps_per_s", "learned_steps_per_s", "speedup"):
+                        if not isinstance(arm.get(k), (int, float)):
+                            errors.append(
+                                f"{path}: learned_controller arm {name}: {k} "
+                                f"missing/non-numeric"
+                            )
+                    sp = arm.get("speedup")
+                    if isinstance(sp, (int, float)) and sp < 1.0:
+                        errors.append(
+                            f"{path}: learned controller loses to the heuristic on "
+                            f"{name} (speedup {sp:.4f} < 1.0)"
+                        )
+                for want in ("stackex_7b_h200", "traffic_7b_h200"):
+                    if want not in seen:
+                        errors.append(
+                            f"{path}: learned_controller.arms missing preset {want}"
+                        )
     return errors
 
 
